@@ -1,0 +1,155 @@
+"""Framework-side DARP/SARP benchmarks (real wall-clock on CPU).
+
+bench_darp_ckpt    : trainer step-time overhead — synchronous stop-the-world
+                     checkpointing vs DARP write-window flushes.
+bench_serving      : serving engine policies (all_bank / round_robin / darp):
+                     throughput, forced stalls, maintenance smoothness.
+bench_sarp_bytes   : derived HBM traffic of fused vs serial paged attention
+                     (the TPU-relevant SARP metric) + numerics check.
+bench_kernel_micro : us/call of jitted reference paths on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import get_arch
+from repro.models.dims import make_dims
+
+
+def _reduced(name="qwen2.5-3b"):
+    cfg = get_arch(name).reduced()
+    dims = make_dims(cfg, tp=1, param_dtype=jnp.float32,
+                     compute_dtype=jnp.float32)
+    return cfg, dims
+
+
+def bench_darp_ckpt(steps: int = 40, interval: int = 8) -> dict:
+    import tempfile
+    from repro.checkpoint import CheckpointConfig, CheckpointEngine
+    from repro.core.scheduler import SchedulerPolicy
+    from repro.data import SyntheticLMData
+    from repro.optim import OptConfig
+    from repro.train import Trainer, TrainerConfig, make_state, make_train_step
+
+    cfg, dims = _reduced()
+    ocfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    step_fn = make_train_step(cfg, dims, ocfg)
+    data = SyntheticLMData(cfg.vocab_size, batch=8, seq=64, seed=0)
+    out = {}
+    for policy, sync in (("darp", False), ("all_bank", True), (None, None)):
+        state = make_state(jax.random.PRNGKey(0), cfg, dims, ocfg)
+        with tempfile.TemporaryDirectory() as d:
+            ck = None
+            if policy is not None:
+                pol = (SchedulerPolicy.ALL_BANK if sync
+                       else SchedulerPolicy.DARP)
+                ck = CheckpointConfig(directory=d, interval=interval,
+                                      n_banks=8, policy=pol)
+            tr = Trainer(TrainerConfig(total_steps=steps, ckpt=ck,
+                                       log_every=1000),
+                         step_fn, state, iter(data))
+            t0 = time.perf_counter()
+            tr.run()
+            wall = time.perf_counter() - t0
+            times = np.array(tr.step_times[2:])
+            out[policy or "no_ckpt"] = {
+                "wall_s": round(wall, 2),
+                "mean_step_ms": round(float(times.mean() * 1e3), 2),
+                "p99_step_ms": round(float(np.percentile(times, 99) * 1e3), 2),
+                "flushes": tr.engine.stats["flushes"] if tr.engine else 0,
+            }
+    base = out["no_ckpt"]["mean_step_ms"]
+    for k in ("darp", "all_bank"):
+        out[k]["overhead_pct"] = round(
+            100 * (out[k]["mean_step_ms"] / base - 1), 1)
+    return out
+
+
+def bench_serving(n_requests: int = 6, max_new: int = 24) -> dict:
+    from repro.core.scheduler import SchedulerPolicy
+    from repro.kvcache import PagedKVConfig
+    from repro.models.api import get_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg, dims = _reduced("qwen2-0.5b")
+    mod = get_model(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg, dims)
+    out = {}
+    for pol in (SchedulerPolicy.ALL_BANK, SchedulerPolicy.ROUND_ROBIN,
+                SchedulerPolicy.DARP):
+        kv_cfg = PagedKVConfig(
+            n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
+            head_dim=cfg.attention.head_dim, page_size=4, n_pages=128,
+            n_staging=10, n_groups=4, max_seqs=8)
+        scfg = ServeConfig(max_batch=3, policy=pol,
+                           refresh_interval=3.0, max_compress_per_round=1,
+                           force_threshold=0.99 if pol == SchedulerPolicy.ALL_BANK else 0.8)
+        eng = ServingEngine(params, cfg, dims, kv_cfg, scfg)
+        for i in range(n_requests):
+            eng.submit(Request(prompt=[1 + i, 2, 3, 4], max_new=max_new,
+                               rid=i))
+        t0 = time.perf_counter()
+        eng.run_until_done(max_rounds=600)
+        wall = time.perf_counter() - t0
+        out[pol.value] = {
+            "wall_s": round(wall, 2),
+            "tokens": eng.stats["tokens"],
+            "tok_per_s": round(eng.stats["tokens"] / wall, 1),
+            "forced_stalls": eng.stats["stall_rounds"],
+            "compressions": eng.cache.stats["compressions"]
+                            + eng.cache.stats["forced"],
+        }
+    return out
+
+
+def bench_sarp_bytes(seq_len: int = 32768, page: int = 64, hkv: int = 8,
+                     d: int = 128) -> dict:
+    """Derived per-token HBM traffic for the decode KV read path."""
+    n_pages = seq_len // page
+    kv_elems = 2 * n_pages * page * hkv * d          # k+v
+    fused = kv_elems * 1                             # int8 read once
+    serial = kv_elems * (1 + 2 + 2)                  # read i8, write+read bf16
+    bf16_unquant = kv_elems * 2                      # bf16 cache, no quant
+    return {
+        "fused_GB": fused / 1e9,
+        "serial_GB": serial / 1e9,
+        "bf16_unquantized_GB": bf16_unquant / 1e9,
+        "serial_over_fused": serial / fused,
+        "bf16_over_fused": bf16_unquant / fused,
+    }
+
+
+def bench_kernel_micro() -> dict:
+    from repro.kernels import ref
+
+    rs = np.random.RandomState(0)
+    out = {}
+
+    def timeit(fn, *args, n=20):
+        fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+            else fn(*args).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = fn(*args)
+            (r[0] if isinstance(r, tuple) else r).block_until_ready()
+        return (time.perf_counter() - t0) / n * 1e6
+
+    q = jnp.asarray(rs.randn(8, 512, 64), jnp.float32)
+    flash = jax.jit(lambda q_, k_, v_: ref.flash_attention(q_, k_, v_))
+    out["flash_ref_us"] = round(timeit(flash, q, q, q), 1)
+
+    pages = jnp.asarray(rs.randn(64, 64, 8, 64), jnp.float32)
+    quant = jax.jit(ref.kv_quant)
+    out["kv_quant_us"] = round(timeit(quant, pages), 1)
+
+    x = jnp.asarray(rs.randn(2, 512, 8, 64), jnp.float32)
+    dt = jnp.asarray(np.abs(rs.randn(2, 512, 8)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(rs.randn(8)) - 0.1, jnp.float32)
+    Bi = jnp.asarray(rs.randn(2, 512, 64), jnp.float32)
+    ssd = jax.jit(lambda *a: ref.mamba2_ssd(*a, chunk=128))
+    out["ssd_ref_us"] = round(timeit(ssd, x, dt, A, Bi, Bi), 1)
+    return out

@@ -1,0 +1,78 @@
+"""Paper-figure reproductions from the DRAM simulator.
+
+fig1: performance loss of REF_ab / REF_pb vs the no-refresh ideal across
+      densities (paper Figure 1; claims C1, C2).
+fig2: service-timeline microbenchmark — a read arriving during a refresh
+      to another subarray of the SAME bank (paper Figure 2; SARP mechanism).
+fig3: DSARP (and components) performance + energy vs baselines across
+      densities (paper Figure 3; claims C3, C4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.refresh import make_workload, run_policy
+from repro.core.refresh.sim import DramSim, POLICIES
+from repro.core.refresh.timing import timing_for_density
+from repro.core.refresh.workload import Workload
+
+DENSITIES = (8, 16, 32)
+WORKLOADS = ("low_mlp", "mixed", "write_heavy")
+SEEDS = (1, 2)
+
+
+def _avg_ws(policy: str, density: int, reqs: int) -> float:
+    vals = []
+    for w in WORKLOADS:
+        for s in SEEDS:
+            wl = make_workload(w, reqs_per_core=reqs, seed=s)
+            ideal = run_policy("ideal", density, wl)
+            r = run_policy(policy, density, wl)
+            vals.append(r.weighted_speedup_vs(ideal))
+    return float(np.mean(vals))
+
+
+def fig1(reqs: int = 1200) -> dict:
+    out = {}
+    for d in DENSITIES:
+        out[d] = {p: 1.0 - _avg_ws(p, d, reqs) for p in ("ref_ab", "ref_pb")}
+    return out
+
+
+def fig2() -> dict:
+    """Single focused scenario: bank 0 starts a refresh; a read to bank 0,
+    different subarray, arrives mid-refresh. REF_pb blocks it; SARP serves
+    it concurrently."""
+    out = {}
+    for pol in ("ref_pb", "sarp_pb"):
+        wl = Workload("timeline", n_cores=1, mlp=1, think_ns=400.0,
+                      row_hit_rate=0.0, write_ratio=0.0, reqs_per_core=200,
+                      seed=9)
+        r = run_policy(pol, 32, wl)
+        out[pol] = {"avg_read_ns": r.avg_read_latency,
+                    "p99_read_ns": r.p99_read_latency}
+    return out
+
+
+def fig3(reqs: int = 1200) -> dict:
+    out = {}
+    for d in DENSITIES:
+        row = {}
+        ref_ab_e = None
+        for p in ("ref_ab", "ref_pb", "darp", "sarp_pb", "dsarp", "ideal"):
+            ws, es = [], []
+            for w in WORKLOADS:
+                for s in SEEDS:
+                    wl = make_workload(w, reqs_per_core=reqs, seed=s)
+                    ideal = run_policy("ideal", d, wl)
+                    r = run_policy(p, d, wl)
+                    ws.append(r.weighted_speedup_vs(ideal))
+                    es.append(r.energy)
+            row[p] = {"ws": float(np.mean(ws)), "energy": float(np.mean(es))}
+            if p == "ref_ab":
+                ref_ab_e = row[p]["energy"]
+        for p in row:
+            row[p]["energy_vs_refab"] = row[p]["energy"] / ref_ab_e
+            row[p]["improvement_vs_refab"] = row[p]["ws"] / row["ref_ab"]["ws"] - 1
+        out[d] = row
+    return out

@@ -1,0 +1,63 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(results_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs, mesh="pod16x16") -> str:
+    rows = ["| arch | shape | peak GB/dev | AG | AR | RS | A2A | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or not r.get("ok"):
+            continue
+        cc = r["hlo"]["collective_counts"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['memory']['peak_gb']:.2f} | "
+            f"{cc.get('all-gather', 0):.0f} | {cc.get('all-reduce', 0):.0f} | "
+            f"{cc.get('reduce-scatter', 0):.0f} | {cc.get('all-to-all', 0):.0f} | "
+            f"{r['compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="pod16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant "
+            "| useful-FLOP ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or not r.get("ok"):
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | {t['dominant']} | "
+            f"{r['useful_flop_ratio']:.3f} | {100*r['roofline_fraction']:.1f}% |")
+    return "\n".join(rows)
+
+
+def failures(recs) -> list[str]:
+    return [f"{r['arch']} {r['shape']} {r['mesh']}: {r.get('error','?')[:120]}"
+            for r in recs if not r.get("ok")]
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## Dry-run (single-pod 16x16)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))
+    print("\n## Multi-pod compile status\n")
+    mp = [r for r in recs if r["mesh"] == "pod2x16x16"]
+    print(f"{sum(r['ok'] for r in mp)}/{len(mp)} cells compiled")
+    f = failures(recs)
+    if f:
+        print("\nFAILURES:\n" + "\n".join(f))

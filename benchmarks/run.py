@@ -1,0 +1,82 @@
+"""Benchmark harness: one entry per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV (per the repo convention); detailed
+dicts go to results/bench/*.json.
+
+  fig1  paper Fig.1: perf loss of REF_ab/REF_pb vs ideal across densities
+  fig2  paper Fig.2: SARP service-timeline (read behind refresh)
+  fig3  paper Fig.3: DSARP perf+energy vs baselines
+  darp_ckpt      framework DARP: checkpoint flush scheduling overhead
+  serving        framework DARP: serving maintenance policies
+  sarp_bytes     framework SARP: fused vs serial paged-attn HBM traffic
+  kernel_micro   CPU reference micro-latencies
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def _emit(name: str, us: float, derived: str, payload) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    reqs = 400 if fast else 1200
+
+    from benchmarks import fig_refresh as FR
+    from benchmarks import bench_framework as BF
+
+    t0 = time.perf_counter()
+    f1 = FR.fig1(reqs=reqs)
+    _emit("fig1_refresh_loss", (time.perf_counter() - t0) * 1e6,
+          f"refpb_loss_32gb={f1[32]['ref_pb']:.3f};"
+          f"refab_loss_32gb={f1[32]['ref_ab']:.3f}", f1)
+
+    t0 = time.perf_counter()
+    f2 = FR.fig2()
+    _emit("fig2_sarp_timeline", (time.perf_counter() - t0) * 1e6,
+          f"refpb_p99={f2['ref_pb']['p99_read_ns']:.0f}ns;"
+          f"sarp_p99={f2['sarp_pb']['p99_read_ns']:.0f}ns", f2)
+
+    t0 = time.perf_counter()
+    f3 = FR.fig3(reqs=reqs)
+    _emit("fig3_dsarp", (time.perf_counter() - t0) * 1e6,
+          f"dsarp_impr_32gb={f3[32]['dsarp']['improvement_vs_refab']:.3f};"
+          f"dsarp_energy_vs_refab={f3[32]['dsarp']['energy_vs_refab']:.3f}",
+          f3)
+
+    t0 = time.perf_counter()
+    ck = BF.bench_darp_ckpt(steps=20 if fast else 40)
+    _emit("darp_ckpt", ck["darp"]["mean_step_ms"] * 1e3,
+          f"darp_overhead={ck['darp']['overhead_pct']}%;"
+          f"sync_overhead={ck['all_bank']['overhead_pct']}%", ck)
+
+    t0 = time.perf_counter()
+    sv = BF.bench_serving(n_requests=4 if fast else 6,
+                          max_new=12 if fast else 24)
+    _emit("serving_policies", (time.perf_counter() - t0) * 1e6,
+          f"darp_stalls={sv['darp']['forced_stalls']};"
+          f"allbank_stalls={sv['all_bank']['forced_stalls']};"
+          f"darp_tps={sv['darp']['tok_per_s']}", sv)
+
+    sb = BF.bench_sarp_bytes()
+    _emit("sarp_decode_bytes", 0.0,
+          f"serial_over_fused={sb['serial_over_fused']:.1f}x;"
+          f"bf16_over_fused={sb['bf16_over_fused']:.1f}x", sb)
+
+    km = BF.bench_kernel_micro()
+    _emit("kernel_micro", km["flash_ref_us"],
+          f"ssd={km['ssd_ref_us']}us;quant={km['kv_quant_us']}us", km)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Reproduce the paper's headline numbers from the DRAM simulator:
+Figure 1 (refresh loss vs density) and Figure 3 (DSARP vs baselines).
+
+  PYTHONPATH=src:. python examples/dram_sweep.py [--fast]
+"""
+import sys
+
+from benchmarks import fig_refresh as FR
+
+
+def main():
+    reqs = 400 if "--fast" in sys.argv else 1500
+    print("== Figure 1: performance loss vs ideal (no refresh) ==")
+    f1 = FR.fig1(reqs=reqs)
+    for d, row in f1.items():
+        print(f"  {d:2d}Gb: REF_ab loss={row['ref_ab']*100:5.1f}%  "
+              f"REF_pb loss={row['ref_pb']*100:5.1f}%")
+    print("== Figure 2: SARP service timeline (read behind refresh) ==")
+    f2 = FR.fig2()
+    for p, row in f2.items():
+        print(f"  {p:8s} avg={row['avg_read_ns']:6.1f}ns "
+              f"p99={row['p99_read_ns']:7.1f}ns")
+    print("== Figure 3: improvement over REF_ab / energy ==")
+    f3 = FR.fig3(reqs=reqs)
+    for d, row in f3.items():
+        print(f"  {d:2d}Gb: " + "  ".join(
+            f"{p}:{row[p]['improvement_vs_refab']*100:+.1f}%"
+            for p in ("ref_pb", "darp", "sarp_pb", "dsarp")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.engine import CheckpointEngine, CheckpointConfig, latest_step
+
+__all__ = ["CheckpointEngine", "CheckpointConfig", "latest_step"]

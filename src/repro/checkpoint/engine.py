@@ -1,0 +1,251 @@
+"""Asynchronous sharded checkpointing with DARP-scheduled flush windows.
+
+Epoch model (consistency): every `interval` steps a checkpoint *epoch*
+snapshots the full train state to host staging (cheap device_get). The
+expensive disk flushes of the N shard-banks are then *scheduled* across
+subsequent steps' write windows by the DARP scheduler — out-of-order,
+budget-bounded (a bank's flush may be postponed at most `budget`
+sub-windows; preemption pulls everything in immediately = the paper's
+pull-in path). A checkpoint becomes restorable when its manifest lists all
+banks flushed + checksummed (atomic rename).
+
+Fault-tolerance properties:
+  * partial writes never corrupt: manifest written last, crc32 verified,
+  * restore picks the newest COMPLETE epoch,
+  * elastic: arrays are stored unsharded-logical; restore re-shards onto
+    whatever mesh is active (device_put with the current NamedSharding),
+  * preemption: `flush_all_now()` = pull-in all pending maintenance.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.common.treeutil import flat_paths
+from repro.core.scheduler import DarpScheduler, SchedulerPolicy
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    directory: str
+    interval: int = 50           # steps per checkpoint epoch
+    n_banks: int = 8             # shard-banks flushed independently
+    budget: int = 8              # postpone/pull-in budget (paper)
+    policy: SchedulerPolicy = SchedulerPolicy.DARP
+    keep: int = 2
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+class CheckpointEngine:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+        # one maintenance window per bank per epoch -> interval/n_banks steps
+        self.sched = DarpScheduler(
+            cfg.n_banks, max(1.0, cfg.interval / cfg.n_banks),
+            budget=cfg.budget, policy=cfg.policy)
+        self.pool = ThreadPoolExecutor(max_workers=2)
+        self._staged: Optional[dict] = None   # epoch snapshot (numpy leaves)
+        self._staged_step: Optional[int] = None
+        self._flushed_banks: set = set()
+        self._pending: list = []
+        self._lock = threading.Lock()
+        self.stats = {"epochs": 0, "flushes": 0, "forced": 0, "snap_ms": 0.0,
+                      "flush_ms": 0.0}
+
+    # ------------------------------------------------------------ banks
+    def _bank_split(self, leaves: list) -> list[list[int]]:
+        banks = [[] for _ in range(self.cfg.n_banks)]
+        for i in range(len(leaves)):
+            banks[i % self.cfg.n_banks].append(i)
+        return banks
+
+    # ------------------------------------------------------------ public
+    def maybe_snapshot(self, step: int, state: dict) -> bool:
+        """Call every step BEFORE the write window; snapshots on epoch
+        boundaries. Returns True if a snapshot was taken."""
+        if step % self.cfg.interval != 0:
+            return False
+        return self.force_snapshot(step, state)
+
+    def force_snapshot(self, step: int, state: dict) -> bool:
+        t0 = time.perf_counter()
+        leaves, treedef = jax.tree.flatten(state)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        with self._lock:
+            # a lagging previous epoch is force-flushed first (budget push)
+            if self._staged is not None and self._flushed_banks != set(
+                    range(self.cfg.n_banks)):
+                self._flush_remaining(forced=True)
+            self._staged = {"leaves": host, "treedef": treedef,
+                            "paths": flat_paths(state)}
+            self._staged_step = step
+            self._flushed_banks = set()
+        self.stats["epochs"] += 1
+        self.stats["snap_ms"] += (time.perf_counter() - t0) * 1e3
+        return True
+
+    def write_window(self, step: int, busy_banks: Optional[set] = None,
+                     max_issues: int = 1) -> list[int]:
+        """Call inside every step's write phase: DARP decides which banks
+        flush now. busy_banks: banks with pending demand (skipped unless
+        forced)."""
+        with self._lock:
+            if self._staged is None:
+                return []
+            remaining = set(range(self.cfg.n_banks)) - self._flushed_banks
+            if not remaining:
+                return []
+            demand = [0] * self.cfg.n_banks
+            for b in range(self.cfg.n_banks):
+                if busy_banks and b in busy_banks:
+                    demand[b] = 1
+                if b in self._flushed_banks:
+                    demand[b] = 99  # nothing to do; make unattractive
+            picks = self.sched.select(float(step), demand=demand,
+                                      write_window=True, max_issues=max_issues)
+            picks = [b for b in picks if b in remaining]
+            for b in picks:
+                self._flush_bank_async(b)
+        return picks
+
+    def flush_all_now(self) -> None:
+        """Preemption path: pull in every pending flush immediately."""
+        with self._lock:
+            self._flush_remaining(forced=True)
+        self.pool.shutdown(wait=True)
+        self.pool = ThreadPoolExecutor(max_workers=2)
+
+    # ---------------------------------------------------------- internals
+    # NOTE: _flushed_banks mutations happen on the caller thread (under
+    # self._lock); pool threads only receive immutable (staged, step, bank).
+
+    def _flush_remaining(self, forced: bool = False) -> None:
+        for b in sorted(set(range(self.cfg.n_banks)) - self._flushed_banks):
+            self._flushed_banks.add(b)
+            self._flush_bank(self._staged, self._staged_step, b, forced=forced)
+
+    def _flush_bank_async(self, b: int) -> None:
+        self._flushed_banks.add(b)
+        self._pending.append(
+            self.pool.submit(self._flush_bank, self._staged,
+                             self._staged_step, b))
+
+    def _flush_bank(self, staged: dict, step: int, b: int,
+                    forced: bool = False) -> None:
+        t0 = time.perf_counter()
+        leaves = staged["leaves"]
+        banks = self._bank_split(leaves)
+        ep_dir = os.path.join(self.cfg.directory, f"step_{step:08d}")
+        os.makedirs(ep_dir, exist_ok=True)
+        arrs = {str(i): leaves[i] for i in banks[b]}
+        path = os.path.join(ep_dir, f"bank_{b}.npz")
+        tmp = path + f".tmp{b}"
+        with open(tmp, "wb") as fh:   # file handle: savez won't rename it
+            np.savez(fh, **arrs)
+        os.replace(tmp, path)
+        meta = {str(i): _crc(leaves[i]) for i in banks[b]}
+        with open(os.path.join(ep_dir, f"bank_{b}.crc.json"), "w") as f:
+            json.dump(meta, f)
+        self.stats["flushes"] += 1
+        if forced:
+            self.stats["forced"] += 1
+        self.stats["flush_ms"] += (time.perf_counter() - t0) * 1e3
+        done = all(os.path.exists(os.path.join(ep_dir, f"bank_{x}.npz"))
+                   for x in range(self.cfg.n_banks))
+        if done and not os.path.exists(os.path.join(ep_dir, "manifest.json")):
+            self._write_manifest(ep_dir, step, staged)
+
+    def _write_manifest(self, ep_dir: str, step: int, staged: dict) -> None:
+        manifest = {
+            "step": step,
+            "n_banks": self.cfg.n_banks,
+            "n_leaves": len(staged["leaves"]),
+            "paths": staged["paths"],
+            "complete": True,
+        }
+        tmp = os.path.join(ep_dir, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, os.path.join(ep_dir, "manifest.json"))
+        self._gc()
+
+    def _gc(self) -> None:
+        eps = sorted(d for d in os.listdir(self.cfg.directory)
+                     if d.startswith("step_"))
+        complete = [d for d in eps if os.path.exists(
+            os.path.join(self.cfg.directory, d, "manifest.json"))]
+        for d in complete[:-self.cfg.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.cfg.directory, d),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def wait(self) -> None:
+        for f in self._pending:
+            f.result()
+        self._pending = []
+
+    def restore(self, template: dict, shardings=None) -> Optional[tuple]:
+        """Restore newest complete epoch into `template`'s structure.
+        Returns (state, step) or None. Verifies checksums; re-shards onto
+        `shardings` (pytree of NamedSharding or None)."""
+        step = latest_step(self.cfg.directory)
+        if step is None:
+            return None
+        ep_dir = os.path.join(self.cfg.directory, f"step_{step:08d}")
+        with open(os.path.join(ep_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        n = manifest["n_leaves"]
+        leaves: list = [None] * n
+        for b in range(manifest["n_banks"]):
+            with np.load(os.path.join(ep_dir, f"bank_{b}.npz")) as z:
+                with open(os.path.join(ep_dir, f"bank_{b}.crc.json")) as f:
+                    crcs = json.load(f)
+                for key in z.files:
+                    arr = z[key]
+                    if _crc(arr) != crcs[key]:
+                        raise IOError(f"checksum mismatch leaf {key} bank {b}")
+                    leaves[int(key)] = arr
+        assert all(x is not None for x in leaves), "missing leaves"
+        t_leaves, treedef = jax.tree.flatten(template)
+        assert len(t_leaves) == n, "template/checkpoint structure mismatch"
+        shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+                       if shardings is not None else [None] * n)
+        out = []
+        for arr, tmpl, shd_ in zip(leaves, t_leaves, shard_leaves):
+            a = np.asarray(arr).astype(tmpl.dtype)
+            out.append(jax.device_put(a, shd_) if shd_ is not None
+                       else jax.device_put(a))
+        return jax.tree.unflatten(treedef, out), step
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for d in os.listdir(directory):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(directory, d, "manifest.json")):
+            best = max(best or -1, int(d.split("_")[1]))
+    return best

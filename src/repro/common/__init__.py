@@ -1,0 +1,28 @@
+from repro.common.config import (
+    ArchConfig,
+    AttentionConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPE_SETS,
+    register_arch,
+    get_arch,
+    list_archs,
+    applicable_shapes,
+)
+from repro.common.treeutil import tree_bytes, tree_param_count
+
+__all__ = [
+    "ArchConfig",
+    "AttentionConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "SHAPE_SETS",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+    "applicable_shapes",
+    "tree_bytes",
+    "tree_param_count",
+]

@@ -1,0 +1,44 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def tree_allfinite(tree) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def flat_paths(tree) -> list[str]:
+    """Stable '/'-joined key paths for every leaf (checkpoint naming)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, _leaf in flat:
+        out.append("/".join(_path_str(p) for p in path))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)

@@ -1,0 +1,6 @@
+from repro.core.refresh.timing import DramTiming, DENSITIES
+from repro.core.refresh.workload import Workload, make_workload
+from repro.core.refresh.sim import DramSim, SimResult, POLICIES, run_policy
+
+__all__ = ["DramTiming", "DENSITIES", "Workload", "make_workload",
+           "DramSim", "SimResult", "POLICIES", "run_policy"]

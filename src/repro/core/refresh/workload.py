@@ -1,0 +1,63 @@
+"""Closed-loop multi-core workload generator for the DRAM simulator.
+
+Each core is a limited-MLP request engine: up to `mlp` outstanding memory
+requests; after a request completes, the core 'computes' for think_ns before
+issuing the next. Address streams have tunable row locality and write ratio,
+deterministic per seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    n_cores: int
+    mlp: int                      # max outstanding requests per core
+    think_ns: float               # mean compute gap between requests
+    row_hit_rate: float
+    write_ratio: float
+    reqs_per_core: int
+    seed: int = 0
+
+    def generate(self, n_banks: int, n_subarrays: int, n_rows: int = 4096):
+        """Per-core request streams: structured arrays of
+        (is_write, bank, row, subarray, think_ns)."""
+        rs = np.random.RandomState(self.seed)
+        streams = []
+        for c in range(self.n_cores):
+            n = self.reqs_per_core
+            is_write = rs.rand(n) < self.write_ratio
+            bank = rs.randint(0, n_banks, n)
+            row = rs.randint(0, n_rows, n)
+            # enforce row locality: with prob row_hit_rate reuse previous
+            # (bank, row) of this core
+            reuse = rs.rand(n) < self.row_hit_rate
+            for i in range(1, n):
+                if reuse[i]:
+                    bank[i] = bank[i - 1]
+                    row[i] = row[i - 1]
+            subarray = row % n_subarrays
+            think = rs.exponential(self.think_ns, n)
+            streams.append(dict(is_write=is_write, bank=bank, row=row,
+                                subarray=subarray, think=think))
+        return streams
+
+
+def make_workload(name: str = "mixed", n_cores: int = 8, reqs_per_core: int = 3000,
+                  seed: int = 0) -> Workload:
+    presets = {
+        # memory-intensive, medium locality (the paper's high-MPKI mixes)
+        "mixed": dict(mlp=3, think_ns=15.0, row_hit_rate=0.50, write_ratio=0.30),
+        "read_heavy": dict(mlp=2, think_ns=10.0, row_hit_rate=0.60, write_ratio=0.10),
+        "write_heavy": dict(mlp=4, think_ns=15.0, row_hit_rate=0.50, write_ratio=0.45),
+        # latency-critical: core stalls on every miss (highest refresh impact)
+        "low_mlp": dict(mlp=1, think_ns=5.0, row_hit_rate=0.40, write_ratio=0.20),
+        # bandwidth-bound streaming
+        "streaming": dict(mlp=8, think_ns=5.0, row_hit_rate=0.85, write_ratio=0.33),
+    }
+    return Workload(name=name, n_cores=n_cores, reqs_per_core=reqs_per_core,
+                    seed=seed, **presets[name])

@@ -1,0 +1,3 @@
+from repro.core.scheduler.darp import DarpScheduler, SchedulerPolicy
+
+__all__ = ["DarpScheduler", "SchedulerPolicy"]

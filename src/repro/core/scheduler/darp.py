@@ -1,0 +1,159 @@
+"""DARP as a framework feature: the paper's refresh-scheduling algorithm
+abstracted over generic maintenance "banks".
+
+A *bank* is any resource that needs periodic maintenance:
+  * training   : a parameter/optimizer shard whose checkpoint snapshot must
+                 be flushed every `interval` steps,
+  * serving    : a KV-cache page-group whose staged bf16 pages must be
+                 compressed (re-quantized) every `interval` decode rounds.
+
+The scheduler reproduces, exactly, the paper's mechanism:
+  * out-of-order selection: refresh an *idle* bank (no pending demand)
+    instead of the round-robin one,
+  * write-window parallelization (WRP): during a write phase, pull
+    maintenance in (up to `budget` early) on banks with no demand,
+  * the JEDEC-style postpone/pull-in budget: for every bank, at all times,
+      -budget <= due(now) - issued <= budget,
+    with forced maintenance when the postpone budget is exhausted —
+    the data-integrity guarantee.
+
+`DramSim` (core/refresh/sim.py) is the timing-accurate version of the same
+policy; property tests check both enforce the identical budget invariant.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+class SchedulerPolicy(str, enum.Enum):
+    ALL_BANK = "all_bank"        # stop-the-world maintenance (REF_ab analogue)
+    ROUND_ROBIN = "round_robin"  # strict in-order per-bank (REF_pb analogue)
+    DARP_OOO = "darp_ooo"        # out-of-order only
+    DARP = "darp"                # out-of-order + write-window parallelization
+
+
+@dataclass
+class BankState:
+    issued: int = 0
+    last_issue_time: float = -1.0
+
+
+class DarpScheduler:
+    """Decide *which* banks get maintenance *now*. Time is caller-defined
+    (steps, rounds, seconds) and strictly non-decreasing across calls."""
+
+    def __init__(self, n_banks: int, interval: float, *,
+                 budget: int = 8, policy: SchedulerPolicy = SchedulerPolicy.DARP,
+                 stagger: bool = True):
+        assert n_banks >= 1 and interval > 0 and budget >= 1
+        self.n_banks = n_banks
+        self.interval = float(interval)
+        self.budget = budget
+        self.policy = SchedulerPolicy(policy)
+        self.banks = [BankState() for _ in range(n_banks)]
+        # stagger phases like LPDDR's tREFI_pb so maintenance spreads out
+        self.phase = [(i * self.interval / n_banks if stagger else 0.0)
+                      for i in range(n_banks)]
+        self._rr_next = 0
+        self._last_now = float("-inf")
+
+    # ------------------------------------------------------------- queries
+    def due(self, b: int, now: float) -> int:
+        if now < self.phase[b]:
+            return 0
+        return int((now - self.phase[b]) // self.interval) + 1
+
+    def lag(self, b: int, now: float) -> int:
+        """due - issued; >0 means owed, <0 means pulled in."""
+        return self.due(b, now) - self.banks[b].issued
+
+    def overdue(self, now: float) -> list[int]:
+        return [b for b in range(self.n_banks) if self.lag(b, now) > 0]
+
+    # -------------------------------------------------------------- select
+    def select(self, now: float, *, demand: Sequence[int],
+               write_window: bool = False, max_issues: int = 1) -> list[int]:
+        """Pick up to `max_issues` banks to maintain at `now`.
+
+        demand[b]: pending demand work on bank b (queue depth). The caller
+        MUST perform the maintenance for every returned bank (they are
+        recorded as issued).
+        """
+        assert len(demand) == self.n_banks
+        assert now >= self._last_now, "time must be monotonic"
+        self._last_now = now
+        picks: list[int] = []
+
+        def issue(b: int):
+            self.banks[b].issued += 1
+            self.banks[b].last_issue_time = now
+            picks.append(b)
+
+        # 1. forced maintenance: postpone budget exhausted (all policies) —
+        #    the data-integrity guarantee overrides demand AND max_issues.
+        for b in range(self.n_banks):
+            if self.lag(b, now) >= self.budget:
+                issue(b)
+
+        if self.policy == SchedulerPolicy.ALL_BANK:
+            # stop-the-world: when anything is due, sweep EVERY owed bank
+            # (max_issues does not apply — that is the point of REF_ab)
+            if any(self.lag(b, now) > 0 for b in range(self.n_banks)):
+                for b in range(self.n_banks):
+                    if self.lag(b, now) > 0 and b not in picks:
+                        issue(b)
+            return picks
+        if len(picks) >= max_issues:
+            return picks
+
+        if self.policy == SchedulerPolicy.ROUND_ROBIN:
+            while len(picks) < max_issues:
+                b = self._rr_next % self.n_banks
+                if self.lag(b, now) > 0:
+                    issue(b)
+                    self._rr_next += 1
+                else:
+                    break
+            return picks
+
+        # ---- DARP variants
+        if self.policy == SchedulerPolicy.DARP and write_window:
+            # WRP: pull in maintenance on zero-demand banks (down to -budget)
+            cands = sorted(
+                (b for b in range(self.n_banks)
+                 if demand[b] == 0 and self.lag(b, now) > -self.budget
+                 and b not in picks),
+                key=lambda b: -self.lag(b, now))
+            for b in cands:
+                if len(picks) >= max_issues:
+                    return picks
+                issue(b)
+            return picks
+
+        # out-of-order: serve owed banks that are currently idle, most-owed
+        # first; never touch a bank with pending demand unless forced above.
+        cands = sorted(
+            (b for b in range(self.n_banks)
+             if demand[b] == 0 and self.lag(b, now) > 0 and b not in picks),
+            key=lambda b: -self.lag(b, now))
+        for b in cands:
+            if len(picks) >= max_issues:
+                break
+            issue(b)
+        return picks
+
+    # ------------------------------------------------------------ invariant
+    def check_invariant(self, now: float) -> None:
+        """JEDEC budget invariant; raises on violation."""
+        for b in range(self.n_banks):
+            lag = self.lag(b, now)
+            if not (-self.budget <= lag <= self.budget):
+                raise AssertionError(
+                    f"bank {b}: lag {lag} outside ±{self.budget} at t={now}")
+
+    def snapshot_age(self, b: int, now: float) -> float:
+        """Time since bank b's last maintenance (RPO metric for checkpoints)."""
+        t = self.banks[b].last_issue_time
+        return now - t if t >= 0 else now

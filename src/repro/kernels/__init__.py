@@ -1,0 +1,3 @@
+# SARP-motivated TPU kernels: refresh_paged_attention fuses KV-page
+# "refresh" (int8 dequant) into decode attention; kv_quant is the refresh
+# op itself; flash_attention and mamba2_ssd are the demand-access paths.

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: causal flash attention forward (demand read path).
+
+Grid (bh, n_q_blocks, n_kv_blocks) — kv innermost/sequential, online-softmax
+carry (m, l, acc) lives in VMEM scratch across kv steps. BlockSpecs tile
+q/k/v as [1, blk, D] VMEM windows; fully-masked kv blocks (kv_start >
+q_end under causality) are skipped with @pl.when, halving causal FLOPs.
+
+Backward uses the XLA chunked-attention path (models/layers.py) via
+custom_vjp in ops.py — the kernel targets serving/prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, q_blk: int, kv_blk: int, n_kv: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_blk
+    k_start = ki * kv_blk
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [qb, D]
+        k = k_ref[0].astype(jnp.float32)                  # [kb, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [qb, kb]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    if causal:
+        pl.when(k_start <= q_start + q_blk - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_blk: int = 128,
+                    kv_blk: int = 128, interpret: bool = False):
+    """q/k/v: [BH, S, D] (kv GQA-expanded). Returns [BH, S, D]."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    q_blk = min(q_blk, sq)
+    kv_blk = min(kv_blk, skv)
+    assert sq % q_blk == 0 and skv % kv_blk == 0
+    nq, nk = sq // q_blk, skv // kv_blk
+    kern = functools.partial(
+        _flash_kernel, causal=causal, q_blk=q_blk, kv_blk=kv_blk, n_kv=nk,
+        scale=1.0 / math.sqrt(d))
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, 1), jnp.float32),
+            pltpu.VMEM((q_blk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

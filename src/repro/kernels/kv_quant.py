@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: per-page int8 KV quantization — "the refresh op".
+
+Grid: one step per page. Each step loads a [T, H, D] bf16 page into VMEM,
+computes the per-head absmax scale on the VPU, and writes the int8 page +
+scales. On TPU this is purely VPU + DMA work: it contends with neither the
+MXU nor the ICI links, which is exactly the paper's observation that a
+refresh occupies only the subarray's local sense amps, leaving the I/O bus
+free (DESIGN §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kv_quant_kernel(page_ref, q_ref, scale_ref):
+    page = page_ref[0].astype(jnp.float32)            # [T, H, D]
+    amax = jnp.max(jnp.abs(page), axis=(0, 2))        # [H]
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.round(page / scale[None, :, None])
+    q_ref[0] = jnp.clip(q, -127, 127).astype(jnp.int8)
+    scale_ref[0] = scale
+
+
+def kv_quant(pages: jax.Array, *, interpret: bool = False):
+    """pages: [P, T, H, D] float -> (int8 pages, scales [P, H])."""
+    p, t, h, d = pages.shape
+    return pl.pallas_call(
+        _kv_quant_kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, t, h, d), lambda i: (i, 0, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, t, h, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, t, h, d), jnp.int8),
+            jax.ShapeDtypeStruct((p, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages)

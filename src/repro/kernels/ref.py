@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """q/k/v: [BH, S, D] (kv already GQA-expanded). fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def kv_quant(pages):
+    """pages: [P, T, H, D] float -> (int8 [P,T,H,D], scale [P,H])."""
+    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=(1, 3))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.round(pages.astype(jnp.float32) / scale[:, None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def paged_decode_attention(q, k_pages, v_pages, k_scale, v_scale,
+                           page_table, seq_lens, *, page_size: int):
+    """Decode attention over an int8 paged KV cache (per-sequence).
+
+    q: [B, H, D]; *_pages: [P, T, Hkv, D] int8; *_scale: [P, Hkv];
+    page_table: [B, MAXP] int32; seq_lens: [B]. GQA by head repeat.
+    """
+    b, h, d = q.shape
+    hkv = k_pages.shape[2]
+    group = h // hkv
+    maxp = page_table.shape[1]
+    outs = []
+    for bi in range(b):
+        n = int(seq_lens[bi])
+        ks, vs = [], []
+        for pi in range((n + page_size - 1) // page_size):
+            p = int(page_table[bi, pi])
+            kd = k_pages[p].astype(jnp.float32) * k_scale[p][None, :, None]
+            vd = v_pages[p].astype(jnp.float32) * v_scale[p][None, :, None]
+            ks.append(kd)
+            vs.append(vd)
+        k = jnp.concatenate(ks, 0)[:n] if ks else jnp.zeros((0, hkv, d))
+        v = jnp.concatenate(vs, 0)[:n] if vs else jnp.zeros((0, hkv, d))
+        if group > 1:
+            k = jnp.repeat(k, group, axis=1)
+            v = jnp.repeat(v, group, axis=1)
+        s = jnp.einsum("hd,shd->hs", q[bi].astype(jnp.float32), k) / math.sqrt(d)
+        p_ = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("hs,shd->hd", p_, v))
+    return jnp.stack(outs).astype(q.dtype)
+
+
+def mamba2_ssd(x, dt, A, B_in, C_in, *, chunk: int):
+    """SSD chunked scan oracle. x: [B,S,H,P]; dt: [B,S,H] (>0, post-softplus);
+    A: [H] (<0); B_in/C_in: [B,S,N]. Returns y [B,S,H,P] (no D residual)."""
+    from repro.models.layers import ssd_chunked
+    y, _ = ssd_chunked(x, dt, A, B_in, C_in,
+                       jnp.zeros(A.shape, jnp.float32), chunk)
+    return y

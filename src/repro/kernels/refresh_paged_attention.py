@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: decode attention over an int8 paged KV cache with the
+page "refresh" (dequantization) FUSED into the attention grid — SARP on TPU.
+
+The paper's SARP lets a bank serve accesses to one subarray while another
+subarray is refreshing; the TPU analogue: while the MXU attends over page i
+(already dequantized, in VMEM), Pallas's grid pipeline DMAs page i+1 from
+HBM and the VPU dequantizes it — refresh of one "subarray" (page) proceeds
+in parallel with access to another, inside the same "bank" (device HBM).
+
+The serial baseline (ops.paged_attention_serial) is the REF_ab analogue:
+dequantize the whole cache to bf16 first (extra HBM round-trip), then
+attend. Per KV element it moves ~5 bytes (1 int8 read + 2 bf16 write +
+2 bf16 read) vs. the fused kernel's 1 — the benchmark quantifies this.
+
+Scalar-prefetch carries (page_table, seq_lens) so BlockSpec index_maps can
+translate logical page -> physical page, exactly like TPU paged attention.
+
+Grid: (batch, max_pages); kv-page axis sequential with online-softmax
+scratch carry. q heads live in VMEM whole (decode q is tiny).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(page_table_ref, seq_lens_ref,                 # scalar prefetch
+                  q_ref, kq_ref, vq_ref, ks_ref, vs_ref,        # inputs
+                  o_ref,                                        # output
+                  m_ref, l_ref, acc_ref,                        # scratch
+                  *, page_size: int, n_pages_grid: int, group: int,
+                  scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    seq_len = seq_lens_ref[b]
+    n_valid = (seq_len + page_size - 1) // page_size
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(pi < n_valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [H, D]
+        # ---- the fused "refresh": dequantize THIS page (VPU) while the
+        # pipeline DMAs the next page's int8 data (grid double-buffering)
+        k = kq_ref[0].astype(jnp.float32) * ks_ref[0][None, :, None]
+        v = vq_ref[0].astype(jnp.float32) * vs_ref[0][None, :, None]
+        if group > 1:                                        # GQA expand
+            k = jnp.repeat(k, group, axis=1)
+            v = jnp.repeat(v, group, axis=1)
+        # [T, H, D] x [H, D] -> scores [H, T]
+        s = jnp.einsum("hd,thd->ht", q, k)
+        tpos = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(tpos < seq_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("ht,thd->hd", p, v)
+        m_ref[...] = m_new
+
+    @pl.when(pi == n_pages_grid - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def refresh_paged_attention(q, k_pages, v_pages, k_scale, v_scale,
+                            page_table, seq_lens, *, page_size: int,
+                            interpret: bool = False):
+    """q: [B, H, D]; *_pages: [P, T, Hkv, D] int8; *_scale: [P, Hkv] f32;
+    page_table: [B, MAXP] i32; seq_lens: [B] i32. Returns [B, H, D]."""
+    b, h, d = q.shape
+    p_total, t, hkv, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    group = h // hkv
+    kern = functools.partial(
+        _paged_kernel, page_size=page_size, n_pages_grid=maxp, group=group,
+        scale=1.0 / math.sqrt(d))
+
+    def page_map(b_, p_, table, lens):
+        # clamp to a valid physical page for skipped steps (no OOB DMA)
+        return (jnp.maximum(table[b_, p_], 0), 0, 0, 0)
+
+    def scale_map(b_, p_, table, lens):
+        return (jnp.maximum(table[b_, p_], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, maxp),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, p_, tb, ln: (b_, 0, 0)),
+            pl.BlockSpec((1, t, hkv, d), page_map),
+            pl.BlockSpec((1, t, hkv, d), page_map),
+            pl.BlockSpec((1, hkv), scale_map),
+            pl.BlockSpec((1, hkv), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, p_, tb, ln: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages, k_scale, v_scale)

@@ -1,0 +1,3 @@
+from repro.kvcache.paged import PagedKVConfig, PagedKVCache, quantize_page, dequantize_page
+
+__all__ = ["PagedKVConfig", "PagedKVCache", "quantize_page", "dequantize_page"]

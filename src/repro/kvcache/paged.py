@@ -1,0 +1,233 @@
+"""Paged, int8-quantized KV cache with page "refresh" (the serving-side DRAM).
+
+Memory layout (per k and v):
+  pages   : [L, n_pages, page_size, H_kv, D] int8   — long-term store
+  scales  : [L, n_pages, H_kv] f32                  — per (page, head) scale
+  staging : [L, n_staging, page_size, H_kv, D] bf16 — recent, uncompressed
+
+The refresh analogy (DESIGN §2):
+  * a page-group (page_id % n_groups) is a *bank*;
+  * compressing a full staging page into int8 is the *refresh* operation —
+    mandatory periodic maintenance (staging capacity is finite, like charge
+    leaking away);
+  * DARP schedules which bank-group gets compressed each decode round,
+    avoiding groups the current batch is attending to; budget-forced
+    compression when staging runs out is the data-integrity guarantee;
+  * the SARP kernel (kernels/refresh_paged_attention) overlaps per-page
+    dequant ("refresh") with attention compute on the neighbouring page.
+
+Bookkeeping (allocation, page tables, staging map) is host-side numpy;
+bulk math is jnp.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PagedKVConfig:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    page_size: int = 64
+    n_pages: int = 256
+    n_staging: int = 32
+    n_groups: int = 8            # DARP bank-groups
+    max_seqs: int = 16
+    max_pages_per_seq: int = 64
+    dtype: jnp.dtype = jnp.bfloat16
+
+
+# ------------------------------------------------------------ pure jnp ops
+
+def quantize_page(page: jax.Array):
+    """page: [..., page_size, H, D] float -> (int8 page, scale [..., H])."""
+    amax = jnp.max(jnp.abs(page.astype(jnp.float32)), axis=(-3, -1))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.round(page.astype(jnp.float32) / scale[..., None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_page(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    """Inverse of quantize_page."""
+    return (q.astype(jnp.float32) * scale[..., None, :, None]).astype(dtype)
+
+
+def page_quant_error(page: jax.Array) -> jax.Array:
+    q, s = quantize_page(page)
+    return jnp.max(jnp.abs(dequantize_page(q, s, jnp.float32)
+                           - page.astype(jnp.float32)))
+
+
+# ----------------------------------------------------------------- manager
+
+class PagedKVCache:
+    """Host-orchestrated paged cache for one model (all layers)."""
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        L, P, T, H, D = (cfg.n_layers, cfg.n_pages, cfg.page_size,
+                         cfg.n_kv_heads, cfg.head_dim)
+        S = cfg.n_staging
+        self.k_pages = jnp.zeros((L, P, T, H, D), jnp.int8)
+        self.v_pages = jnp.zeros((L, P, T, H, D), jnp.int8)
+        self.k_scale = jnp.ones((L, P, H), jnp.float32)
+        self.v_scale = jnp.ones((L, P, H), jnp.float32)
+        self.k_staging = jnp.zeros((L, S, T, H, D), cfg.dtype)
+        self.v_staging = jnp.zeros((L, S, T, H, D), cfg.dtype)
+        # host bookkeeping
+        self.free_pages = list(range(P - 1, -1, -1))
+        self.free_staging = list(range(S - 1, -1, -1))
+        self.page_table = np.full((cfg.max_seqs, cfg.max_pages_per_seq), -1,
+                                  dtype=np.int32)
+        self.seq_len = np.zeros(cfg.max_seqs, dtype=np.int32)
+        self.active = np.zeros(cfg.max_seqs, dtype=bool)
+        # page state: -1 free, 0 compressed, 1 staged (uncompressed)
+        self.page_state = np.full(P, -1, dtype=np.int8)
+        self.staging_slot = np.full(P, -1, dtype=np.int32)  # page -> slot
+        self.stats = {"compressions": 0, "forced": 0, "appends": 0,
+                      "alloc_fail": 0}
+
+    # ------------------------------------------------------------ alloc
+    def group_of(self, page: int) -> int:
+        return page % self.cfg.n_groups
+
+    def new_seq(self) -> int:
+        sid = int(np.argmin(self.active))
+        if self.active[sid]:
+            raise RuntimeError("no free sequence slots")
+        self.active[sid] = True
+        self.seq_len[sid] = 0
+        self.page_table[sid] = -1
+        return sid
+
+    def release_seq(self, sid: int) -> None:
+        for p in self.page_table[sid]:
+            if p >= 0:
+                self._free_page(int(p))
+        self.page_table[sid] = -1
+        self.active[sid] = False
+        self.seq_len[sid] = 0
+
+    def _free_page(self, p: int) -> None:
+        if self.page_state[p] == 1:
+            self.free_staging.append(int(self.staging_slot[p]))
+            self.staging_slot[p] = -1
+        self.page_state[p] = -1
+        self.free_pages.append(p)
+
+    def _alloc_page(self) -> Optional[int]:
+        if not self.free_pages or not self.free_staging:
+            self.stats["alloc_fail"] += 1
+            return None
+        p = self.free_pages.pop()
+        slot = self.free_staging.pop()
+        self.page_state[p] = 1
+        self.staging_slot[p] = slot
+        return p
+
+    # ----------------------------------------------------------- appends
+    def append(self, sid: int, k_tok: jax.Array, v_tok: jax.Array) -> bool:
+        """Append one token's K/V ([L, H, D]) for sequence sid.
+        Returns False if a page could not be allocated (caller must force
+        compressions and retry)."""
+        pos = int(self.seq_len[sid])
+        pidx, off = divmod(pos, self.cfg.page_size)
+        if off == 0:
+            p = self._alloc_page()
+            if p is None:
+                return False
+            self.page_table[sid, pidx] = p
+        p = int(self.page_table[sid, pidx])
+        slot = int(self.staging_slot[p])
+        assert slot >= 0, "append target must be staged"
+        self.k_staging = self.k_staging.at[:, slot, off].set(
+            k_tok.astype(self.cfg.dtype))
+        self.v_staging = self.v_staging.at[:, slot, off].set(
+            v_tok.astype(self.cfg.dtype))
+        self.seq_len[sid] = pos + 1
+        self.stats["appends"] += 1
+        return True
+
+    # ----------------------------------------------------------- refresh
+    def compressible_pages(self) -> list[int]:
+        """Staged pages that are FULL (safe to compress; no more appends)."""
+        out = []
+        for sid in np.where(self.active)[0]:
+            full_pages = int(self.seq_len[sid]) // self.cfg.page_size
+            for i in range(full_pages):
+                p = int(self.page_table[sid, i])
+                if p >= 0 and self.page_state[p] == 1:
+                    out.append(p)
+        return out
+
+    def demand_by_group(self, attending_pages: list[int]) -> list[int]:
+        """Demand vector for the DARP scheduler: pages the current decode
+        batch is reading, bucketed by bank-group."""
+        d = [0] * self.cfg.n_groups
+        for p in attending_pages:
+            d[self.group_of(p)] += 1
+        return d
+
+    def compress_page(self, p: int, forced: bool = False) -> None:
+        """The refresh operation: staging -> int8 + scale, frees the slot."""
+        assert self.page_state[p] == 1
+        slot = int(self.staging_slot[p])
+        kq, ks = quantize_page(self.k_staging[:, slot])
+        vq, vs = quantize_page(self.v_staging[:, slot])
+        self.k_pages = self.k_pages.at[:, p].set(kq)
+        self.v_pages = self.v_pages.at[:, p].set(vq)
+        self.k_scale = self.k_scale.at[:, p].set(ks)
+        self.v_scale = self.v_scale.at[:, p].set(vs)
+        self.page_state[p] = 0
+        self.staging_slot[p] = -1
+        self.free_staging.append(slot)
+        self.stats["compressions"] += 1
+        if forced:
+            self.stats["forced"] += 1
+
+    def compress_group(self, group: int, forced: bool = False) -> int:
+        n = 0
+        for p in self.compressible_pages():
+            if self.group_of(p) == group:
+                self.compress_page(p, forced=forced)
+                n += 1
+        return n
+
+    def staging_pressure(self) -> float:
+        return 1.0 - len(self.free_staging) / self.cfg.n_staging
+
+    # ------------------------------------------------------------- reads
+    def gather_seq(self, sid: int, layer: int, dtype=jnp.bfloat16):
+        """Materialize sequence sid's full K/V for one layer (reference
+        read path; the SARP kernel streams pages instead). Returns
+        (k [S,H,D], v [S,H,D])."""
+        n = int(self.seq_len[sid])
+        if n == 0:
+            h, d = self.cfg.n_kv_heads, self.cfg.head_dim
+            return (jnp.zeros((0, h, d), dtype), jnp.zeros((0, h, d), dtype))
+        parts_k, parts_v = [], []
+        npages = (n + self.cfg.page_size - 1) // self.cfg.page_size
+        for i in range(npages):
+            p = int(self.page_table[sid, i])
+            take = min(self.cfg.page_size, n - i * self.cfg.page_size)
+            if self.page_state[p] == 1:
+                slot = int(self.staging_slot[p])
+                parts_k.append(self.k_staging[layer, slot, :take].astype(dtype))
+                parts_v.append(self.v_staging[layer, slot, :take].astype(dtype))
+            else:
+                parts_k.append(dequantize_page(
+                    self.k_pages[layer, p], self.k_scale[layer, p], dtype)[:take])
+                parts_v.append(dequantize_page(
+                    self.v_pages[layer, p], self.v_scale[layer, p], dtype)[:take])
+        return jnp.concatenate(parts_k), jnp.concatenate(parts_v)
+
+    def pages_of(self, sid: int) -> list[int]:
+        n = int(self.seq_len[sid])
+        npages = (n + self.cfg.page_size - 1) // self.cfg.page_size
+        return [int(self.page_table[sid, i]) for i in range(npages)]

@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct input builders for every (arch x shape) dry-run cell.
+
+Nothing here allocates device memory: params/opt/decode-state shapes come
+from jax.eval_shape over the real constructors, inputs are synthesized
+ShapeDtypeStructs. Sharding comes from the logical-axis spec trees.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.common.config import ArchConfig, ShapeConfig
+from repro.models.api import get_model
+from repro.models.dims import Dims
+from repro.optim import OptConfig, init_opt
+from repro.parallel import logical_to_spec
+from repro.parallel.sharding import sharding_context
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def opt_config_for(cfg: ArchConfig) -> OptConfig:
+    # 400B config: bf16 first moment + factored second moment to fit
+    # 16 GB/chip on 256 chips (DESIGN §8, perf log H4)
+    if "llama4" in cfg.name:
+        return OptConfig(moment_dtype="bfloat16", factored_v=True)
+    return OptConfig()
+
+
+def accum_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Microbatch count for train cells (activation-memory relief, H5).
+
+    NOT used for the FSDP-heavy MoE giants: every microbatch re-all-gathers
+    the full sharded parameters, so accum=8 multiplied llama4's collective
+    term 2.5x (H5 refuted there — see EXPERIMENTS §Perf). Kept where
+    parameter traffic is small relative to activations (zamba2, qwen2-vl).
+    """
+    if shape.kind != "train":
+        return 1
+    if cfg.name in ("qwen2-vl-72b", "zamba2-7b"):
+        return 4
+    return 1
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, *, with_labels: bool):
+    """Input batch as ShapeDtypeStructs ('train' includes labels)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.family == "encdec":
+        out["enc_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = sds((b, s) if with_labels else (b, 1), jnp.int32)
+    elif cfg.frontend == "embed":
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        if cfg.attention is not None and cfg.attention.mrope:
+            out["positions"] = sds((3, b, s), jnp.int32)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+    if with_labels:
+        out["labels"] = sds((b, s), jnp.int32)
+    return out
+
+
+def batch_spec_axes(cfg: ArchConfig, batch: dict) -> dict:
+    """Logical axes per batch entry (rank-matched)."""
+    axes = {}
+    for k, v in batch.items():
+        if k == "positions":
+            axes[k] = (None, "batch", None)
+        elif v.ndim == 3:
+            axes[k] = ("batch", None, None)
+        else:
+            axes[k] = ("batch",) + (None,) * (v.ndim - 1)
+    return axes
+
+
+def state_shapes_and_specs(cfg: ArchConfig, dims: Dims, kind: str,
+                           shape: ShapeConfig):
+    """Returns (pytree of ShapeDtypeStruct, pytree of logical-axis tuples)
+    for the non-batch argument of the step function."""
+    mod = get_model(cfg)
+    if kind == "train":
+        ocfg = opt_config_for(cfg)
+
+        def mk():
+            params = mod.init(jax.random.PRNGKey(0), cfg, dims)
+            return {"params": params, "opt": init_opt(params, ocfg)}
+
+        shapes = jax.eval_shape(mk)
+        pspecs = mod.param_specs(cfg, dims)
+        # factored v entries are {"row","col"} subtrees: trim the param spec
+        ptdef = jax.tree.structure(shapes["params"])
+        flat_specs = jax.tree.flatten(
+            pspecs, is_leaf=lambda x: isinstance(x, tuple))[0]
+        flat_v = ptdef.flatten_up_to(shapes["opt"]["v"])
+        v_specs = []
+        for s, v in zip(flat_specs, flat_v):
+            if isinstance(v, dict):
+                v_specs.append({"row": tuple(s[:-1]),
+                                "col": tuple(s[:-2]) + (s[-1],)})
+            else:
+                v_specs.append(tuple(s))
+        specs = {"params": pspecs,
+                 "opt": {"m": pspecs,
+                         "v": jax.tree.unflatten(ptdef, v_specs),
+                         "step": ()}}
+        return shapes, specs
+    if kind == "prefill":
+        shapes = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg, dims))
+        return shapes, mod.param_specs(cfg, dims)
+    if kind == "decode":
+        params = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg, dims))
+        state = jax.eval_shape(
+            partial(mod.init_decode_state, cfg, dims,
+                    shape.global_batch, shape.seq_len))
+        return ({"params": params, "state": state},
+                {"params": mod.param_specs(cfg, dims),
+                 "state": mod.decode_state_specs(cfg, dims)})
+    raise ValueError(kind)
+
+
+def to_shardings(mesh, logical_tree):
+    """Logical-axis tuples -> NamedShardings (None-safe)."""
+    def conv(axes):
+        if axes is None:
+            return None
+        return NamedSharding(mesh, logical_to_spec(tuple(axes)))
+
+    return jax.tree.map(conv, logical_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, tuple))

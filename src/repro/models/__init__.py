@@ -1,0 +1,4 @@
+from repro.models.dims import Dims, make_dims
+from repro.models import api
+
+__all__ = ["Dims", "make_dims", "api"]

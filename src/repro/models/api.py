@@ -1,0 +1,26 @@
+"""Uniform model API: family dispatch.
+
+Every family module implements:
+  init(rng, cfg, dims) -> params
+  param_specs(cfg, dims) -> logical-axis spec pytree (mirrors params)
+  train_loss(params, batch, cfg, dims) -> (loss, metrics)
+  prefill(params, batch, cfg, dims) -> (logits [B,V], decode_state)
+  init_decode_state(cfg, dims, batch, kv_len) -> state pytree
+  decode_step(params, state, cfg, dims, *, token/embed, pos) -> (logits, state)
+"""
+from __future__ import annotations
+
+from repro.common.config import ArchConfig
+from repro.models import transformer, mamba, hybrid, encdec
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "ssm": mamba,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]

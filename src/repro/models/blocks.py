@@ -1,0 +1,437 @@
+"""Parameter init + apply for the reusable blocks (attention, MLP, MoE,
+Mamba2). Model families compose these under scanned layer stacks.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays; stacked along a leading
+    layer axis by the family code (via vmap'd init).
+  * padded q / SSD heads are zero-initialized and masked at init so the
+    padded model is numerically identical to the logical one.
+  * `mode` is one of 'train' | 'prefill' | 'decode'.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.dims import Dims
+from repro.models import layers as L
+from repro.parallel import shd, current_mesh, logical_to_spec
+
+Init = jax.nn.initializers.normal
+
+
+def _norm(key, shape, dtype, scale=0.02):
+    return Init(scale)(key, shape, jnp.float32).astype(dtype)
+
+
+# ============================================================== attention
+
+def init_attn(key, dims: Dims, *, out_scale: float, rope: bool = True) -> dict:
+    cfg = dims.cfg
+    att = cfg.attention
+    d, dh = cfg.d_model, att.head_dim
+    nq, nkv = dims.n_q, dims.n_kv
+    ks = jax.random.split(key, 5)
+    qmask = (jnp.arange(nq) < att.n_heads).astype(dims.param_dtype)
+    p = {
+        "ln": jnp.ones((d,), dims.param_dtype),
+        "wq": _norm(ks[0], (d, nq, dh), dims.param_dtype) * qmask[None, :, None],
+        "wk": _norm(ks[1], (d, nkv, dh), dims.param_dtype),
+        "wv": _norm(ks[2], (d, nkv, dh), dims.param_dtype),
+        "wo": _norm(ks[3], (nq, dh, d), dims.param_dtype, out_scale) * qmask[:, None, None],
+    }
+    if att.qkv_bias:
+        p["bq"] = jnp.zeros((nq, dh), dims.param_dtype)
+        p["bk"] = jnp.zeros((nkv, dh), dims.param_dtype)
+        p["bv"] = jnp.zeros((nkv, dh), dims.param_dtype)
+    return p
+
+
+def attn_specs(dims: Dims) -> dict:
+    kv = "kv_heads" if dims.kv_sharded else None
+    s = {
+        "ln": (None,),
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", kv, None),
+        "wv": ("fsdp", kv, None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if dims.cfg.attention.qkv_bias:
+        s["bq"] = ("heads", None)
+        s["bk"] = (kv, None)
+        s["bv"] = (kv, None)
+    return s
+
+
+def _project_qkv(p, x, dims: Dims, sin, cos, rope: bool):
+    dt = x.dtype
+    q = L.eins("bsd,dhk->bshk", x, p["wq"])
+    k = L.eins("bsd,dhk->bshk", x, p["wk"])
+    v = L.eins("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope:
+        q = L.apply_rope(q, sin, cos)
+        k = L.apply_rope(k, sin, cos)
+    kv_ax = "kv_heads" if dims.kv_sharded else None
+    q = shd(q, "batch", None, "heads", None)
+    k = shd(k, "batch", None, kv_ax, None)
+    v = shd(v, "batch", None, kv_ax, None)
+    return q, k, v
+
+
+def apply_attn(p: dict, h: jax.Array, dims: Dims, *, sin, cos,
+               causal: bool, mode: str = "train",
+               cache: Optional[tuple] = None, pos=None, rope: bool = True):
+    """Residual self-attention block.
+
+    train/prefill: h [B,S,D]. prefill also returns (k, v) for the cache.
+    decode: h [B,1,D]; cache = (k_cache, v_cache) [B,Smax,Hkv,dh]; pos scalar.
+    """
+    x = L.rmsnorm(h, p["ln"], dims.cfg.norm_eps)
+    if mode == "decode":
+        q, k_new, v_new = _project_qkv(p, x, dims, sin, cos, rope)
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+        new_cache = (k_cache, v_cache)
+        out = L.decode_attention(q, k_cache, v_cache, pos + 1, dims.q_group)
+    else:
+        q, k, v = _project_qkv(p, x, dims, sin, cos, rope)
+        # expanded KV for train/prefill: kv is replicated here, expansion is
+        # local, and head-sharded einsums partition cleanly (H2 showed the
+        # grouped form trades a2a reshards for AG+AR storms under SPMD).
+        ke, ve = L._expand_kv(k, dims.q_group), L._expand_kv(v, dims.q_group)
+        out = L.chunked_attention(q, ke, ve, causal=causal)
+        new_cache = (k, v)
+    y = L.eins("bshk,hkd->bsd", out, p["wo"])
+    if mode != "decode":
+        y = shd(y, "batch", "seq", None)
+    return h + y, new_cache
+
+
+def cross_kv(p: dict, memory: jax.Array, dims: Dims):
+    """Project encoder memory to (k, v) once (reused across decode steps)."""
+    dt = memory.dtype
+    k = L.eins("bsd,dhk->bshk", memory, p["wk"])
+    v = L.eins("bsd,dhk->bshk", memory, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    kv_ax = "kv_heads" if dims.kv_sharded else None
+    return shd(k, "batch", None, kv_ax, None), shd(v, "batch", None, kv_ax, None)
+
+
+def apply_cross_attn(p: dict, h: jax.Array, dims: Dims, *,
+                     kv: tuple, mode: str = "train"):
+    """Residual cross-attention: q from h, (k, v) precomputed from memory.
+    No RoPE (absolute memory positions). decode: h [B,1,D]."""
+    x = L.rmsnorm(h, p["ln"], dims.cfg.norm_eps)
+    dt = x.dtype
+    q = L.eins("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    q = shd(q, "batch", None, "heads", None)
+    k, v = kv
+    if mode == "decode":
+        out = L.decode_attention(q, k, v, jnp.asarray(k.shape[1]), dims.q_group)
+    else:
+        ke, ve = L._expand_kv(k, dims.q_group), L._expand_kv(v, dims.q_group)
+        out = L.chunked_attention(q, ke, ve, causal=False)
+    y = L.eins("bshk,hkd->bsd", out, p["wo"])
+    if mode != "decode":
+        y = shd(y, "batch", "seq", None)
+    return h + y
+
+
+# ==================================================================== MLP
+
+def init_mlp(key, d: int, f: int, dims: Dims, out_scale: float) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((d,), dims.param_dtype),
+        "wi": _norm(ks[0], (d, f), dims.param_dtype),
+        "wg": _norm(ks[1], (d, f), dims.param_dtype),
+        "wd": _norm(ks[2], (f, d), dims.param_dtype, out_scale),
+    }
+
+
+def mlp_specs() -> dict:
+    return {"ln": (None,), "wi": ("fsdp", "ff"), "wg": ("fsdp", "ff"),
+            "wd": ("ff", "fsdp")}
+
+
+def apply_mlp(p: dict, h: jax.Array, dims: Dims, seq_shard: bool = True) -> jax.Array:
+    x = L.rmsnorm(h, p["ln"], dims.cfg.norm_eps)
+    y = L.gated_mlp(x, p["wi"], p["wg"], p["wd"])
+    if seq_shard:
+        y = shd(y, "batch", "seq", None)
+    return h + y
+
+
+# ==================================================================== MoE
+
+def init_moe(key, dims: Dims, out_scale: float) -> dict:
+    cfg = dims.cfg
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_ff, m.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln": jnp.ones((d,), dims.param_dtype),
+        "router": _norm(ks[0], (d, e), jnp.float32),
+        "we_i": _norm(ks[1], (e, d, f), dims.param_dtype),
+        "we_g": _norm(ks[2], (e, d, f), dims.param_dtype),
+        "we_o": _norm(ks[3], (e, f, d), dims.param_dtype, out_scale),
+    }
+    if m.shared_expert_ff:
+        p["shared"] = init_mlp(ks[4], d, m.shared_expert_ff, dims, out_scale)
+        del p["shared"]["ln"]  # shares this block's ln
+    return p
+
+
+def moe_specs(dims: Dims) -> dict:
+    s = {
+        "ln": (None,),
+        "router": (None, None),
+        "we_i": ("expert", "fsdp", None),
+        "we_g": ("expert", "fsdp", None),
+        "we_o": ("expert", None, "fsdp"),
+    }
+    if dims.cfg.moe.shared_expert_ff:
+        s["shared"] = {"wi": ("fsdp", "ff"), "wg": ("fsdp", "ff"),
+                       "wd": ("ff", "fsdp")}
+    return s
+
+
+def _moe_capacity(t: int, m) -> int:
+    c = math.ceil(t * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _moe_local_body(x, wr, we_i, we_g, we_o, *, moe_cfg, expert_offset, capacity):
+    """Per-device MoE math (also the no-mesh smoke path)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    idx, weights, probs = L.moe_route(xf, wr, moe_cfg.top_k)
+    slot = L.moe_positions(idx, moe_cfg.n_experts, capacity)
+    y = L.moe_apply_local(xf, idx, weights, slot, we_i, we_g, we_o,
+                          capacity=capacity, expert_offset=expert_offset)
+    aux = L.moe_aux_loss(probs, idx, moe_cfg.n_experts)
+    dropped = jnp.mean((slot >= capacity).astype(jnp.float32))
+    return y.reshape(b, s, d), aux, dropped
+
+
+def apply_moe(p: dict, h: jax.Array, dims: Dims, seq_shard: bool = True):
+    """Expert-parallel MoE block. Returns (h', aux_loss, dropped_frac).
+
+    With a mesh: shard_map over the full mesh — tokens stay on their data
+    shard, experts are sharded over 'model'; the only cross-shard traffic is
+    one psum of the combined output over 'model' (plus the FSDP all-gather
+    of expert weights over 'data'), mirroring a TP MLP.
+    """
+    cfg = dims.cfg
+    m = cfg.moe
+    x = L.rmsnorm(h, p["ln"], cfg.norm_eps)
+    mesh = current_mesh()
+    if mesh is None:
+        cap = _moe_capacity(x.shape[0] * x.shape[1], m)
+        y, aux, dropped = _moe_local_body(
+            x, p["router"], p["we_i"], p["we_g"], p["we_o"],
+            moe_cfg=m, expert_offset=0, capacity=cap)
+    else:
+        ep = mesh.shape["model"]
+        e_loc = m.n_experts // ep
+        # tokens per device group = global tokens / batch ways
+        bspec = logical_to_spec(("batch",))[0]
+        if bspec is None:
+            bways = 1
+        elif isinstance(bspec, tuple):
+            bways = 1
+            for a in bspec:
+                bways *= mesh.shape[a]
+        else:
+            bways = mesh.shape[bspec]
+        t_loc = (x.shape[0] // bways) * x.shape[1]
+        cap = _moe_capacity(t_loc, m)
+
+        batch_axes = bspec if isinstance(bspec, tuple) else (
+            (bspec,) if bspec else ())
+
+        def body(x_loc, wr, wei, weg, weo):
+            # FSDP gather of expert weights over 'data'
+            wei = jax.lax.all_gather(wei, "data", axis=1, tiled=True)
+            weg = jax.lax.all_gather(weg, "data", axis=1, tiled=True)
+            weo = jax.lax.all_gather(weo, "data", axis=2, tiled=True)
+            off = jax.lax.axis_index("model") * e_loc
+            y, aux, dropped = _moe_local_body(
+                x_loc, wr, wei, weg, weo,
+                moe_cfg=m, expert_offset=off, capacity=cap)
+            y = jax.lax.psum(y, "model")
+            # aux stats vary only over the batch axes; averaging over those
+            # makes them fully replicated (out_spec P())
+            if batch_axes:
+                aux = jax.lax.pmean(aux, batch_axes)
+                dropped = jax.lax.pmean(dropped, batch_axes)
+            return y, aux, dropped
+
+        xspec = logical_to_spec(("batch", None, None))
+        y, aux, dropped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(xspec, P(), logical_to_spec(("expert", "fsdp", None)),
+                      logical_to_spec(("expert", "fsdp", None)),
+                      logical_to_spec(("expert", None, "fsdp"))),
+            out_specs=(xspec, P(), P()),
+        )(x, p["router"], p["we_i"], p["we_g"], p["we_o"])
+    if m.shared_expert_ff:
+        sh = p["shared"]
+        y = y + L.gated_mlp(x, sh["wi"], sh["wg"], sh["wd"])
+    if seq_shard:
+        y = shd(y, "batch", "seq", None)
+    return h + y, aux * m.router_aux_weight, dropped
+
+
+# ================================================================== mamba2
+
+def init_mamba(key, dims: Dims, out_scale: float) -> dict:
+    cfg = dims.cfg
+    s = cfg.ssm
+    d, n, w = cfg.d_model, s.d_state, s.d_conv
+    di, nh = dims.d_inner, dims.ssm_heads
+    nh_logical = s.n_heads(d)
+    di_logical = nh_logical * s.head_dim
+    ks = jax.random.split(key, 9)
+    chmask = (jnp.arange(di) < di_logical).astype(dims.param_dtype)
+    hmask = jnp.arange(nh) < nh_logical
+    a_init = jnp.log(jax.random.uniform(ks[6], (nh,), jnp.float32, 1.0, 16.0))
+    dtb = jnp.log(jnp.expm1(jax.random.uniform(ks[7], (nh,), jnp.float32, 1e-3, 0.1)))
+    return {
+        "ln": jnp.ones((d,), dims.param_dtype),
+        "wz": _norm(ks[0], (d, di), dims.param_dtype) * chmask[None, :],
+        "wx": _norm(ks[1], (d, di), dims.param_dtype) * chmask[None, :],
+        "wB": _norm(ks[2], (d, n), dims.param_dtype),
+        "wC": _norm(ks[3], (d, n), dims.param_dtype),
+        "wdt": _norm(ks[4], (d, nh), dims.param_dtype) * hmask[None, :].astype(dims.param_dtype),
+        "dt_bias": jnp.where(hmask, dtb, -10.0).astype(jnp.float32),
+        "A_log": jnp.where(hmask, a_init, 0.0).astype(jnp.float32),
+        "Dres": jnp.where(hmask, 1.0, 0.0).astype(jnp.float32),
+        "conv_x": _norm(ks[5], (di, w), dims.param_dtype, 0.5) * chmask[:, None],
+        "conv_B": _norm(ks[8], (n, w), dims.param_dtype, 0.5),
+        "conv_C": _norm(ks[8], (n, w), dims.param_dtype, 0.5),
+        "norm_w": jnp.ones((di,), dims.param_dtype),
+        "wo": _norm(ks[5], (di, d), dims.param_dtype, out_scale) * chmask[:, None],
+    }
+
+
+def mamba_specs() -> dict:
+    return {
+        "ln": (None,), "wz": ("fsdp", "ff"), "wx": ("fsdp", "ff"),
+        "wB": ("fsdp", None), "wC": ("fsdp", None), "wdt": ("fsdp", "heads"),
+        "dt_bias": ("heads",), "A_log": ("heads",), "Dres": ("heads",),
+        "conv_x": ("ff", None), "conv_B": (None, None), "conv_C": (None, None),
+        "norm_w": ("ff",), "wo": ("ff", "fsdp"),
+    }
+
+
+def _mamba_project(p, x, dims: Dims):
+    dt_ = x.dtype
+    z = L.eins("bsd,de->bse", x, p["wz"])
+    xin = L.eins("bsd,de->bse", x, p["wx"])
+    b_in = L.eins("bsd,dn->bsn", x, p["wB"])
+    c_in = L.eins("bsd,dn->bsn", x, p["wC"])
+    dt = L.eins("bsd,dh->bsh", x, p["wdt"])
+    return z, xin, b_in, c_in, dt
+
+
+def apply_mamba(p: dict, h: jax.Array, dims: Dims, *,
+                return_state: bool = False):
+    """Mamba2 block, train/prefill path (chunked SSD). h: [B,S,D].
+
+    Returns (h', state-or-None): with return_state, `state` is the decode
+    state (ssd + conv tails) so prefill can hand off to decode_step.
+    """
+    cfg = dims.cfg
+    s = cfg.ssm
+    nh_logical = s.n_heads(cfg.d_model)
+    x_res = h
+    x = L.rmsnorm(h, p["ln"], cfg.norm_eps)
+    x = shd(x, "batch", None, None)
+    z, xin_raw, b_raw, c_raw, dt = _mamba_project(p, x, dims)
+    xin = jax.nn.silu(L.causal_depthwise_conv(xin_raw, p["conv_x"]).astype(jnp.float32)).astype(xin_raw.dtype)
+    b_in = jax.nn.silu(L.causal_depthwise_conv(b_raw, p["conv_B"]).astype(jnp.float32)).astype(b_raw.dtype)
+    c_in = jax.nn.silu(L.causal_depthwise_conv(c_raw, p["conv_C"]).astype(jnp.float32)).astype(c_raw.dtype)
+    xin = shd(xin, "batch", None, "ff")
+    bsz, seq = xin.shape[:2]
+    xh = xin.reshape(bsz, seq, dims.ssm_heads, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, last_state = L.ssd_chunked(xh, dt, A, b_in, c_in, p["Dres"], s.chunk)
+    y = y.reshape(bsz, seq, dims.d_inner)
+    y = L.gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps, n=nh_logical * s.head_dim)
+    out = L.eins("bse,ed->bsd", y, p["wo"])
+    out = shd(out, "batch", "seq", None)
+    new_h = x_res + out
+    if not return_state:
+        return new_h, last_state
+    w = s.d_conv
+    tail = lambda t: jnp.moveaxis(t[:, -(w - 1):, :], 1, 2).astype(jnp.float32)
+    state = {
+        "ssd": last_state,
+        "conv_x": tail(xin_raw),
+        "conv_B": tail(b_raw),
+        "conv_C": tail(c_raw),
+    }
+    return new_h, state
+
+
+def mamba_state_shapes(dims: Dims, batch: int) -> dict:
+    """Zero decode-state pytree for ONE mamba layer."""
+    cfg = dims.cfg
+    s = cfg.ssm
+    return {
+        "ssd": jnp.zeros((batch, dims.ssm_heads, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, dims.d_inner, s.d_conv - 1), jnp.float32),
+        "conv_B": jnp.zeros((batch, s.d_state, s.d_conv - 1), jnp.float32),
+        "conv_C": jnp.zeros((batch, s.d_state, s.d_conv - 1), jnp.float32),
+    }
+
+
+def _conv_step(state: jax.Array, xt: jax.Array, w: jax.Array):
+    """state [B,C,W-1], xt [B,C], w [C,W] -> (y [B,C], new_state)."""
+    full = jnp.concatenate([state, xt[:, :, None].astype(state.dtype)], axis=2)
+    y = jnp.einsum("bcw,cw->bc", full, w.astype(state.dtype))
+    return y.astype(xt.dtype), full[:, :, 1:]
+
+
+def apply_mamba_decode(p: dict, h: jax.Array, dims: Dims, state: dict):
+    """One-token mamba step. h: [B,1,D]; state from mamba_state_shapes."""
+    cfg = dims.cfg
+    s = cfg.ssm
+    nh_logical = s.n_heads(cfg.d_model)
+    x_res = h
+    x = L.rmsnorm(h, p["ln"], cfg.norm_eps)
+    z, xin, b_in, c_in, dt = _mamba_project(p, x, dims)
+    xt, bt, ct = xin[:, 0], b_in[:, 0], c_in[:, 0]
+    xt, conv_x = _conv_step(state["conv_x"], xt, p["conv_x"])
+    bt, conv_B = _conv_step(state["conv_B"], bt, p["conv_B"])
+    ct, conv_C = _conv_step(state["conv_C"], ct, p["conv_C"])
+    xt = jax.nn.silu(xt.astype(jnp.float32)).astype(xt.dtype)
+    bt = jax.nn.silu(bt.astype(jnp.float32)).astype(bt.dtype)
+    ct = jax.nn.silu(ct.astype(jnp.float32)).astype(ct.dtype)
+    xh = xt.reshape(-1, dims.ssm_heads, s.head_dim)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssd = L.ssd_decode_step(xh, dtv, A, bt, ct, p["Dres"], state["ssd"])
+    y = y.reshape(-1, 1, dims.d_inner)
+    y = L.gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps, n=nh_logical * s.head_dim)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(y.dtype))
+    new_state = {"ssd": ssd, "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C}
+    return x_res + out, new_state

@@ -1,0 +1,171 @@
+"""Encoder-decoder family (SeamlessM4T backbone): bidirectional encoder over
+frontend-stub frame embeddings + causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import loss as LS
+from repro.models.dims import Dims
+from repro.parallel import shd
+
+
+def init(rng, cfg, dims: Dims):
+    out_scale = 0.02 / math.sqrt(2 * (cfg.n_layers + cfg.n_encoder_layers))
+    k_embed, k_enc, k_dec, k_head = jax.random.split(rng, 4)
+
+    def enc_layer(key):
+        ka, km = jax.random.split(key)
+        return {"attn": B.init_attn(ka, dims, out_scale=out_scale),
+                "mlp": B.init_mlp(km, cfg.d_model, cfg.d_ff, dims, out_scale)}
+
+    def dec_layer(key):
+        ka, kc, km = jax.random.split(key, 3)
+        return {"self": B.init_attn(ka, dims, out_scale=out_scale),
+                "cross": B.init_attn(kc, dims, out_scale=out_scale),
+                "mlp": B.init_mlp(km, cfg.d_model, cfg.d_ff, dims, out_scale)}
+
+    return {
+        "dec_embed": B._norm(k_embed, (dims.vocab, cfg.d_model), dims.param_dtype),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(k_enc, cfg.n_encoder_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(k_dec, cfg.n_layers)),
+        "enc_final_ln": jnp.ones((cfg.d_model,), dims.param_dtype),
+        "final_ln": jnp.ones((cfg.d_model,), dims.param_dtype),
+        "lm_head": B._norm(k_head, (cfg.d_model, dims.vocab), dims.param_dtype),
+    }
+
+
+def param_specs(cfg, dims: Dims) -> dict:
+    stack = lambda d: jax.tree.map(lambda s: ("stack",) + tuple(s), d,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "dec_embed": ("vocab", "fsdp"),
+        "enc_layers": stack({"attn": B.attn_specs(dims), "mlp": B.mlp_specs()}),
+        "dec_layers": stack({"self": B.attn_specs(dims),
+                             "cross": B.attn_specs(dims),
+                             "mlp": B.mlp_specs()}),
+        "enc_final_ln": (None,),
+        "final_ln": (None,),
+        "lm_head": (None, "vocab"),
+    }
+
+
+def encode(params, cfg, dims: Dims, enc_embeds, mode="train"):
+    h = enc_embeds.astype(dims.compute_dtype)
+    bsz, seq = h.shape[:2]
+    h = shd(h, "batch", "seq", None)
+    att = cfg.attention
+    pos = jnp.broadcast_to(jnp.arange(seq)[None, :], (bsz, seq))
+    sin, cos = L.rope_angles(pos, att.head_dim, att.rope_theta)
+
+    def body(carry, lp):
+        h = carry
+        h, _ = B.apply_attn(lp["attn"], h, dims, sin=sin, cos=cos,
+                            causal=False, mode="forward")
+        h = B.apply_mlp(lp["mlp"], h, dims)
+        return h, None
+
+    if mode == "train":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.rmsnorm(h, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _decode_stack(params, cfg, dims: Dims, tokens, enc_h, mode):
+    h = jnp.take(params["dec_embed"], tokens, axis=0).astype(dims.compute_dtype)
+    bsz, seq = h.shape[:2]
+    h = shd(h, "batch", "seq", None)
+    att = cfg.attention
+    pos = jnp.broadcast_to(jnp.arange(seq)[None, :], (bsz, seq))
+    sin, cos = L.rope_angles(pos, att.head_dim, att.rope_theta)
+    collect = mode == "prefill"
+
+    def body(carry, lp):
+        h = carry
+        h, kv = B.apply_attn(lp["self"], h, dims, sin=sin, cos=cos,
+                             causal=True, mode=mode)
+        ckv = B.cross_kv(lp["cross"], enc_h, dims)
+        h = B.apply_cross_attn(lp["cross"], h, dims, kv=ckv)
+        h = B.apply_mlp(lp["mlp"], h, dims)
+        ys = {}
+        if collect:
+            ys = {"k": kv[0].astype(dims.compute_dtype),
+                  "v": kv[1].astype(dims.compute_dtype),
+                  "ck": ckv[0].astype(dims.compute_dtype),
+                  "cv": ckv[1].astype(dims.compute_dtype)}
+        return h, ys
+
+    if mode == "train":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, ys = jax.lax.scan(body, h, params["dec_layers"])
+    return L.rmsnorm(h, params["final_ln"], cfg.norm_eps), ys
+
+
+def train_loss(params, batch, cfg, dims: Dims):
+    enc_h = encode(params, cfg, dims, batch["enc_embeds"], mode="train")
+    h, _ = _decode_stack(params, cfg, dims, batch["tokens"], enc_h, "train")
+    loss, metrics = LS.lm_loss(h, params["lm_head"], batch["labels"],
+                               logical_vocab=cfg.vocab_size)
+    return loss, metrics
+
+
+def prefill(params, batch, cfg, dims: Dims):
+    """Encode + single-BOS decoder step; returns logits and decode state."""
+    enc_h = encode(params, cfg, dims, batch["enc_embeds"], mode="prefill")
+    bos = batch.get("tokens")
+    if bos is None:
+        bos = jnp.zeros((enc_h.shape[0], 1), jnp.int32)
+    h, ys = _decode_stack(params, cfg, dims, bos, enc_h, "prefill")
+    logits = LS.logits_for(h[:, -1], params["lm_head"], cfg.vocab_size)
+    # self-cache from the prefix; cross kv fixed for the whole generation
+    state = {"k": ys["k"], "v": ys["v"], "ck": ys["ck"], "cv": ys["cv"]}
+    return logits, state
+
+
+def init_decode_state(cfg, dims: Dims, batch: int, kv_len: int,
+                      enc_len: int = None):
+    att = cfg.attention
+    enc_len = enc_len or kv_len
+    kv = jnp.zeros((cfg.n_layers, batch, kv_len, dims.n_kv, att.head_dim),
+                   dims.compute_dtype)
+    ckv = jnp.zeros((cfg.n_layers, batch, enc_len, dims.n_kv, att.head_dim),
+                    dims.compute_dtype)
+    kv = shd(kv, None, "batch", "pages", None, None)
+    ckv = shd(ckv, None, "batch", "pages", None, None)
+    return {"k": kv, "v": kv, "ck": ckv, "cv": ckv}
+
+
+def decode_step(params, state, cfg, dims: Dims, *, token=None, embed=None,
+                pos=None):
+    h = jnp.take(params["dec_embed"], token[:, None], axis=0).astype(dims.compute_dtype)
+    bsz = h.shape[0]
+    att = cfg.attention
+    posv = jnp.full((bsz, 1), pos, jnp.int32)
+    sin, cos = L.rope_angles(posv, att.head_dim, att.rope_theta)
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc, ck, cv = xs
+        h, (kc, vc) = B.apply_attn(lp["self"], h, dims, sin=sin, cos=cos,
+                                   causal=True, mode="decode",
+                                   cache=(kc, vc), pos=pos)
+        h = B.apply_cross_attn(lp["cross"], h, dims, kv=(ck, cv), mode="decode")
+        h = B.apply_mlp(lp["mlp"], h, dims, seq_shard=False)
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h,
+        (params["dec_layers"], state["k"], state["v"], state["ck"], state["cv"]))
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = LS.logits_for(h[:, 0], params["lm_head"], cfg.vocab_size)
+    return logits, {"k": ks, "v": vs, "ck": state["ck"], "cv": state["cv"]}
+
+
+def decode_state_specs(cfg, dims: Dims) -> dict:
+    kv = (None, "batch", "pages", None, None)
+    return {"k": kv, "v": kv, "ck": kv, "cv": kv}

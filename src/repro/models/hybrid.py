@@ -1,0 +1,227 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared-weight attention(+MLP)
+block applied every `attn_every` layers.
+
+81 blocks = 13 groups of [5 mamba + shared-attn] + 3 trailing mamba.
+Scan structure: outer scan over groups (mamba params stacked [G, per, ...]),
+shared block closed over; trailing mamba scanned separately.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import loss as LS
+from repro.models.dims import Dims
+from repro.parallel import shd
+
+
+def _split(cfg):
+    groups = cfg.n_layers // cfg.attn_every
+    per = cfg.attn_every - 1
+    tail = cfg.n_layers - groups * cfg.attn_every
+    return groups, per, tail
+
+
+def init(rng, cfg, dims: Dims):
+    groups, per, tail = _split(cfg)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    k_embed, k_g, k_t, k_a, k_m, k_h = jax.random.split(rng, 6)
+
+    def one_mamba(k):
+        return B.init_mamba(k, dims, out_scale)
+
+    gk = jax.random.split(k_g, groups * per).reshape(groups, per, -1)
+    p = {
+        "embed": B._norm(k_embed, (dims.vocab, cfg.d_model), dims.param_dtype),
+        "groups": jax.vmap(jax.vmap(one_mamba))(gk),
+        "shared": {
+            "attn": B.init_attn(k_a, dims, out_scale=out_scale),
+            "mlp": B.init_mlp(k_m, cfg.d_model, cfg.d_ff, dims, out_scale),
+        },
+        "final_ln": jnp.ones((cfg.d_model,), dims.param_dtype),
+        "lm_head": B._norm(k_h, (cfg.d_model, dims.vocab), dims.param_dtype),
+    }
+    if tail:
+        p["tail"] = jax.vmap(one_mamba)(jax.random.split(k_t, tail))
+    return p
+
+
+def param_specs(cfg, dims: Dims) -> dict:
+    groups, per, tail = _split(cfg)
+    m2 = jax.tree.map(lambda s: ("stack", "stack") + tuple(s), B.mamba_specs(),
+                      is_leaf=lambda x: isinstance(x, tuple))
+    m1 = jax.tree.map(lambda s: ("stack",) + tuple(s), B.mamba_specs(),
+                      is_leaf=lambda x: isinstance(x, tuple))
+    specs = {
+        "embed": ("vocab", "fsdp"),
+        "groups": m2,
+        "shared": {"attn": B.attn_specs(dims), "mlp": B.mlp_specs()},
+        "final_ln": (None,),
+        "lm_head": (None, "vocab"),
+    }
+    if tail:
+        specs["tail"] = m1
+    return specs
+
+
+def _rope(cfg, bsz, seq, offset=0):
+    att = cfg.attention
+    pos = jnp.broadcast_to(offset + jnp.arange(seq)[None, :], (bsz, seq))
+    return L.rope_angles(pos, att.head_dim, att.rope_theta)
+
+
+def forward(params, cfg, dims: Dims, *, tokens=None, embeds=None,
+            positions=None, mode: str = "train"):
+    groups, per, tail = _split(cfg)
+    h = (embeds.astype(dims.compute_dtype) if embeds is not None
+         else jnp.take(params["embed"], tokens, axis=0).astype(dims.compute_dtype))
+    bsz, seq = h.shape[:2]
+    h = shd(h, "batch", "seq", None)
+    sin, cos = _rope(cfg, bsz, seq)
+    collect = mode == "prefill"
+
+    def group_body(carry, gp):
+        h = carry
+
+        def inner(c, lp):
+            c, st = B.apply_mamba(lp, c, dims, return_state=collect)
+            return c, (st if collect else None)
+
+        if mode == "train":
+            # per-layer remat INSIDE the group: otherwise the rematerialized
+            # forward keeps all `per` mamba layers' SSD intermediates live at
+            # once during the group's backward (perf log H3)
+            inner = jax.checkpoint(
+                inner, policy=jax.checkpoint_policies.nothing_saveable)
+        h, mstates = jax.lax.scan(inner, h, gp)
+        h, kv = B.apply_attn(params["shared"]["attn"], h, dims, sin=sin,
+                             cos=cos, causal=True, mode=mode)
+        h = B.apply_mlp(params["shared"]["mlp"], h, dims)
+        ys = {}
+        if collect:
+            ys = {"mamba": mstates,
+                  "k": kv[0].astype(dims.compute_dtype),
+                  "v": kv[1].astype(dims.compute_dtype)}
+        return h, ys
+
+    if mode == "train":
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, gys = jax.lax.scan(group_body, h, params["groups"])
+
+    tail_states = None
+    if tail:
+        def tbody(c, lp):
+            c, st = B.apply_mamba(lp, c, dims, return_state=collect)
+            return c, (st if collect else None)
+        if mode == "train":
+            tbody = jax.checkpoint(
+                tbody, policy=jax.checkpoint_policies.nothing_saveable)
+        h, tail_states = jax.lax.scan(tbody, h, params["tail"])
+
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    states = None
+    if collect:
+        states = {"groups_mamba": gys["mamba"], "k": gys["k"], "v": gys["v"],
+                  "tail_mamba": tail_states}
+    return h, states
+
+
+def train_loss(params, batch, cfg, dims: Dims):
+    h, _ = forward(params, cfg, dims, tokens=batch.get("tokens"),
+                   embeds=batch.get("embeds"), mode="train")
+    loss, metrics = LS.lm_loss(h, params["lm_head"], batch["labels"],
+                               logical_vocab=cfg.vocab_size)
+    return loss, metrics
+
+
+def prefill(params, batch, cfg, dims: Dims):
+    h, states = forward(params, cfg, dims, tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"), mode="prefill")
+    logits = LS.logits_for(h[:, -1], params["lm_head"], cfg.vocab_size)
+    states = dict(states)
+    for key in ("k", "v"):
+        states[key] = shd(states[key], None, "batch", "pages", None, None)
+    return logits, states
+
+
+def init_decode_state(cfg, dims: Dims, batch: int, kv_len: int):
+    groups, per, tail = _split(cfg)
+    one = B.mamba_state_shapes(dims, batch)
+    att = cfg.attention
+    kv = jnp.zeros((groups, batch, kv_len, dims.n_kv, att.head_dim),
+                   dims.compute_dtype)
+    kv = shd(kv, None, "batch", "pages", None, None)
+    state = {
+        "groups_mamba": jax.tree.map(
+            lambda z: jnp.zeros((groups, per) + z.shape, z.dtype), one),
+        "k": kv, "v": kv,
+        "tail_mamba": jax.tree.map(
+            lambda z: jnp.zeros((tail,) + z.shape, z.dtype), one) if tail else None,
+    }
+    return state
+
+
+def decode_step(params, state, cfg, dims: Dims, *, token=None, embed=None,
+                pos=None):
+    groups, per, tail = _split(cfg)
+    h = (embed[:, None, :].astype(dims.compute_dtype) if embed is not None
+         else jnp.take(params["embed"], token[:, None], axis=0).astype(dims.compute_dtype))
+    bsz = h.shape[0]
+    att = cfg.attention
+    posv = jnp.full((bsz, 1), pos, jnp.int32)
+    sin, cos = L.rope_angles(posv, att.head_dim, att.rope_theta)
+
+    def group_body(carry, xs):
+        h = carry
+        gp, mst, kc, vc = xs
+
+        def inner(c, x2):
+            lp, st = x2
+            c, st = B.apply_mamba_decode(lp, c, dims, st)
+            return c, st
+
+        h, mst = jax.lax.scan(inner, h, (gp, mst))
+        h, (kc, vc) = B.apply_attn(params["shared"]["attn"], h, dims, sin=sin,
+                                   cos=cos, causal=True, mode="decode",
+                                   cache=(kc, vc), pos=pos)
+        h = B.apply_mlp(params["shared"]["mlp"], h, dims, seq_shard=False)
+        return h, (mst, kc, vc)
+
+    h, (gm, ks, vs) = jax.lax.scan(
+        group_body, h,
+        (params["groups"], state["groups_mamba"], state["k"], state["v"]))
+
+    tm = state["tail_mamba"]
+    if tail:
+        def tbody(c, x2):
+            lp, st = x2
+            c, st = B.apply_mamba_decode(lp, c, dims, st)
+            return c, st
+        h, tm = jax.lax.scan(tbody, h, (params["tail"], state["tail_mamba"]))
+
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = LS.logits_for(h[:, 0], params["lm_head"], cfg.vocab_size)
+    return logits, {"groups_mamba": gm, "k": ks, "v": vs, "tail_mamba": tm}
+
+
+def decode_state_specs(cfg, dims: Dims) -> dict:
+    groups, per, tail = _split(cfg)
+    m1 = {
+        "ssd": ("stack", "batch", "heads", None, None),
+        "conv_x": ("stack", "batch", "ff", None),
+        "conv_B": ("stack", "batch", None, None),
+        "conv_C": ("stack", "batch", None, None),
+    }
+    m2 = {k: ("stack",) + tuple(v) for k, v in m1.items()}
+    kv = (None, "batch", "pages", None, None)
+    specs = {"groups_mamba": m2, "k": kv, "v": kv}
+    if tail:
+        specs["tail_mamba"] = m1
+    else:
+        specs["tail_mamba"] = None
+    return specs

@@ -1,0 +1,341 @@
+"""Core layers: RMSNorm, RoPE/M-RoPE, GQA attention (chunked online-softmax),
+gated MLP, expert-parallel MoE (sort-based capacity dispatch), Mamba2 SSD.
+
+All functions are pure; sharding is annotated via logical axes
+(:func:`repro.parallel.shd`) and resolves to no-ops without a mesh context.
+Compute happens in ``dims.compute_dtype`` with fp32 softmax/norm accumulators.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.dims import Dims
+from repro.parallel import shd
+
+# --------------------------------------------------------------------- norms
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float, n: Optional[int] = None) -> jax.Array:
+    """RMSNorm with an explicit logical divisor `n` (padded channels are zero,
+    so summing over the padded dim but dividing by the logical count keeps the
+    math identical to the unpadded model)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    denom = n if n is not None else x.shape[-1]
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / denom
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections: Optional[tuple] = None) -> tuple[jax.Array, jax.Array]:
+    """sin/cos tables. positions: [B, S] or [3, B, S] for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency channels are split into
+    (t, h, w) sections; section i uses position stream i.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 3:
+        assert mrope_sections is not None and sum(mrope_sections) == half
+        sec_id = jnp.repeat(jnp.arange(3), jnp.array(mrope_sections),
+                            total_repeat_length=half)            # [half]
+        pos = positions.astype(jnp.float32)                       # [3,B,S]
+        angles3 = pos[..., None] * inv_freq[None, None, None, :]  # [3,B,S,half]
+        onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)     # [half,3]
+        angles = jnp.einsum("tbsh,ht->bsh", angles3, onehot)
+    else:
+        pos = positions.astype(jnp.float32)                       # [B,S]
+        angles = pos[..., None] * inv_freq[None, None, :]         # [B,S,half]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [B, S, H, D]; sin/cos: [B, S, D/2]. Split-half convention."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def _expand_kv(k: jax.Array, group: int) -> jax.Array:
+    """[B,S,Hkv,D] -> [B,S,Hkv*group,D] by repeating each kv head."""
+    if group == 1:
+        return k
+    b, s, hkv, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, group, d))
+    return k.reshape(b, s, hkv * group, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_block: int = 1024, kv_block: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """Memory-bounded GQA attention: online softmax over KV blocks, scanned
+    over Q blocks. KV stays UNEXPANDED [B,Skv,Hkv,D] (perf log H2: no
+    repeated-KV materialization); q heads are grouped [B,Sq,Hkv,G,D].
+    Pure-jnp; the XLA dry-run path and the Pallas flash kernel's oracle.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    assert sq % q_block == 0 and skv % kv_block == 0
+    scale = 1.0 / math.sqrt(d)
+    nq, nk = sq // q_block, skv // kv_block
+
+    # [nq,B,Hkv,G,qb,D] / [nk,B,Hkv,kb,D]
+    qr = q.reshape(b, nq, q_block, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, kv_block, hkv, d).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kv_block, hkv, d).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk
+        qblk = qblk.astype(jnp.float32) * scale
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk,
+                           kblk.astype(jnp.float32))
+            if causal:
+                qpos = q_offset + qi * q_block + jnp.arange(q_block)
+                kpos = ki * kv_block + jnp.arange(kv_block)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # [nq,B,Hkv,G,qb,D] -> [B,Sq,Hq,D]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, group: int) -> jax.Array:
+    """Single-token attention against a (page-sharded) dense KV cache.
+
+    q: [B,1,Hq,D]; caches: [B,Smax,Hkv,D] sharded over 'pages' on Smax. KV is
+    never head-expanded (H2): q is grouped to [B,Hkv,G,D] so the contraction
+    leaves the cache sharding untouched; GSPMD reduces the sharded-Smax
+    softmax with small [B,Hkv,G] stat + [B,Hkv,G,D] partial-sum all-reduces
+    (the flash-decoding combine).
+    """
+    b, _, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qr = q[:, 0].reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.arange(smax)[None, None, None, :] < cur_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------- dense  MLP
+
+def eins(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """einsum with the accumulator/result pinned to a's dtype so GSPMD's
+    partial-sum collectives move bf16, not f32 (perf log H1)."""
+    return jnp.einsum(spec, a, b.astype(a.dtype),
+                      preferred_element_type=a.dtype)
+
+
+def gated_mlp(x: jax.Array, wi: jax.Array, wg: jax.Array, wd: jax.Array) -> jax.Array:
+    """SwiGLU MLP. x: [B,S,D]; wi/wg: [D,F] ('ff'-sharded); wd: [F,D]."""
+    h = eins("bsd,df->bsf", x, wi)
+    g = eins("bsd,df->bsf", x, wg)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    h = shd(h, "batch", None, "ff")
+    return eins("bsf,fd->bsd", h, wd)
+
+
+# ---------------------------------------------------------------------- MoE
+
+def moe_route(x_flat: jax.Array, wr: jax.Array, top_k: int):
+    """Router: returns (expert_idx [T,k], weights [T,k] fp32, probs [T,E])."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return idx, weights, probs
+
+
+def moe_positions(expert_idx: jax.Array, n_experts: int, capacity: int):
+    """Sort-based intra-expert slot assignment (no [T,E,C] one-hots).
+
+    expert_idx: [T, k] int32. Returns slot [T, k] (position within expert,
+    >= capacity means dropped) — the MegaBlocks-style dispatch adapted to
+    static shapes for XLA.
+    """
+    t, k = expert_idx.shape
+    flat = expert_idx.reshape(-1)                                # [T*k]
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    # start offset of each expert segment in the sorted order
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos_sorted = jnp.arange(t * k) - starts[sorted_e]
+    slot = jnp.zeros_like(flat).at[order].set(pos_sorted)
+    return slot.reshape(t, k)
+
+
+def moe_apply_local(x_flat: jax.Array, expert_idx: jax.Array, weights: jax.Array,
+                    slot: jax.Array, we_i: jax.Array, we_g: jax.Array,
+                    we_o: jax.Array, *, capacity: int, expert_offset: int):
+    """Compute `E_loc` experts' contribution for locally-resident tokens.
+
+    x_flat [T,D]; we_*: [E_loc, D, F] / [E_loc, F, D]. Tokens routed to
+    non-local experts (or beyond capacity) contribute zero here; the caller
+    psums across the expert-parallel axis.
+    """
+    t, d = x_flat.shape
+    e_loc = we_i.shape[0]
+    k = expert_idx.shape[1]
+    local_e = expert_idx - expert_offset                        # [T,k]
+    valid = (local_e >= 0) & (local_e < e_loc) & (slot < capacity)
+    e_idx = jnp.where(valid, local_e, 0)
+    s_idx = jnp.where(valid, slot, capacity - 1)
+    # scatter tokens into capacity buffers [E_loc, C, D]
+    buf = jnp.zeros((e_loc, capacity, d), x_flat.dtype)
+    tok = jnp.broadcast_to(x_flat[:, None, :], (t, k, d))
+    upd = jnp.where(valid[..., None], tok, 0)
+    buf = buf.at[e_idx.reshape(-1), s_idx.reshape(-1)].add(
+        upd.reshape(-1, d), mode="drop")
+    # expert FFN, batched over local experts
+    h = eins("ecd,edf->ecf", buf, we_i)
+    g = eins("ecd,edf->ecf", buf, we_g)
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    out = eins("ecf,efd->ecd", h, we_o)
+    # gather back, weighted
+    picked = out[e_idx.reshape(-1), s_idx.reshape(-1)].reshape(t, k, d)
+    picked = picked * (weights.astype(picked.dtype)[..., None]
+                       * valid[..., None].astype(picked.dtype))
+    return picked.sum(axis=1)                                   # [T, D]
+
+
+def moe_aux_loss(probs: jax.Array, expert_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch/GShard load-balance loss: E * sum_e f_e * p_e."""
+    t = probs.shape[0]
+    f = jnp.zeros((n_experts,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(expert_idx.size, 1)
+    p = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+# -------------------------------------------------------------------- mamba2
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Causal depthwise conv over the sequence. x: [B,S,C]; w: [C,W]."""
+    width = w.shape[-1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        shift = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B_in: jax.Array,
+                C_in: jax.Array, D_res: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Mamba2 SSD (state-space duality), chunked.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus, >0); A: [H] (negative);
+    B_in/C_in: [B,S,N] (single group); D_res: [H].
+    Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    b, s, h, p = x.shape
+    n = B_in.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0
+    nc = s // l
+    xc = x.reshape(b, nc, l, h, p)
+    dtc = dt.reshape(b, nc, l, h).astype(jnp.float32)
+    bc = B_in.reshape(b, nc, l, n).astype(jnp.float32)
+    cc = C_in.reshape(b, nc, l, n).astype(jnp.float32)
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]        # [B,nc,L,H] (<0)
+    cum = jnp.cumsum(dA, axis=2)                                 # within-chunk
+    total = cum[:, :, -1:, :]                                    # [B,nc,1,H]
+    dtx = (dtc[..., None] * xc.astype(jnp.float32))              # [B,nc,L,H,P]
+
+    # ---- intra-chunk (quadratic within chunk, causal-masked decay)
+    # scores[b,c,i,j,h] = C_i . B_j * exp(cum_i - cum_j) for j <= i
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)                   # [B,nc,L,L]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,L,L,H]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    w_ij = jnp.where(mask[None, None, :, :, None], cb[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, dtx)
+
+    # ---- inter-chunk: end-of-chunk states, then a sequential scan over chunks
+    decay_to_end = jnp.exp(total - cum)                          # [B,nc,L,H]
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn", decay_to_end, bc, dtx)
+
+    chunk_decay = jnp.exp(total[:, :, 0, :])                     # [B,nc,H]
+
+    def chunk_step(hprev, inp):
+        st, dec = inp                                            # [B,H,P,N], [B,H]
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+    hlast, hprevs = jax.lax.scan(
+        chunk_step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                     # [B,nc,H,P,N]
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", cc, jnp.exp(cum), hprevs)
+
+    y = y_intra + y_inter + D_res.astype(jnp.float32)[None, None, None, :, None] * \
+        xc.astype(jnp.float32)
+    return y.reshape(b, s, h, p).astype(x.dtype), hlast
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, B_in: jax.Array,
+                    C_in: jax.Array, D_res: jax.Array, state: jax.Array):
+    """One-token SSD recurrence. x:[B,H,P]; dt:[B,H]; B_in/C_in:[B,N];
+    state:[B,H,P,N] fp32. Returns (y [B,H,P], new_state)."""
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32)[None, :])           # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dtf, B_in.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    new_state = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C_in.astype(jnp.float32), new_state)
+    y = y + D_res.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), new_state
+
+
+def gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float,
+                  n: Optional[int] = None) -> jax.Array:
+    """Mamba2 output norm: RMSNorm(y * silu(z))."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    denom = n if n is not None else yf.shape[-1]
+    var = jnp.sum(yf * yf, axis=-1, keepdims=True) / denom
+    return (yf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(y.dtype)

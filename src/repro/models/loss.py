@@ -1,0 +1,58 @@
+"""Chunked LM cross-entropy: never materializes [B, S, V] logits.
+
+Scans over sequence blocks; per block computes fp32 logits against the
+vocab-sharded head, a numerically-stable logsumexp, the label logit, and a
+z-loss. Padded vocab columns are masked to -inf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(h: jax.Array, head: jax.Array, labels: jax.Array, *,
+            logical_vocab: int, block: int = 512, z_loss: float = 1e-4):
+    """h: [B,S,D]; head: [D,V_pad] ('vocab'-sharded); labels: [B,S] (-1 = pad).
+
+    Returns (mean_loss fp32 scalar, metrics dict).
+    """
+    b, s, d = h.shape
+    block = min(block, s)
+    assert s % block == 0
+    nb = s // block
+    vpad = head.shape[-1]
+    vmask = (jnp.arange(vpad) < logical_vocab)
+
+    hr = h.reshape(b, nb, block, d).transpose(1, 0, 2, 3)
+    lr = labels.reshape(b, nb, block).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        tot, zl_tot, cnt = carry
+        hb, lb = inp
+        logits = jnp.einsum("bsd,dv->bsv", hb, head.astype(hb.dtype))
+        logits = logits.astype(jnp.float32)
+        logits = jnp.where(vmask[None, None, :], logits, -jnp.inf)
+        m = jax.lax.stop_gradient(logits.max(-1))
+        lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), -1))
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - ll) * mask)
+        zl_tot = zl_tot + jnp.sum(jnp.square(lse) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, zl_tot, cnt), None
+
+    (tot, zl_tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), (hr, lr))
+    cnt = jnp.maximum(cnt, 1.0)
+    xent = tot / cnt
+    loss = xent + z_loss * zl_tot / cnt
+    return loss, {"xent": xent, "tokens": cnt}
+
+
+def logits_for(h_last: jax.Array, head: jax.Array, logical_vocab: int) -> jax.Array:
+    """Final-position logits. h_last: [B,D] -> [B,V_pad] (padded cols -inf)."""
+    logits = jnp.einsum("bd,dv->bv", h_last, head.astype(h_last.dtype))
+    logits = logits.astype(jnp.float32)
+    vmask = jnp.arange(head.shape[-1]) < logical_vocab
+    return jnp.where(vmask[None, :], logits, -jnp.inf)

@@ -1,0 +1,102 @@
+"""Mamba2 (SSD) family: attention-free LM. Covers mamba2-130m.
+
+No KV cache: decode state = per-layer (ssd state, conv tails). The KV-page
+refresh mechanism (SARP analogue) is inapplicable here — see DESIGN §5.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import loss as LS
+from repro.models.dims import Dims
+from repro.parallel import shd
+
+
+def init(rng, cfg, dims: Dims):
+    k_embed, k_layers = jax.random.split(rng)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    layers = jax.vmap(lambda k: B.init_mamba(k, dims, out_scale))(
+        jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": B._norm(k_embed, (dims.vocab, cfg.d_model), dims.param_dtype),
+        "layers": layers,
+        "final_ln": jnp.ones((cfg.d_model,), dims.param_dtype),
+    }
+
+
+def param_specs(cfg, dims: Dims) -> dict:
+    lp = jax.tree.map(lambda s: ("stack",) + tuple(s), B.mamba_specs(),
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": ("vocab", "fsdp"), "layers": lp, "final_ln": (None,)}
+
+
+def forward(params, cfg, dims: Dims, *, tokens=None, embeds=None,
+            positions=None, mode: str = "train"):
+    h = (embeds.astype(dims.compute_dtype) if embeds is not None
+         else jnp.take(params["embed"], tokens, axis=0).astype(dims.compute_dtype))
+    h = shd(h, "batch", "seq", None)
+    collect = mode == "prefill"
+
+    def body(carry, lp):
+        h = carry
+        h, st = B.apply_mamba(lp, h, dims, return_state=collect)
+        return h, (st if collect else None)
+
+    if mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, states = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    return h, states if collect else None
+
+
+def train_loss(params, batch, cfg, dims: Dims):
+    h, _ = forward(params, cfg, dims, tokens=batch.get("tokens"),
+                   embeds=batch.get("embeds"), mode="train")
+    loss, metrics = LS.lm_loss(h, params["embed"].T, batch["labels"],
+                               logical_vocab=cfg.vocab_size)
+    return loss, metrics
+
+
+def prefill(params, batch, cfg, dims: Dims):
+    h, states = forward(params, cfg, dims, tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"), mode="prefill")
+    logits = LS.logits_for(h[:, -1], params["embed"].T, cfg.vocab_size)
+    return logits, states
+
+
+def init_decode_state(cfg, dims: Dims, batch: int, kv_len: int):
+    one = B.mamba_state_shapes(dims, batch)
+    return jax.tree.map(
+        lambda z: jnp.zeros((cfg.n_layers,) + z.shape, z.dtype), one)
+
+
+def decode_step(params, state, cfg, dims: Dims, *, token=None, embed=None,
+                pos=None):
+    h = (embed[:, None, :].astype(dims.compute_dtype) if embed is not None
+         else jnp.take(params["embed"], token[:, None], axis=0).astype(dims.compute_dtype))
+
+    def body(carry, xs):
+        h = carry
+        lp, st = xs
+        h, st = B.apply_mamba_decode(lp, h, dims, st)
+        return h, st
+
+    h, states = jax.lax.scan(body, h, (params["layers"], state))
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = LS.logits_for(h[:, 0], params["embed"].T, cfg.vocab_size)
+    return logits, states
+
+
+def decode_state_specs(cfg, dims: Dims) -> dict:
+    return {
+        "ssd": ("stack", "batch", "heads", None, None),
+        "conv_x": ("stack", "batch", "ff", None),
+        "conv_B": ("stack", "batch", None, None),
+        "conv_C": ("stack", "batch", None, None),
+    }

@@ -1,0 +1,188 @@
+"""Decoder-only transformer family: dense / MoE / VLM-backbone.
+
+Layer stack is a single `lax.scan` over stacked params (fast compiles, FSDP
+all-gather per layer, PP-ready). Covers: qwen2-vl-72b, llama4-maverick,
+qwen3-moe, internlm2, qwen2.5-14b/3b, qwen2-0.5b.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import loss as LS
+from repro.models.dims import Dims
+from repro.parallel import shd
+
+
+def _rope_inputs(cfg, dims, positions, bsz, seq):
+    att = cfg.attention
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, :], (bsz, seq))
+        if att.mrope:
+            pos = jnp.broadcast_to(pos[None], (3, bsz, seq))
+        positions = pos
+    return L.rope_angles(positions, att.head_dim, att.rope_theta,
+                         att.mrope_sections if att.mrope else None)
+
+
+def init(rng, cfg, dims: Dims):
+    nl = cfg.n_layers
+    out_scale = 0.02 / math.sqrt(2 * nl)
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+
+    def one_layer(key):
+        ka, kb = jax.random.split(key)
+        p = {"attn": B.init_attn(ka, dims, out_scale=out_scale)}
+        if cfg.is_moe:
+            p["moe"] = B.init_moe(kb, dims, out_scale)
+        else:
+            p["mlp"] = B.init_mlp(kb, cfg.d_model, cfg.d_ff, dims, out_scale)
+        return p
+
+    params = {
+        "embed": B._norm(k_embed, (dims.vocab, cfg.d_model), dims.param_dtype),
+        "layers": jax.vmap(one_layer)(jax.random.split(k_layers, nl)),
+        "final_ln": jnp.ones((cfg.d_model,), dims.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = B._norm(k_head, (cfg.d_model, dims.vocab),
+                                    dims.param_dtype)
+    return params
+
+
+def param_specs(cfg, dims: Dims) -> dict:
+    lp = {"attn": B.attn_specs(dims)}
+    if cfg.is_moe:
+        lp["moe"] = B.moe_specs(dims)
+    else:
+        lp["mlp"] = B.mlp_specs()
+    # prepend the scanned layer axis (never sharded)
+    lp = jax.tree.map(lambda s: ("stack",) + tuple(s), lp,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    specs = {"embed": ("vocab", "fsdp"), "layers": lp, "final_ln": (None,)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (None, "vocab")
+    return specs
+
+
+def _head(params):
+    return params.get("lm_head", None)
+
+
+def _head_matrix(params, dims):
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T
+
+
+def _embed_in(params, dims, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(dims.compute_dtype)
+    return jnp.take(params["embed"], tokens, axis=0).astype(dims.compute_dtype)
+
+
+def forward(params, cfg, dims: Dims, *, tokens=None, embeds=None,
+            positions=None, mode: str = "train"):
+    """Full-sequence forward. Returns (h_final, aux_loss, caches_or_None)."""
+    h = _embed_in(params, dims, tokens, embeds)
+    bsz, seq = h.shape[:2]
+    h = shd(h, "batch", "seq", None)
+    sin, cos = _rope_inputs(cfg, dims, positions, bsz, seq)
+    collect_kv = mode == "prefill"
+
+    def body(carry, lp):
+        h = carry
+        h, kv = B.apply_attn(lp["attn"], h, dims, sin=sin, cos=cos,
+                             causal=True, mode=mode)
+        if cfg.is_moe:
+            h, aux, dropped = B.apply_moe(lp["moe"], h, dims)
+        else:
+            h = B.apply_mlp(lp["mlp"], h, dims)
+            aux = dropped = jnp.float32(0)
+        ys = {"aux": aux, "dropped": dropped}
+        if collect_kv:
+            ys["k"] = kv[0].astype(dims.compute_dtype)
+            ys["v"] = kv[1].astype(dims.compute_dtype)
+        return h, ys
+
+    if mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, ys = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    caches = {"k": ys["k"], "v": ys["v"]} if collect_kv else None
+    return h, jnp.sum(ys["aux"]), caches
+
+
+def train_loss(params, batch, cfg, dims: Dims):
+    h, aux, _ = forward(params, cfg, dims,
+                        tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                        positions=batch.get("positions"), mode="train")
+    loss, metrics = LS.lm_loss(h, _head_matrix(params, dims), batch["labels"],
+                               logical_vocab=cfg.vocab_size)
+    metrics["aux"] = aux
+    return loss + aux, metrics
+
+
+def prefill(params, batch, cfg, dims: Dims):
+    """Returns (last-token logits [B,V], decode state)."""
+    h, _, caches = forward(params, cfg, dims,
+                           tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                           positions=batch.get("positions"), mode="prefill")
+    logits = LS.logits_for(h[:, -1], _head_matrix(params, dims), cfg.vocab_size)
+    caches = jax.tree.map(
+        lambda c: shd(c, None, "batch", "pages", None, None), caches)
+    return logits, caches
+
+
+def init_decode_state(cfg, dims: Dims, batch: int, kv_len: int):
+    att = cfg.attention
+    shape = (cfg.n_layers, batch, kv_len, dims.n_kv, att.head_dim)
+    z = jnp.zeros(shape, dims.compute_dtype)
+    z = shd(z, None, "batch", "pages", None, None)
+    return {"k": z, "v": z}
+
+
+def decode_step(params, state, cfg, dims: Dims, *, token=None, embed=None,
+                pos=None):
+    """One-token decode. token [B] / embed [B,D]; pos: scalar current length.
+    Returns (logits [B,V], new state)."""
+    if embed is not None:
+        h = embed[:, None, :].astype(dims.compute_dtype)
+    else:
+        h = jnp.take(params["embed"], token[:, None], axis=0).astype(dims.compute_dtype)
+    bsz = h.shape[0]
+    att = cfg.attention
+    posv = jnp.full((bsz, 1), pos, jnp.int32)
+    if att.mrope:
+        posv = jnp.broadcast_to(posv[None], (3, bsz, 1))
+    sin, cos = L.rope_angles(posv, att.head_dim, att.rope_theta,
+                             att.mrope_sections if att.mrope else None)
+
+    def body(carry, xs):
+        h = carry
+        lp, kc, vc = xs
+        h, (kc, vc) = B.apply_attn(lp["attn"], h, dims, sin=sin, cos=cos,
+                                   causal=True, mode="decode",
+                                   cache=(kc, vc), pos=pos)
+        if cfg.is_moe:
+            h, _, _ = B.apply_moe(lp["moe"], h, dims, seq_shard=False)
+        else:
+            h = B.apply_mlp(lp["mlp"], h, dims, seq_shard=False)
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], state["k"], state["v"]))
+    h = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = LS.logits_for(h[:, 0], _head_matrix(params, dims), cfg.vocab_size)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_state_specs(cfg, dims: Dims) -> dict:
+    kv = (None, "batch", "pages", None, None)
+    return {"k": kv, "v": kv}

@@ -1,0 +1,21 @@
+from repro.parallel.sharding import (
+    LOGICAL_RULES_SINGLE_POD,
+    LOGICAL_RULES_MULTI_POD,
+    axis_size,
+    logical_to_spec,
+    set_sharding_context,
+    sharding_context,
+    shd,
+    current_mesh,
+)
+
+__all__ = [
+    "LOGICAL_RULES_SINGLE_POD",
+    "LOGICAL_RULES_MULTI_POD",
+    "axis_size",
+    "logical_to_spec",
+    "set_sharding_context",
+    "sharding_context",
+    "shd",
+    "current_mesh",
+]

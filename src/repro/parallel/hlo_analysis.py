@@ -1,0 +1,277 @@
+"""Loop-aware post-optimization HLO analysis: FLOPs, HBM bytes, collective
+wire bytes — the roofline instrument for the dry-run.
+
+Why not compiled.cost_analysis(): XLA's HloCostAnalysis visits a while body
+ONCE, so scanned layer stacks undercount by the trip count. XLA attaches
+`backend_config={"known_trip_count":{"n":...}}` to while ops, so this module
+parses the per-device HLO text, builds the computation call graph
+(while bodies x trip count, fusions x 1), and propagates multipliers.
+
+Accounting per instruction (with its computation's multiplier):
+  * flops: dot = 2 * prod(result) * contracted-dims; elementwise/reduce ops
+    approx = result elements (minor next to dots).
+  * HBM bytes: operands + result of *top-level* instructions (fusion bodies
+    are exempt — their I/O is counted at the fusion callsite, which is
+    exactly XLA's fused memory model).
+  * collectives: ring-model wire bytes (see _wire_bytes) — the compiled
+    module is the per-device program, so shapes are local shards.
+
+The compiled SPMD module is per-device; dividing per-device quantities by
+per-chip peak rates equals global/(chips x rate) under uniform SPMD.
+
+TPU v5e constants (per brief): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_OPCODE = re.compile(r"\s([a-z][\w\-]*)\(")
+_NAME = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count[\\"{:\s]+n[\\"\s:]+(\d+)')
+_CALLED = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_list(text: str) -> list[tuple[str, tuple]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt in _DTYPE_BYTES or dt in ("s32", "f32"):
+            shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+            out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes: list) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * _prod(sh) for dt, sh in shapes)
+
+
+def _prod(sh) -> int:
+    n = 1
+    for d in sh:
+        n *= d
+    return n
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 1
+
+
+def _wire_bytes(op: str, result_b: float, operand_b: float, g: int) -> float:
+    frac = (g - 1) / g if g > 1 else 0.0
+    if op == "all-gather":
+        return result_b * frac
+    if op == "all-reduce":
+        return 2.0 * result_b * frac
+    if op == "reduce-scatter":
+        return operand_b * frac
+    if op == "all-to-all":
+        return result_b * frac
+    return float(result_b)  # collective-permute crosses a link once
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota", "partition-id",
+    "replica-id", "reshape", "broadcast",
+}
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: dict = field(default_factory=dict)
+    collective_wire: dict = field(default_factory=dict)
+    dot_flops: float = 0.0
+    n_instructions: int = 0
+
+    def roofline(self) -> dict:
+        ct = self.flops / PEAK_FLOPS
+        mt = self.hbm_bytes / HBM_BW
+        lt = self.wire_bytes / ICI_BW
+        dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
+                  key=lambda kv: kv[1])
+        return {"compute_s": ct, "memory_s": mt, "collective_s": lt,
+                "dominant": dom[0], "bound_s": dom[1]}
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    # ---- pass 1: split into computations, collect instrs + call edges
+    comps: dict[str, list] = defaultdict(list)      # comp -> [instr dicts]
+    edges: list[tuple] = []                         # (caller, callee, trip, kind)
+    fusion_bodies: set = set()
+    reduce_bodies: set = set()
+    slicey_bodies: set = set()                      # comps containing DUS/DS
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        hdr = _COMP_HDR.match(raw)
+        if hdr:
+            cur = hdr.group(1)
+            if raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        nm = _NAME.match(raw)
+        if not nm:
+            continue
+        rhs = raw[nm.end():]
+        opm = _OPCODE.search(" " + rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        rtype = rhs[:max(opm.start() - 1, 0)].strip()
+        name = nm.group(1)
+        rec = {"op": op, "rtype": rtype, "name": name,
+               "args": rhs[opm.end():].split(")")[0], "line": raw}
+        comps[cur].append(rec)
+        if op == "while":
+            trip = 1
+            tm = _TRIP.search(raw)
+            if tm:
+                trip = int(tm.group(1))
+            for cm in _CALLED.finditer(raw):
+                edges.append((cur, cm.group(1), trip, "while"))
+        elif op == "fusion":
+            for cm in _CALLED.finditer(raw):
+                fusion_bodies.add(cm.group(1))
+                edges.append((cur, cm.group(1), 1, "fusion"))
+                rec["callee"] = cm.group(1)
+        elif op in ("reduce", "map", "scatter", "reduce-window", "sort",
+                    "select-and-scatter", "reduce-scatter", "all-reduce"):
+            for cm in _CALLED.finditer(raw):
+                reduce_bodies.add(cm.group(1))
+        if op in ("dynamic-update-slice", "dynamic-slice"):
+            slicey_bodies.add(cur)
+
+    # ---- pass 2: propagate multipliers through the call graph
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return HloAnalysis()
+    mult[entry] = 1.0
+    # call graph is a DAG; iterate to fixpoint (few levels deep)
+    for _ in range(64):
+        changed = False
+        seen: dict[str, float] = defaultdict(float)
+        for caller, callee, trip, kind in edges:
+            seen[callee] += mult[caller] * trip
+        for c, v in seen.items():
+            if abs(mult[c] - v) > 1e-9:
+                mult[c] = v
+                changed = True
+        if not changed:
+            break
+
+    # ---- pass 3: accounting
+    out = HloAnalysis()
+    for comp, instrs in comps.items():
+        m_ = mult.get(comp, 0.0)
+        if m_ == 0.0 or comp in reduce_bodies:
+            continue
+        in_fusion = comp in fusion_bodies
+        # local symbol table for operand shape resolution
+        sym: dict[str, list] = {}
+        for rec in instrs:
+            sym[rec["name"]] = _shape_list(rec["rtype"])
+        for rec in instrs:
+            op = rec["op"]
+            line = rec["line"]
+            rshapes = _shape_list(rec["rtype"])
+            rbytes = _bytes_of(rshapes)
+            relems = sum(_prod(sh) for _, sh in rshapes)
+            operands = re.findall(r"%([\w\.\-]+)", rec["args"])
+            obytes = sum(_bytes_of(sym.get(o, [])) for o in operands)
+            out.n_instructions += 1
+            # ---------------- flops
+            if op == "dot":
+                lhs = sym.get(operands[0], []) if operands else []
+                cdims = _CONTRACT.search(line)
+                contracted = 1
+                if cdims and lhs:
+                    _, lshape = lhs[0]
+                    for d in cdims.group(1).split(","):
+                        if d != "" and int(d) < len(lshape):
+                            contracted *= lshape[int(d)]
+                out.flops += m_ * 2.0 * relems * contracted
+                out.dot_flops += m_ * 2.0 * relems * contracted
+            elif op in ("convolution",):
+                out.flops += m_ * 2.0 * relems  # no convs expected; coarse
+            elif op not in _SKIP_BYTES_OPS and op not in _COLLECTIVES:
+                out.flops += m_ * relems
+            # ---------------- bytes (top-level only; fusion I/O at callsite).
+            # In-place slicing ops count slice traffic, not the whole buffer:
+            # XLA aliases DUS carries (scan) so only the slice hits HBM.
+            if not in_fusion and op not in _SKIP_BYTES_OPS \
+                    and not op.endswith("-done"):
+                big = max((_bytes_of(sym.get(o, [])) for o in operands),
+                          default=0)
+                if op == "dynamic-update-slice":
+                    out.hbm_bytes += m_ * 2 * max(obytes - big, 0)
+                elif op == "dynamic-slice":
+                    out.hbm_bytes += m_ * 2 * rbytes
+                elif op == "gather":
+                    out.hbm_bytes += m_ * 2 * rbytes
+                elif op == "fusion" and rec.get("callee") in slicey_bodies:
+                    if big == rbytes:   # in-place carry update (DUS pattern)
+                        out.hbm_bytes += m_ * 2 * max(obytes - big, 0)
+                    else:               # slice-read fusion (DS pattern)
+                        out.hbm_bytes += m_ * (2 * rbytes
+                                               + max(obytes - big, 0))
+                else:
+                    out.hbm_bytes += m_ * (obytes + rbytes)
+            # ---------------- collectives
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                rb = rbytes
+                if op.endswith("-start") and rec["rtype"].startswith("("):
+                    rb = rbytes / 2  # start tuples carry (operand, result)
+                g = _group_size(line)
+                wire = _wire_bytes(base, rb, obytes, g)
+                out.wire_bytes += m_ * wire
+                out.collective_counts[base] = (
+                    out.collective_counts.get(base, 0) + m_)
+                out.collective_wire[base] = (
+                    out.collective_wire.get(base, 0.0) + m_ * wire)
+    return out
+
+
+def roofline_terms(per_dev_flops: float, per_dev_bytes: float,
+                   per_dev_wire: float) -> dict:
+    ct = per_dev_flops / PEAK_FLOPS
+    mt = per_dev_bytes / HBM_BW
+    lt = per_dev_wire / ICI_BW
+    dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
+              key=lambda kv: kv[1])
+    return {"compute_s": ct, "memory_s": mt, "collective_s": lt,
+            "dominant": dom[0], "bound_s": dom[1]}

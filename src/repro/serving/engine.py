@@ -1,0 +1,157 @@
+"""Continuous-batching serving engine with refresh-aware KV maintenance.
+
+Per decode round:
+  1. admit queued requests into free sequence slots (continuous batching),
+  2. run one decode step for all active sequences (reads int8 pages + bf16
+     staging through the paged cache),
+  3. append the new K/V token (the "write" phase),
+  4. **maintenance window**: the DARP scheduler picks which page-bank-groups
+     to compress this round — avoiding groups the batch is attending to —
+     within the postpone/pull-in budget; when staging pressure hits the
+     red-line the engine force-compresses (the paper's budget-exhausted
+     forced refresh).
+
+Policies (mirrors the DRAM simulator):
+  all_bank    : stop-the-world — compress EVERYTHING when staging fills,
+  round_robin : fixed group order each round,
+  darp        : out-of-order + write-window parallelization.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import DarpScheduler, SchedulerPolicy
+from repro.kvcache import PagedKVCache, PagedKVConfig
+from repro.models.dims import Dims
+from repro.serving.paged_decode import paged_decode_forward
+
+
+@dataclass
+class Request:
+    prompt: list
+    max_new: int = 16
+    rid: int = 0
+    out: list = field(default_factory=list)
+    sid: int = -1
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 4
+    policy: SchedulerPolicy = SchedulerPolicy.DARP
+    refresh_interval: float = 4.0      # rounds between group maintenance
+    budget: int = 8
+    max_compress_per_round: int = 1
+    force_threshold: float = 0.75      # staging pressure red-line
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, dims: Dims, kv_cfg: PagedKVConfig,
+                 serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.dims = dims
+        self.cache = PagedKVCache(kv_cfg)
+        self.scfg = serve_cfg
+        self.sched = DarpScheduler(
+            kv_cfg.n_groups, serve_cfg.refresh_interval,
+            budget=serve_cfg.budget, policy=serve_cfg.policy)
+        self.queue: list[Request] = []
+        self.active: list[Request] = []
+        self.round = 0
+        self.stats = {"rounds": 0, "tokens": 0, "stall_rounds": 0,
+                      "maintenance_events": []}
+
+    # --------------------------------------------------------------- admit
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and len(self.active) < self.scfg.max_batch:
+            req = self.queue.pop(0)
+            req.sid = self.cache.new_seq()
+            # prefill: feed prompt tokens one at a time through decode path
+            # (reference engine; TPU path uses the chunked prefill graph)
+            for tok in req.prompt[:-1]:
+                self._single_token(req.sid, tok)
+            req.out = []
+            req._next = req.prompt[-1]
+            self.active.append(req)
+
+    def _single_token(self, sid: int, tok: int) -> None:
+        logits, k_new, v_new = paged_decode_forward(
+            self.params, self.cfg, self.dims, self.cache, [sid],
+            jnp.asarray([tok], jnp.int32))
+        ok = self.cache.append(sid, k_new[:, 0], v_new[:, 0])
+        if not ok:
+            self._force_compress()
+            assert self.cache.append(sid, k_new[:, 0], v_new[:, 0])
+
+    # ---------------------------------------------------------------- run
+    def step_round(self) -> int:
+        """One decode round for all active sequences. Returns tokens made."""
+        self._admit()
+        if not self.active:
+            return 0
+        sids = [r.sid for r in self.active]
+        toks = jnp.asarray([r._next for r in self.active], jnp.int32)
+        logits, k_new, v_new = paged_decode_forward(
+            self.params, self.cfg, self.dims, self.cache, sids, toks)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        # ---- write phase: append new K/V
+        for bi, r in enumerate(self.active):
+            ok = self.cache.append(r.sid, k_new[:, bi], v_new[:, bi])
+            if not ok:
+                self._force_compress()
+                assert self.cache.append(r.sid, k_new[:, bi], v_new[:, bi])
+            r.out.append(int(nxt[bi]))
+            r._next = int(nxt[bi])
+        # ---- maintenance window (DARP)
+        self._maintenance(sids)
+        # ---- retire
+        for r in list(self.active):
+            if len(r.out) >= r.max_new:
+                r.done = True
+                self.cache.release_seq(r.sid)
+                self.active.remove(r)
+        self.round += 1
+        self.stats["rounds"] += 1
+        self.stats["tokens"] += len(sids)
+        return len(sids)
+
+    def _maintenance(self, sids) -> None:
+        attending = [p for sid in sids for p in self.cache.pages_of(sid)[-2:]]
+        demand = self.cache.demand_by_group(attending)
+        pressure = self.cache.staging_pressure()
+        if pressure >= self.scfg.force_threshold:
+            self._force_compress()
+            return
+        picks = self.sched.select(
+            float(self.round), demand=demand, write_window=True,
+            max_issues=self.scfg.max_compress_per_round)
+        n = 0
+        for g in picks:
+            n += self.cache.compress_group(g)
+        if picks:
+            self.stats["maintenance_events"].append(
+                {"round": self.round, "groups": picks, "pages": n})
+
+    def _force_compress(self) -> None:
+        """Stop-the-world compression (budget exhausted / all_bank policy)."""
+        pages = self.cache.compressible_pages()
+        for p in pages:
+            self.cache.compress_page(p, forced=True)
+        self.stats["stall_rounds"] += 1
+
+    def run_until_done(self, max_rounds: int = 10_000) -> None:
+        r = 0
+        while (self.queue or self.active) and r < max_rounds:
+            self.step_round()
+            r += 1

@@ -1,0 +1,96 @@
+"""Decode forward pass over the paged quantized KV cache (reference path).
+
+The model's own decode_step uses a dense cache (dry-run path); the serving
+engine instead reads K/V through PagedKVCache (int8 pages + bf16 staging),
+which is what the SARP Pallas kernel accelerates on TPU. This module is the
+jnp reference implementation of that read path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache import PagedKVCache
+from repro.models import layers as L
+from repro.models.dims import Dims
+
+
+def _attend_one(q, k, v):
+    """q [H,Dh]; k/v [S,Hkv,Dh] -> [H,Dh] (GQA expand by repeat)."""
+    hq, dh = q.shape
+    s, hkv, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1) if group > 1 else k
+    vx = jnp.repeat(v, group, axis=1) if group > 1 else v
+    scores = jnp.einsum("hd,shd->hs", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) / math.sqrt(dh)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hs,shd->hd", p, vx.astype(jnp.float32))
+
+
+def paged_decode_forward(params, cfg, dims: Dims, cache: PagedKVCache,
+                         sids: Sequence[int], tokens: jax.Array):
+    """One decode round for the active sequences.
+
+    tokens: [B] next input token per active sequence. Returns
+    (logits [B, V], k_new [L, B, H_kv, Dh], v_new [L, B, H_kv, Dh]) —
+    the caller appends k/v_new into the cache afterwards.
+    """
+    att = cfg.attention
+    bsz = len(sids)
+    h = jnp.take(params["embed"], jnp.asarray(tokens)[:, None],
+                 axis=0).astype(dims.compute_dtype)
+    layers = params["layers"]
+    k_news, v_news = [], []
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda x: x[li], layers)
+        ap = lp["attn"]
+        x = L.rmsnorm(h, ap["ln"], cfg.norm_eps)
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"].astype(dt))
+        if "bq" in ap:
+            q = q + ap["bq"].astype(dt)
+            k = k + ap["bk"].astype(dt)
+            v = v + ap["bv"].astype(dt)
+        outs = []
+        for bi, sid in enumerate(sids):
+            pos = int(cache.seq_len[sid])
+            pv = jnp.full((1, 1), pos, jnp.int32)
+            sin, cos = L.rope_angles(pv, att.head_dim, att.rope_theta)
+            qb = L.apply_rope(q[bi:bi + 1], sin, cos)[0, 0]
+            kb = L.apply_rope(k[bi:bi + 1], sin, cos)[0, 0]
+            vb = v[bi, 0]
+            past_k, past_v = cache.gather_seq(sid, li, dims.compute_dtype)
+            k_all = jnp.concatenate([past_k, kb[None]], axis=0)
+            v_all = jnp.concatenate([past_v, vb[None]], axis=0)
+            outs.append(_attend_one(qb, k_all, v_all))
+        out = jnp.stack(outs).astype(dt)[:, None]              # [B,1,H,Dh]
+        y = jnp.einsum("bshk,hkd->bsd", out, ap["wo"].astype(dt))
+        h = h + y
+        # mlp
+        mp = lp["mlp"]
+        x2 = L.rmsnorm(h, mp["ln"], cfg.norm_eps)
+        h = h + L.gated_mlp(x2, mp["wi"], mp["wg"], mp["wd"])
+        # rope'd K is what lives in the cache
+        sinb, cosb = [], []
+        for sid in sids:
+            pv = jnp.full((1, 1), int(cache.seq_len[sid]), jnp.int32)
+            s_, c_ = L.rope_angles(pv, att.head_dim, att.rope_theta)
+            sinb.append(s_[0])
+            cosb.append(c_[0])
+        k_rope = L.apply_rope(k, jnp.stack(sinb), jnp.stack(cosb))
+        k_news.append(k_rope[:, 0])
+        v_news.append(v[:, 0])
+    hf = L.rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bd,dv->bv", hf[:, 0], head.astype(hf.dtype))
+    vmask = jnp.arange(head.shape[-1]) < cfg.vocab_size
+    logits = jnp.where(vmask[None, :], logits.astype(jnp.float32), -jnp.inf)
+    return logits, jnp.stack(k_news), jnp.stack(v_news)

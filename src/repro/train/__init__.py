@@ -1,0 +1,4 @@
+from repro.train.step import make_train_step, make_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["make_train_step", "make_state", "Trainer", "TrainerConfig"]

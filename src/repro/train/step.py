@@ -1,0 +1,69 @@
+"""Train-step builder: fwd+bwd (+ microbatched grad accumulation) + AdamW.
+
+Used both by the real CPU trainer (small configs) and the multi-pod dry-run
+(full configs, ShapeDtypeStructs only).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import get_model
+from repro.models.dims import Dims
+from repro.optim import OptConfig, apply_updates, init_opt
+
+
+def make_state(rng, cfg, dims: Dims, opt_cfg: OptConfig):
+    mod = get_model(cfg)
+    params = mod.init(rng, cfg, dims)
+    return {"params": params, "opt": init_opt(params, opt_cfg)}
+
+
+def make_train_step(cfg, dims: Dims, opt_cfg: OptConfig, *,
+                    accum: int = 1):
+    """Returns step(state, batch) -> (state, metrics). Pure (jit-able)."""
+    mod = get_model(cfg)
+
+    def loss_fn(params, batch):
+        loss, metrics = mod.train_loss(params, batch, cfg, dims)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(key, x):
+                if key == "positions":   # M-RoPE: [3, B, S] — batch axis 1
+                    r = x.reshape((x.shape[0], accum, x.shape[1] // accum)
+                                  + x.shape[2:])
+                    return jnp.moveaxis(r, 1, 0)
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            micro = {k: split(k, v) for k, v in batch.items()}
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, jnp.float32(0)),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {}
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,23 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.common.config import get_arch
+from repro.models.dims import make_dims
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced(name: str):
+    cfg = get_arch(name).reduced()
+    dims = make_dims(cfg, tp=1, param_dtype=jnp.float32,
+                     compute_dtype=jnp.float32)
+    return cfg, dims

@@ -1,0 +1,111 @@
+"""Paged quantized KV cache: roundtrips, invariants, refresh semantics."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kvcache import PagedKVCache, PagedKVConfig, quantize_page
+from repro.kvcache.paged import page_quant_error
+
+CFG = PagedKVConfig(n_layers=2, n_kv_heads=2, head_dim=8, page_size=4,
+                    n_pages=16, n_staging=8, n_groups=4, max_seqs=4,
+                    max_pages_per_seq=8, dtype=jnp.float32)
+
+RS = np.random.RandomState(0)
+
+
+def _tok(i):
+    return (jnp.asarray(RS.randn(CFG.n_layers, CFG.n_kv_heads, CFG.head_dim),
+                        jnp.float32) * 0.5)
+
+
+def test_append_gather_roundtrip_staged():
+    c = PagedKVCache(CFG)
+    sid = c.new_seq()
+    toks = [_tok(i) for i in range(6)]
+    for t in toks:
+        assert c.append(sid, t, t * 2)
+    k, v = c.gather_seq(sid, layer=1, dtype=jnp.float32)
+    assert k.shape == (6, 2, 8)
+    expect = np.stack([np.asarray(t)[1] for t in toks])
+    np.testing.assert_allclose(np.asarray(k), expect, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v), expect * 2, atol=1e-6)
+
+
+def test_compress_then_gather_within_int8_tolerance():
+    c = PagedKVCache(CFG)
+    sid = c.new_seq()
+    toks = [_tok(i) for i in range(8)]  # 2 full pages
+    for t in toks:
+        c.append(sid, t, t)
+    pages = c.compressible_pages()
+    assert len(pages) == 2
+    for p in pages:
+        c.compress_page(p)
+    k, _ = c.gather_seq(sid, layer=0, dtype=jnp.float32)
+    expect = np.stack([np.asarray(t)[0] for t in toks])
+    scale = np.abs(expect).max() / 127
+    np.testing.assert_allclose(np.asarray(k), expect, atol=2 * scale)
+    assert c.stats["compressions"] == 2
+
+
+def test_staging_slots_recycled():
+    c = PagedKVCache(CFG)
+    sid = c.new_seq()
+    free0 = len(c.free_staging)
+    for i in range(CFG.page_size * 2 + 2):   # 2 full pages + 1 partial
+        c.append(sid, _tok(i), _tok(i))
+    assert len(c.free_staging) == free0 - 3
+    for p in c.compressible_pages():
+        c.compress_page(p)
+    assert len(c.free_staging) == free0 - 1  # only the partial page staged
+
+
+def test_release_frees_everything():
+    c = PagedKVCache(CFG)
+    sid = c.new_seq()
+    for i in range(CFG.page_size * 2 + 1):
+        c.append(sid, _tok(i), _tok(i))
+    c.release_seq(sid)
+    assert len(c.free_pages) == CFG.n_pages
+    assert len(c.free_staging) == CFG.n_staging
+    assert (c.page_state == -1).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 30)),
+                    min_size=1, max_size=60))
+def test_invariants_under_random_ops(ops):
+    """No double-free / aliasing under arbitrary append/compress/release."""
+    c = PagedKVCache(CFG)
+    sids = []
+    tok = _tok(0)
+    for kind, _arg in ops:
+        if kind == 0 and len(sids) < CFG.max_seqs - 1:
+            sids.append(c.new_seq())
+        elif kind == 1 and sids:
+            ok = c.append(sids[_arg % len(sids)], tok, tok)
+            if not ok:
+                for p in c.compressible_pages():
+                    c.compress_page(p, forced=True)
+        elif kind == 2 and sids:
+            c.release_seq(sids.pop(_arg % len(sids)))
+        # invariants
+        used = [p for p in range(CFG.n_pages) if c.page_state[p] >= 0]
+        assert len(set(c.free_pages)) == len(c.free_pages)
+        assert set(used).isdisjoint(c.free_pages)
+        staged = [p for p in used if c.page_state[p] == 1]
+        slots = [int(c.staging_slot[p]) for p in staged]
+        assert len(set(slots)) == len(slots)          # no slot aliasing
+        assert set(slots).isdisjoint(c.free_staging)
+        # every active sequence's pages are allocated
+        for sid in sids:
+            for p in c.pages_of(sid):
+                assert c.page_state[p] >= 0
+
+
+def test_quant_error_bound():
+    page = jnp.asarray(RS.randn(2, 4, 2, 8), jnp.float32) * 5
+    q, s = quantize_page(page)
+    err = float(page_quant_error(page))
+    assert err <= float(np.asarray(s).max()) * 0.51 + 1e-6

@@ -1,0 +1,189 @@
+"""Layer-level numerics: chunked attention oracle, RoPE, head padding
+equivalence (the zero-pad safety claim), dims, loss, optimizer, data."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import get_arch, AttentionConfig
+from repro.models import layers as L
+from repro.models import blocks as B
+from repro.models.dims import make_dims
+from repro.models.loss import lm_loss
+from repro.optim import OptConfig, apply_updates, init_opt, lr_at
+from repro.data import SyntheticLMData
+
+RS = np.random.RandomState(7)
+
+
+def test_chunked_attention_matches_naive():
+    b, s, h, d = 2, 64, 3, 16
+    q = jnp.asarray(RS.randn(b, s, h, d), jnp.float32)
+    k = jnp.asarray(RS.randn(b, s, h, d), jnp.float32)
+    v = jnp.asarray(RS.randn(b, s, h, d), jnp.float32)
+    for causal in (True, False):
+        out = L.chunked_attention(q, k, v, causal=causal, q_block=16,
+                                  kv_block=16)
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(d)
+        if causal:
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+        p = jax.nn.softmax(s_, -1)
+        expect = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_rope_preserves_norm_and_relativity():
+    b, s, h, d = 1, 16, 2, 32
+    x = jnp.asarray(RS.randn(b, s, h, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    sin, cos = L.rope_angles(pos, d, 10_000.0)
+    y = L.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(RS.randn(1, 1, 1, d), jnp.float32)
+    k = jnp.asarray(RS.randn(1, 1, 1, d), jnp.float32)
+
+    def dot_at(i, j):
+        pi = jnp.full((1, 1), i)
+        pj = jnp.full((1, 1), j)
+        qi = L.apply_rope(q, *L.rope_angles(pi, d, 10_000.0))
+        kj = L.apply_rope(k, *L.rope_angles(pj, d, 10_000.0))
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_mrope_sections_differ_from_1d():
+    b, s, d = 1, 8, 16
+    pos3 = jnp.stack([jnp.zeros((b, s), jnp.int32),
+                      jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
+                      jnp.broadcast_to(jnp.arange(s)[None] * 2, (b, s))])
+    sin3, cos3 = L.rope_angles(pos3, d, 10_000.0, mrope_sections=(2, 3, 3))
+    sin1, cos1 = L.rope_angles(pos3[1], d, 10_000.0)
+    assert not np.allclose(np.asarray(sin3), np.asarray(sin1))
+    # text mode (all three streams equal) must reduce to 1-D RoPE
+    pos_eq = jnp.broadcast_to(pos3[1][None], (3, b, s))
+    sin_eq, _ = L.rope_angles(pos_eq, d, 10_000.0, mrope_sections=(2, 3, 3))
+    np.testing.assert_allclose(np.asarray(sin_eq), np.asarray(sin1), atol=1e-6)
+
+
+def test_head_padding_is_inert():
+    """Padded q heads (40->48 style) must not change attention output."""
+    cfg = get_arch("qwen2-0.5b").reduced()  # 4 heads, kv=1 after reduce
+    att = cfg.attention
+    dims1 = make_dims(cfg, tp=1, param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    dims8 = make_dims(cfg, tp=8, param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    assert dims8.n_q > dims1.n_q  # 4 -> 8 padded
+    p1 = B.init_attn(jax.random.PRNGKey(0), dims1, out_scale=0.02)
+    p8 = B.init_attn(jax.random.PRNGKey(0), dims8, out_scale=0.02)
+    # graft the logical weights into the padded params
+    for k in ("wq", "wo", "bq"):
+        if k not in p1:
+            continue
+        pad = np.zeros_like(np.asarray(p8[k]))
+        if k == "wq":
+            pad[:, :dims1.n_q] = np.asarray(p1[k])
+        elif k == "wo":
+            pad[:dims1.n_q] = np.asarray(p1[k])
+        else:
+            pad[:dims1.n_q] = np.asarray(p1[k])
+        p8[k] = jnp.asarray(pad)
+    for k in ("ln", "wk", "wv", "bk", "bv"):
+        if k in p1:
+            p8[k] = p1[k]
+    h = jnp.asarray(RS.randn(2, 16, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    sin, cos = L.rope_angles(pos, att.head_dim, att.rope_theta)
+    y1, _ = B.apply_attn(p1, h, dims1, sin=sin, cos=cos, causal=True)
+    y8, _ = B.apply_attn(p8, h, dims8, sin=sin, cos=cos, causal=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y8),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_dims_padding_rules():
+    for arch, tp, want in [("llama4-maverick-400b-a17b", 16, 48),
+                           ("qwen2.5-14b", 16, 48),
+                           ("qwen2-0.5b", 16, 16),
+                           ("qwen2-vl-72b", 16, 64)]:
+        cfg = get_arch(arch)
+        dims = make_dims(cfg, tp=tp)
+        assert dims.n_q == want, (arch, dims.n_q)
+        assert dims.n_q % cfg.attention.n_kv_heads == 0
+    assert get_arch("mamba2-130m").padded_vocab == 50304
+    assert get_arch("seamless-m4t-large-v2").padded_vocab % 128 == 0
+    assert make_dims(get_arch("mamba2-130m"), tp=16).ssm_heads == 32
+
+
+def test_lm_loss_masking_and_value():
+    b, s, d, v = 2, 8, 16, 32
+    h = jnp.asarray(RS.randn(b, s, d), jnp.float32)
+    head = jnp.asarray(RS.randn(d, v), jnp.float32)
+    labels = jnp.concatenate([
+        jnp.zeros((b, s - 1), jnp.int32),
+        jnp.full((b, 1), -1, jnp.int32)], axis=1)
+    loss, m = lm_loss(h, head, labels, logical_vocab=v - 5, block=4,
+                      z_loss=0.0)
+    assert float(m["tokens"]) == b * (s - 1)
+    logits = np.asarray(h @ head, np.float64)[:, :, :v - 5]
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+        + logits.max(-1)
+    expect = (lse - logits[:, :, 0])[:, :-1].mean()
+    np.testing.assert_allclose(float(loss), expect, rtol=1e-5)
+
+
+def test_adamw_converges_on_quadratic():
+    ocfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                     weight_decay=0.0, grad_clip=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = init_opt(params, ocfg)
+    for _ in range(120):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = apply_updates(params, g, opt, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert float(lr_at(ocfg, jnp.int32(100))) <= ocfg.lr
+
+
+def test_data_determinism_and_sharding():
+    d1 = SyntheticLMData(100, batch=8, seq=16, seed=3)
+    d2 = SyntheticLMData(100, batch=8, seq=16, seed=3)
+    b1, b2 = d1.batch_at(7), d2.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert (d1.batch_at(8)["tokens"] != b1["tokens"]).any()
+    h0 = SyntheticLMData(100, batch=8, seq=16, seed=3, host_id=0, n_hosts=2)
+    h1 = SyntheticLMData(100, batch=8, seq=16, seed=3, host_id=1, n_hosts=2)
+    assert h0.batch_at(0)["tokens"].shape == (4, 16)
+    assert (h0.batch_at(0)["tokens"] != h1.batch_at(0)["tokens"]).any()
+    assert (b1["labels"][:, -1] == -1).all()
+
+
+def test_moe_dispatch_exactness():
+    """Sort-based capacity dispatch == dense routing when nothing drops."""
+    t, d, e, k, f = 24, 8, 4, 2, 16
+    x = jnp.asarray(RS.randn(t, d), jnp.float32)
+    wr = jnp.asarray(RS.randn(d, e), jnp.float32)
+    wi = jnp.asarray(RS.randn(e, d, f), jnp.float32)
+    wg = jnp.asarray(RS.randn(e, d, f), jnp.float32)
+    wo = jnp.asarray(RS.randn(e, f, d), jnp.float32)
+    idx, w, probs = L.moe_route(x, wr, k)
+    slot = L.moe_positions(idx, e, capacity=t * k)
+    y = L.moe_apply_local(x, idx, w, slot, wi, wg, wo,
+                          capacity=t * k, expert_offset=0)
+    # dense reference
+    dense = np.zeros((t, d), np.float32)
+    for ti in range(t):
+        for ki in range(k):
+            ei = int(idx[ti, ki])
+            hh = np.asarray(x[ti]) @ np.asarray(wi[ei])
+            gg = np.asarray(x[ti]) @ np.asarray(wg[ei])
+            act = hh * (gg / (1 + np.exp(-gg)))
+            dense[ti] += float(w[ti, ki]) * act @ np.asarray(wo[ei])
+    np.testing.assert_allclose(np.asarray(y), dense, atol=1e-4, rtol=1e-4)
+    # capacity of zero usable slots -> everything dropped -> zeros
+    slot0 = L.moe_positions(idx, e, capacity=1)
+    y0 = L.moe_apply_local(x, idx, w, slot0, wi, wg, wo, capacity=1,
+                           expert_offset=0)
+    assert np.abs(np.asarray(y0)).sum() < np.abs(np.asarray(y)).sum()

@@ -1,0 +1,82 @@
+"""Property tests (hypothesis): the DARP scheduler's data-integrity budget —
+the paper's central correctness invariant — holds under arbitrary demand."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import DarpScheduler, SchedulerPolicy
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_banks=st.integers(2, 12),
+    budget=st.integers(1, 8),
+    policy=st.sampled_from(list(SchedulerPolicy)),
+    seed=st.integers(0, 2**31 - 1),
+    steps=st.integers(10, 200),
+)
+def test_budget_invariant(n_banks, budget, policy, seed, steps):
+    """|due - issued| <= budget at every instant, for every policy, under
+    arbitrary demand and write-window patterns."""
+    rs = np.random.RandomState(seed)
+    sched = DarpScheduler(n_banks, interval=3.0, budget=budget, policy=policy)
+    for t in range(steps):
+        demand = rs.randint(0, 3, n_banks).tolist()
+        ww = bool(rs.rand() < 0.4)
+        sched.select(float(t), demand=demand, write_window=ww,
+                     max_issues=rs.randint(1, n_banks + 1))
+        sched.check_invariant(float(t))
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_deadline_guarantee(seed):
+    """Even with permanently-busy banks, forced maintenance keeps every
+    bank's snapshot age bounded by (budget + 1) intervals."""
+    rs = np.random.RandomState(seed)
+    interval, budget, n = 4.0, 3, 6
+    sched = DarpScheduler(n, interval, budget=budget,
+                          policy=SchedulerPolicy.DARP)
+    for t in range(200):
+        demand = [1] * n  # never idle: only forced maintenance can fire
+        sched.select(float(t), demand=demand, write_window=False,
+                     max_issues=n)
+        for b in range(n):
+            assert sched.lag(b, float(t)) <= budget
+
+
+def test_out_of_order_prefers_idle():
+    sched = DarpScheduler(4, interval=1.0, budget=8,
+                          policy=SchedulerPolicy.DARP_OOO)
+    # all banks owe; banks 1,3 busy -> picks must avoid them
+    picks = sched.select(5.0, demand=[0, 5, 0, 5], max_issues=2)
+    assert set(picks) <= {0, 2} and picks
+
+
+def test_round_robin_is_in_order():
+    sched = DarpScheduler(4, interval=4.0, budget=8,
+                          policy=SchedulerPolicy.ROUND_ROBIN, stagger=False)
+    order = []
+    for t in range(1, 9):
+        order += sched.select(float(t * 4), demand=[0, 0, 0, 0], max_issues=1)
+    assert order[:4] == [0, 1, 2, 3]
+
+
+def test_wrp_pulls_in_only_idle_banks():
+    sched = DarpScheduler(4, interval=100.0, budget=4,
+                          policy=SchedulerPolicy.DARP)
+    picks = sched.select(0.5, demand=[0, 2, 0, 2], write_window=True,
+                         max_issues=4)
+    assert set(picks) <= {0, 2}
+    # pull-in bounded at -budget
+    for t in range(1, 40):
+        sched.select(0.5 + t * 1e-3, demand=[0, 2, 0, 2], write_window=True,
+                     max_issues=4)
+        sched.check_invariant(0.5 + t * 1e-3)
+
+
+def test_all_bank_is_stop_the_world():
+    sched = DarpScheduler(4, interval=2.0, budget=8,
+                          policy=SchedulerPolicy.ALL_BANK, stagger=False)
+    picks = sched.select(3.0, demand=[1, 1, 1, 1], max_issues=8)
+    assert sorted(picks) == [0, 1, 2, 3]

@@ -1,0 +1,68 @@
+"""DRAM refresh simulator: conservation, budget, and the paper's orderings
+(C1/C4 at test scale; full claims validated in benchmarks/fig*)."""
+import numpy as np
+import pytest
+
+from repro.core.refresh import make_workload, run_policy
+from repro.core.refresh.sim import DramSim, POLICIES
+from repro.core.refresh.timing import timing_for_density
+
+WL = make_workload("mixed", n_cores=4, reqs_per_core=400, seed=3)
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {p: run_policy(p, 32, WL)
+            for p in ("ideal", "ref_ab", "ref_pb", "darp", "dsarp")}
+
+
+def test_conservation(results):
+    total = WL.n_cores * WL.reqs_per_core
+    for r in results.values():
+        assert r.reads_done + r.writes_done <= total
+        assert all(np.isfinite(r.core_finish)), r.policy
+        assert r.reads_done > 0 and r.avg_read_latency > 0
+
+
+def test_refresh_counts(results):
+    """Non-ideal policies must actually refresh at roughly the JEDEC rate."""
+    t = timing_for_density(32)
+    for name in ("ref_pb", "darp", "dsarp"):
+        r = results[name]
+        expected = r.makespan / t.tREFI * t.n_banks
+        assert r.refreshes_pb >= 0.5 * expected, (name, r.refreshes_pb, expected)
+    r = results["ref_ab"]
+    assert r.refreshes_ab >= 0.5 * r.makespan / t.tREFI
+
+
+def test_budget_never_violated(results):
+    for name in ("darp", "dsarp"):
+        assert results[name].max_abs_lag <= timing_for_density(32).refresh_budget + 1
+
+
+def test_ordering_refab_worst(results):
+    """C1/C4: ideal >= dsarp >= ref_pb >= ref_ab (with small tolerance)."""
+    ideal = results["ideal"]
+    ws = {p: r.weighted_speedup_vs(ideal) for p, r in results.items()}
+    assert ws["ref_ab"] <= ws["ref_pb"] + 0.02
+    assert ws["ref_pb"] <= ws["dsarp"] + 0.02
+    assert ws["dsarp"] <= 1.03
+
+
+def test_loss_grows_with_density():
+    """C2: REF_ab hurts more at 32Gb than at 8Gb."""
+    loss = {}
+    for d in (8, 32):
+        ideal = run_policy("ideal", d, WL)
+        ab = run_policy("ref_ab", d, WL)
+        loss[d] = 1 - ab.weighted_speedup_vs(ideal)
+    assert loss[32] > loss[8] - 0.01
+
+
+def test_sarp_serves_during_refresh():
+    """SARP must allow some accesses to proceed during refresh windows
+    (observable as lower avg latency than blocking per-bank refresh)."""
+    wl = make_workload("low_mlp", n_cores=4, reqs_per_core=400, seed=5)
+    pb = run_policy("ref_pb", 32, wl)
+    sarp = run_policy("sarp_pb", 32, wl)
+    assert sarp.avg_read_latency <= pb.avg_read_latency * 1.05

@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests: every assigned architecture's REDUCED config
+runs a forward/backward train step, prefill, and decode on CPU with finite
+outputs and correct shapes (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.common.config import list_archs
+from repro.models.api import get_model
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    if cfg.family == "encdec":
+        return {"enc_embeds": jnp.ones((B, S, cfg.d_model), jnp.float32) * 0.01,
+                "tokens": jnp.ones((B, S), jnp.int32),
+                "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend == "embed":
+        b = {"embeds": jnp.ones((B, S, cfg.d_model), jnp.float32) * 0.01,
+             "labels": jnp.ones((B, S), jnp.int32)}
+        if cfg.attention and cfg.attention.mrope:
+            b["positions"] = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+        return b
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke(arch, rng):
+    cfg, dims = reduced(arch)
+    mod = get_model(cfg)
+    params = mod.init(rng, cfg, dims)
+    batch = _batch(cfg)
+
+    loss, metrics = jax.jit(lambda p, b: mod.train_loss(p, b, cfg, dims))(
+        params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    assert float(metrics["tokens"]) > 0
+
+    grads = jax.jit(jax.grad(lambda p, b: mod.train_loss(p, b, cfg, dims)[0]))(
+        params, batch)
+    for g in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(g)))
+
+    pf = dict(batch)
+    pf.pop("labels")
+    logits, state = jax.jit(lambda p, b: mod.prefill(p, b, cfg, dims))(
+        params, pf)
+    assert logits.shape == (B, dims.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)[:, :cfg.vocab_size]))
+
+    st = mod.init_decode_state(cfg, dims, B, S)
+    kw = ({"embed": jnp.ones((B, cfg.d_model), jnp.float32) * 0.01}
+          if cfg.frontend == "embed" and cfg.family != "encdec"
+          else {"token": jnp.ones((B,), jnp.int32)})
+    lg, st2 = jax.jit(
+        lambda p, s: mod.decode_step(p, s, cfg, dims, pos=jnp.int32(3), **kw))(
+        params, st)
+    assert lg.shape == (B, dims.vocab)
+    assert np.all(np.isfinite(np.asarray(lg)[:, :cfg.vocab_size]))
+    assert jax.tree.structure(st2) == jax.tree.structure(st)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-130m", "zamba2-7b"])
+def test_decode_matches_forward(arch, rng):
+    """Token-by-token decode must reproduce the full-forward logits."""
+    cfg, dims = reduced(arch)
+    mod = get_model(cfg)
+    params = mod.init(rng, cfg, dims)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, 8), 0, cfg.vocab_size)
+
+    # full forward last-position logits via prefill
+    logits_pf, _ = mod.prefill(params, {"tokens": toks}, cfg, dims)
+
+    # token-by-token decode over the same prefix
+    st = mod.init_decode_state(cfg, dims, B, 8)
+    lg = None
+    for i in range(8):
+        lg, st = mod.decode_step(params, st, cfg, dims,
+                                 token=toks[:, i], pos=jnp.int32(i))
+    v = cfg.vocab_size
+    np.testing.assert_allclose(np.asarray(lg)[:, :v],
+                               np.asarray(logits_pf)[:, :v],
+                               atol=2e-3, rtol=2e-3)
