@@ -2,8 +2,9 @@
 
 bench_darp_ckpt    : trainer step-time overhead — synchronous stop-the-world
                      checkpointing vs DARP write-window flushes.
-bench_serving      : serving engine policies (all_bank / round_robin / darp):
-                     throughput, forced stalls, maintenance smoothness.
+bench_serving      : serving engine policies by registry name (all_bank /
+                     round_robin / darp / elastic / hira): throughput,
+                     forced stalls, maintenance smoothness.
 bench_sarp_bytes   : derived HBM traffic of fused vs serial paged attention
                      (the TPU-relevant SARP metric) + numerics check.
 bench_kernel_micro : us/call of jitted reference paths on CPU.
@@ -30,7 +31,6 @@ def _reduced(name="qwen2.5-3b"):
 def bench_darp_ckpt(steps: int = 40, interval: int = 8) -> dict:
     import tempfile
     from repro.checkpoint import CheckpointConfig, CheckpointEngine
-    from repro.core.scheduler import SchedulerPolicy
     from repro.data import SyntheticLMData
     from repro.optim import OptConfig
     from repro.train import Trainer, TrainerConfig, make_state, make_train_step
@@ -40,15 +40,13 @@ def bench_darp_ckpt(steps: int = 40, interval: int = 8) -> dict:
     step_fn = make_train_step(cfg, dims, ocfg)
     data = SyntheticLMData(cfg.vocab_size, batch=8, seq=64, seed=0)
     out = {}
-    for policy, sync in (("darp", False), ("all_bank", True), (None, None)):
+    for policy in ("darp", "all_bank", None):
         state = make_state(jax.random.PRNGKey(0), cfg, dims, ocfg)
         with tempfile.TemporaryDirectory() as d:
             ck = None
             if policy is not None:
-                pol = (SchedulerPolicy.ALL_BANK if sync
-                       else SchedulerPolicy.DARP)
                 ck = CheckpointConfig(directory=d, interval=interval,
-                                      n_banks=8, policy=pol)
+                                      n_banks=8, policy=policy)
             tr = Trainer(TrainerConfig(total_steps=steps, ckpt=ck,
                                        log_every=1000),
                          step_fn, state, iter(data))
@@ -69,8 +67,9 @@ def bench_darp_ckpt(steps: int = 40, interval: int = 8) -> dict:
     return out
 
 
-def bench_serving(n_requests: int = 6, max_new: int = 24) -> dict:
-    from repro.core.scheduler import SchedulerPolicy
+def bench_serving(n_requests: int = 6, max_new: int = 24,
+                  policies: tuple = ("all_bank", "round_robin", "darp",
+                                     "elastic", "hira")) -> dict:
     from repro.kvcache import PagedKVConfig
     from repro.models.api import get_model
     from repro.serving import Request, ServeConfig, ServingEngine
@@ -79,15 +78,14 @@ def bench_serving(n_requests: int = 6, max_new: int = 24) -> dict:
     mod = get_model(cfg)
     params = mod.init(jax.random.PRNGKey(0), cfg, dims)
     out = {}
-    for pol in (SchedulerPolicy.ALL_BANK, SchedulerPolicy.ROUND_ROBIN,
-                SchedulerPolicy.DARP):
+    for pol in policies:
         kv_cfg = PagedKVConfig(
             n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
             head_dim=cfg.attention.head_dim, page_size=4, n_pages=128,
             n_staging=10, n_groups=4, max_seqs=8)
         scfg = ServeConfig(max_batch=3, policy=pol,
                            refresh_interval=3.0, max_compress_per_round=1,
-                           force_threshold=0.99 if pol == SchedulerPolicy.ALL_BANK else 0.8)
+                           force_threshold=0.99 if pol == "all_bank" else 0.8)
         eng = ServingEngine(params, cfg, dims, kv_cfg, scfg)
         for i in range(n_requests):
             eng.submit(Request(prompt=[1 + i, 2, 3, 4], max_new=max_new,
@@ -95,7 +93,7 @@ def bench_serving(n_requests: int = 6, max_new: int = 24) -> dict:
         t0 = time.perf_counter()
         eng.run_until_done(max_rounds=600)
         wall = time.perf_counter() - t0
-        out[pol.value] = {
+        out[pol] = {
             "wall_s": round(wall, 2),
             "tokens": eng.stats["tokens"],
             "tok_per_s": round(eng.stats["tokens"] / wall, 1),

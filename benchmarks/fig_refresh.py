@@ -5,14 +5,14 @@ fig1: performance loss of REF_ab / REF_pb vs the no-refresh ideal across
 fig2: service-timeline microbenchmark — a read arriving during a refresh
       to another subarray of the SAME bank (paper Figure 2; SARP mechanism).
 fig3: DSARP (and components) performance + energy vs baselines across
-      densities (paper Figure 3; claims C3, C4).
+      densities (paper Figure 3; claims C3, C4), plus the post-paper
+      registry policies (elastic, hira) running through the same sweep.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.refresh import make_workload, run_policy
-from repro.core.refresh.sim import DramSim, POLICIES
 from repro.core.refresh.timing import timing_for_density
 from repro.core.refresh.workload import Workload
 
@@ -21,21 +21,18 @@ WORKLOADS = ("low_mlp", "mixed", "write_heavy")
 SEEDS = (1, 2)
 
 
-def _avg_ws(policy: str, density: int, reqs: int) -> float:
-    vals = []
-    for w in WORKLOADS:
-        for s in SEEDS:
-            wl = make_workload(w, reqs_per_core=reqs, seed=s)
-            ideal = run_policy("ideal", density, wl)
-            r = run_policy(policy, density, wl)
-            vals.append(r.weighted_speedup_vs(ideal))
-    return float(np.mean(vals))
-
-
 def fig1(reqs: int = 1200) -> dict:
     out = {}
     for d in DENSITIES:
-        out[d] = {p: 1.0 - _avg_ws(p, d, reqs) for p in ("ref_ab", "ref_pb")}
+        ws = {p: [] for p in ("ref_ab", "ref_pb")}
+        for w in WORKLOADS:
+            for s in SEEDS:
+                wl = make_workload(w, reqs_per_core=reqs, seed=s)
+                ideal = run_policy("ideal", d, wl)
+                for p in ws:
+                    ws[p].append(
+                        run_policy(p, d, wl).weighted_speedup_vs(ideal))
+        out[d] = {p: 1.0 - float(np.mean(v)) for p, v in ws.items()}
     return out
 
 
@@ -59,13 +56,18 @@ def fig3(reqs: int = 1200) -> dict:
     for d in DENSITIES:
         row = {}
         ref_ab_e = None
-        for p in ("ref_ab", "ref_pb", "darp", "sarp_pb", "dsarp", "ideal"):
+        ideals = {}                 # (workload, seed) -> baseline run
+        for w in WORKLOADS:
+            for s in SEEDS:
+                wl = make_workload(w, reqs_per_core=reqs, seed=s)
+                ideals[w, s] = (wl, run_policy("ideal", d, wl))
+        for p in ("ref_ab", "ref_pb", "darp", "sarp_pb", "dsarp",
+                  "elastic", "hira", "ideal"):
             ws, es = [], []
             for w in WORKLOADS:
                 for s in SEEDS:
-                    wl = make_workload(w, reqs_per_core=reqs, seed=s)
-                    ideal = run_policy("ideal", d, wl)
-                    r = run_policy(p, d, wl)
+                    wl, ideal = ideals[w, s]
+                    r = ideal if p == "ideal" else run_policy(p, d, wl)
                     ws.append(r.weighted_speedup_vs(ideal))
                     es.append(r.energy)
             row[p] = {"ws": float(np.mean(ws)), "energy": float(np.mean(es))}

@@ -25,7 +25,8 @@ def main():
     for d, row in f3.items():
         print(f"  {d:2d}Gb: " + "  ".join(
             f"{p}:{row[p]['improvement_vs_refab']*100:+.1f}%"
-            for p in ("ref_pb", "darp", "sarp_pb", "dsarp")))
+            for p in ("ref_pb", "darp", "sarp_pb", "dsarp",
+                      "elastic", "hira")))
 
 
 if __name__ == "__main__":

@@ -5,6 +5,11 @@ paged int8 KV cache, comparing refresh policies.
   all_bank    : stop-the-world page compression (REF_ab analogue)
   round_robin : fixed-order group compression (LPDDR REF_pb analogue)
   darp        : out-of-order + write-window compression (the paper)
+  elastic     : demand-elastic postpone (registry extra)
+  hira        : refresh-behind-access (registry extra)
+
+Policies resolve by `repro.core.policy` registry name — add your own with
+`@register_policy("name")` and pass it here, no engine changes needed.
 
   PYTHONPATH=src python examples/serve_refresh.py [--requests 8] [--new 24]
 """
@@ -14,7 +19,6 @@ import time
 import jax
 
 from repro.common.config import get_arch
-from repro.core.scheduler import SchedulerPolicy
 from repro.kvcache import PagedKVConfig
 from repro.models.api import get_model
 from repro.models.dims import make_dims
@@ -34,15 +38,14 @@ def main():
     mod = get_model(cfg)
     params = mod.init(jax.random.PRNGKey(0), cfg, dims)
 
-    for pol in (SchedulerPolicy.ALL_BANK, SchedulerPolicy.ROUND_ROBIN,
-                SchedulerPolicy.DARP):
+    for pol in ("all_bank", "round_robin", "darp", "elastic", "hira"):
         kv_cfg = PagedKVConfig(
             n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
             head_dim=cfg.attention.head_dim, page_size=4, n_pages=128,
             n_staging=10, n_groups=4, max_seqs=8)
         scfg = ServeConfig(
             max_batch=3, policy=pol, refresh_interval=3.0,
-            force_threshold=0.99 if pol == SchedulerPolicy.ALL_BANK else 0.8)
+            force_threshold=0.99 if pol == "all_bank" else 0.8)
         eng = ServingEngine(params, cfg, dims, kv_cfg, scfg)
         for i in range(args.requests):
             eng.submit(Request(prompt=[1 + i, 2, 3, 4], max_new=args.new,
@@ -50,7 +53,7 @@ def main():
         t0 = time.perf_counter()
         eng.run_until_done(max_rounds=800)
         wall = time.perf_counter() - t0
-        print(f"{pol.value:12s} tokens={eng.stats['tokens']:4d} "
+        print(f"{pol:12s} tokens={eng.stats['tokens']:4d} "
               f"tok/s={eng.stats['tokens']/wall:6.1f} "
               f"forced_stalls={eng.stats['stall_rounds']:3d} "
               f"compressions={eng.cache.stats['compressions']:3d} "

@@ -25,12 +25,13 @@ import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import numpy as np
 
 from repro.common.treeutil import flat_paths
+from repro.core.policy import RefreshPolicy
 from repro.core.scheduler import DarpScheduler, SchedulerPolicy
 
 
@@ -40,7 +41,7 @@ class CheckpointConfig:
     interval: int = 50           # steps per checkpoint epoch
     n_banks: int = 8             # shard-banks flushed independently
     budget: int = 8              # postpone/pull-in budget (paper)
-    policy: SchedulerPolicy = SchedulerPolicy.DARP
+    policy: Union[str, SchedulerPolicy, RefreshPolicy] = "darp"
     keep: int = 2
 
 
@@ -62,6 +63,10 @@ class CheckpointEngine:
         self._flushed_banks: set = set()
         self._pending: list = []
         self._lock = threading.Lock()
+        # serializes manifest writes + gc: two pool threads can finish the
+        # last two banks of an epoch simultaneously, and gc may retire an
+        # epoch while a late flush of it is still completing
+        self._manifest_lock = threading.Lock()
         self.stats = {"epochs": 0, "flushes": 0, "forced": 0, "snap_ms": 0.0,
                       "flush_ms": 0.0}
 
@@ -165,7 +170,7 @@ class CheckpointEngine:
         self.stats["flush_ms"] += (time.perf_counter() - t0) * 1e3
         done = all(os.path.exists(os.path.join(ep_dir, f"bank_{x}.npz"))
                    for x in range(self.cfg.n_banks))
-        if done and not os.path.exists(os.path.join(ep_dir, "manifest.json")):
+        if done:
             self._write_manifest(ep_dir, step, staged)
 
     def _write_manifest(self, ep_dir: str, step: int, staged: dict) -> None:
@@ -176,11 +181,17 @@ class CheckpointEngine:
             "paths": staged["paths"],
             "complete": True,
         }
-        tmp = os.path.join(ep_dir, "manifest.json.tmp")
-        with open(tmp, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, os.path.join(ep_dir, "manifest.json"))
-        self._gc()
+        with self._manifest_lock:
+            if os.path.exists(os.path.join(ep_dir, "manifest.json")):
+                return
+            tmp = os.path.join(ep_dir, "manifest.json.tmp")
+            try:
+                with open(tmp, "w") as f:
+                    json.dump(manifest, f)
+                os.replace(tmp, os.path.join(ep_dir, "manifest.json"))
+            except FileNotFoundError:
+                return  # epoch dir gc'd concurrently: already superseded
+            self._gc()
 
     def _gc(self) -> None:
         eps = sorted(d for d in os.listdir(self.cfg.directory)

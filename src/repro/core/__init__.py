@@ -1,3 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# repro.core.policy is the pluggable refresh/maintenance policy API shared
+# by the DRAM timing simulator (repro.core.refresh), the generic
+# maintenance scheduler (repro.core.scheduler), and through it the serving
+# and checkpoint engines.

@@ -1,0 +1,23 @@
+"""Pluggable refresh/maintenance policies (the paper's policy family as a
+first-class API).
+
+  from repro.core.policy import get_policy, list_policies, register_policy
+  pol = get_policy("dsarp")        # fresh instance; one per engine run
+  pol.select(view)                 # -> [Decision(bank=...), ...]
+
+Importing this package registers the built-in policies (paper family +
+the elastic/hira extras)."""
+from repro.core.policy.base import (ALL_BANKS, Decision, MaintenanceView,
+                                    PolicyBase, RefreshPolicy)
+from repro.core.policy.registry import (get_policy, list_policies,
+                                        register_policy, resolve_policy)
+from repro.core.policy.paper import (AllBankPolicy, DarpPolicy, IdealPolicy,
+                                     RoundRobinPolicy)
+from repro.core.policy.extras import ElasticPolicy, HiraPolicy
+
+__all__ = [
+    "ALL_BANKS", "Decision", "MaintenanceView", "PolicyBase",
+    "RefreshPolicy", "get_policy", "list_policies", "register_policy",
+    "resolve_policy", "AllBankPolicy", "DarpPolicy", "IdealPolicy",
+    "RoundRobinPolicy", "ElasticPolicy", "HiraPolicy",
+]

@@ -1,0 +1,111 @@
+"""The pluggable refresh/maintenance policy protocol.
+
+A *policy* answers one question — "which banks get maintenance NOW?" —
+against a `MaintenanceView` of the system, and returns `Decision`s. The
+same policy object drives every engine in the repo:
+
+  * `DramSim` (core/refresh/sim.py): timing-accurate DRAM refresh, where a
+    bank is a DRAM bank and maintenance is a REF command,
+  * `DarpScheduler` (core/scheduler/darp.py): generic maintenance over
+    framework "banks" — KV-cache page-groups (serving) and checkpoint
+    shard-banks (training),
+  * anything new: implement `select()` once, `@register_policy("name")`,
+    and every engine can resolve it by name.
+
+The data-integrity contract every policy must keep: for every bank, at all
+times, -budget <= due(now) - issued <= budget (the JEDEC postpone/pull-in
+budget). The forced path (issue when lag hits +budget) is the standard way
+to honour the upper edge; never issuing below lag > -budget honours the
+lower one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, Sequence, runtime_checkable
+
+#: `Decision.bank` value for a rank-level (all-bank) refresh.
+ALL_BANKS = -1
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One maintenance command: refresh `bank` (or the whole rank)."""
+    bank: int                    # bank index, or ALL_BANKS
+    forced: bool = False         # postpone budget exhausted
+    reason: str = ""             # optional trace label
+
+
+@dataclass
+class MaintenanceView:
+    """Snapshot of everything a policy may observe when deciding.
+
+    Engines build this once per decision point; policies must treat it as
+    read-only. `lag[b] = due(now) - issued` is the canonical urgency signal
+    (>0 owed, <0 pulled in). `ready[b]` means a refresh may *start* on bank
+    b now (it is not mid-refresh); `idle[b]` means no demand access is in
+    flight (generic engines pass all-True for both). `rank_due`/`rank_quiet`
+    only matter to rank-level (all-bank) policies in the timing simulator.
+    """
+    now: float
+    n_banks: int
+    budget: int
+    lag: Sequence[int]
+    demand: Sequence[int]
+    ready: Sequence[bool]
+    idle: Sequence[bool]
+    write_window: bool = False   # write-drain / write-phase in progress
+    max_issues: int = 1          # non-forced issues allowed this call
+    rank_due: int = 0            # pending all-bank refreshes (sim only)
+    rank_quiet: bool = True      # every bank drained; REF_ab may start
+
+
+@runtime_checkable
+class RefreshPolicy(Protocol):
+    """Protocol all registered policies satisfy.
+
+    Traits consumed by the engines:
+      name  : registry name (also stamped on SimResult),
+      level : 'pb' per-bank decisions | 'ab' rank-level refresh,
+      sarp  : subarray access-refresh parallelization (the timing sim
+              models per-subarray availability during a refresh),
+      ideal : no maintenance at all (upper-bound baseline).
+    """
+    name: str
+    level: str
+    sarp: bool
+    ideal: bool
+
+    def select(self, view: MaintenanceView) -> list[Decision]:
+        """Return the maintenance decisions for this instant.
+
+        The caller MUST apply every returned decision (each one is recorded
+        against the bank's issued count). Policies may keep mutable state
+        across calls (e.g. a round-robin pointer): one policy instance
+        drives exactly one engine run.
+        """
+        ...
+
+
+class PolicyBase:
+    """Convenience base: trait defaults + the shared forced-refresh sweep."""
+    name = "base"
+    level = "pb"
+    sarp = False
+    ideal = False
+
+    def select(self, view: MaintenanceView) -> list[Decision]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ helpers
+    @staticmethod
+    def _forced(view: MaintenanceView, lag: list[int],
+                picks: list[Decision]) -> None:
+        """Issue on every bank whose postpone budget is exhausted — the
+        data-integrity guarantee; overrides demand AND max_issues."""
+        for b in range(view.n_banks):
+            if lag[b] >= view.budget and view.ready[b]:
+                picks.append(Decision(b, forced=True, reason="budget edge"))
+                lag[b] -= 1
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"

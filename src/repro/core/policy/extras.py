@@ -1,0 +1,142 @@
+"""Post-paper policies, added registry-only — no engine internals touched.
+
+These exist to prove the `RefreshPolicy` API earns its keep: both run
+end-to-end through the DRAM density sweep (`run_policy("elastic", ...)`)
+and the serving benchmark (`ServeConfig(policy="hira")`) purely by being
+registered here.
+
+  elastic : demand-elastic postpone — refresh debt is deferred while demand
+            pressure is high and repaid aggressively (with pull-in) in
+            low-pressure valleys, with a smoothing ramp so the forced cliff
+            at the budget edge is never hit all at once. Inspired by the
+            refresh-access parallelism follow-on work (arXiv:1805.01289).
+  hira    : refresh-behind-access — instead of seeking *idle* banks like
+            DARP, prefer refreshing banks that are actively serving demand,
+            hiding the refresh behind accesses to the bank's other
+            subarrays (requires the SARP trait). Inspired by HiRA
+            (arXiv:2209.10198).
+"""
+from __future__ import annotations
+
+from repro.core.policy.base import Decision, MaintenanceView, PolicyBase
+from repro.core.policy.registry import register_policy
+
+
+@register_policy("elastic")
+class ElasticPolicy(PolicyBase):
+    """Demand-elastic postpone/pull-in.
+
+    Three pressure regimes, measured as total pending demand across banks:
+      quiet    (== 0)          : repay and pre-pay — refresh every available
+                                 bank, most-owed first, pulling in down to
+                                 -budget so future busy phases start with
+                                 headroom,
+      moderate (<= n_banks)    : DARP-like — only owed, idle, zero-demand
+                                 banks,
+      high     (> n_banks)     : postpone everything except banks whose lag
+                                 has climbed past `urgency * budget`; those
+                                 are refreshed even if busy, smoothing what
+                                 would otherwise become a forced stall at a
+                                 worse time.
+    The ±budget invariant is kept by the shared forced path (upper edge)
+    and the `lag > -budget` pull-in floor (lower edge).
+    """
+
+    def __init__(self, name: str = "elastic", sarp: bool = False,
+                 urgency: float = 0.75):
+        assert 0.0 < urgency <= 1.0
+        self.name = name
+        self.sarp = sarp
+        self.urgency = urgency
+
+    def select(self, view: MaintenanceView) -> list[Decision]:
+        lag = list(view.lag)
+        picks: list[Decision] = []
+        self._forced(view, lag, picks)
+        if len(picks) >= view.max_issues:
+            return picks
+        picked = {p.bank for p in picks}
+        pressure = sum(view.demand)
+        urgent_at = max(1, int(self.urgency * view.budget))
+
+        def take(cands, reason):
+            for b in cands:
+                if len(picks) >= view.max_issues:
+                    break
+                picks.append(Decision(b, reason=reason))
+                lag[b] -= 1
+                picked.add(b)
+
+        if pressure == 0:
+            # quiet valley: repay owed refreshes and pre-pay future ones
+            cands = sorted((b for b in range(view.n_banks)
+                            if view.ready[b] and view.idle[b]
+                            and b not in picked and lag[b] > -view.budget),
+                           key=lambda b: -lag[b])
+            take(cands, "quiet-valley repay")
+        elif pressure <= view.n_banks:
+            cands = sorted((b for b in range(view.n_banks)
+                            if view.ready[b] and view.idle[b]
+                            and b not in picked
+                            and view.demand[b] == 0 and lag[b] > 0),
+                           key=lambda b: -lag[b])
+            take(cands, "moderate-pressure idle refresh")
+        else:
+            # high pressure: postpone, but ramp into the budget edge early
+            cands = sorted((b for b in range(view.n_banks)
+                            if view.ready[b] and b not in picked
+                            and lag[b] >= urgent_at),
+                           key=lambda b: -lag[b])
+            take(cands, "urgency ramp")
+        return picks
+
+
+@register_policy("hira")
+class HiraPolicy(PolicyBase):
+    """Refresh-behind-access (HiRA-inspired).
+
+    DARP treats a bank with demand as untouchable; HiRA observes the
+    opposite opportunity: with subarray-level parallelism, a refresh issued
+    to a bank that is busy serving demand hides behind the access stream —
+    only same-subarray requests wait. So owed banks are taken busiest
+    first, falling back to idle banks when nothing is being accessed, and
+    write windows additionally pull refreshes in on busy banks.
+    """
+    sarp = True
+
+    def __init__(self, name: str = "hira"):
+        self.name = name
+
+    def select(self, view: MaintenanceView) -> list[Decision]:
+        lag = list(view.lag)
+        picks: list[Decision] = []
+        self._forced(view, lag, picks)
+        if len(picks) >= view.max_issues:
+            return picks
+        picked = {p.bank for p in picks}
+        avail = [b for b in range(view.n_banks)
+                 if view.ready[b] and b not in picked]
+        # owed banks: hide behind active demand first, most-demanded wins
+        hot = sorted((b for b in avail if lag[b] > 0 and view.demand[b] > 0),
+                     key=lambda b: (-view.demand[b], -lag[b]))
+        cold = sorted((b for b in avail
+                       if lag[b] > 0 and view.demand[b] == 0 and view.idle[b]),
+                      key=lambda b: -lag[b])
+        for b, why in ([(b, "behind access") for b in hot]
+                       + [(b, "idle fallback") for b in cold]):
+            if len(picks) >= view.max_issues:
+                return picks
+            picks.append(Decision(b, reason=why))
+            lag[b] -= 1
+            picked.add(b)
+        if view.write_window:
+            # pull in on busy banks too: the drain hides the refresh
+            extra = sorted((b for b in avail
+                            if b not in picked and lag[b] > -view.budget),
+                           key=lambda b: (-view.demand[b], -lag[b]))
+            for b in extra:
+                if len(picks) >= view.max_issues:
+                    break
+                picks.append(Decision(b, reason="write-window pull-in"))
+                lag[b] -= 1
+        return picks

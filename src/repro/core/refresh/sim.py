@@ -2,19 +2,19 @@
 
 Models one rank: N banks x M subarrays, shared data bus with turnaround
 penalties, FR-FCFS-style scheduling, a write buffer with high/low watermark
-drain ("writeback mode"), a closed-loop MLP-limited multi-core front-end,
-and the refresh policies under study:
+drain ("writeback mode"), and a closed-loop MLP-limited multi-core
+front-end.
 
-  ideal    : no refresh (upper bound)
-  ref_ab   : all-bank refresh (DDR REF_ab) — rank blocked for tRFC_ab
-  ref_pb   : per-bank refresh, strict round-robin (LPDDR REF_pb)
-  darp_ooo : DARP component 1 — out-of-order per-bank refresh (idle-first,
-             postpone/pull-in budget of 8 per bank)
-  darp     : + component 2 — write-refresh parallelization (refresh issued
-             into write-drain windows, min-pending bank first)
-  sarp_ab  : SARP on top of all-bank refresh (other subarrays serviceable)
-  sarp_pb  : SARP on top of per-bank round-robin
-  dsarp    : DARP + SARP (the paper's final mechanism)
+Refresh decisions are NOT made here: every policy (the paper's REF_ab /
+REF_pb / DARP / SARP / DSARP family plus registry extras like "elastic"
+and "hira") lives in `repro.core.policy`, shared with the serving and
+checkpoint engines. The simulator's job is timing fidelity — it keeps the
+machine state (`BankState`, `BusState`, `WriteBuffer`, `RefreshLedger`),
+builds a `MaintenanceView` after every event, and applies whatever
+`Decision`s the registered policy returns (`_refresh_step` is the whole
+adapter). Run any registered policy by name:
+
+    run_policy("dsarp", density_gb=32, workload=wl)
 
 Data-integrity invariant (asserted): every bank's refresh lag stays within
 the JEDEC postpone/pull-in budget, i.e. |issued - due| <= 8 at all times.
@@ -22,17 +22,22 @@ the JEDEC postpone/pull-in budget, i.e. |issued - due| <= 8 at all times.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
+from typing import Union
 
 import numpy as np
 
+from repro.core.policy import (ALL_BANKS, MaintenanceView, RefreshPolicy,
+                               resolve_policy)
 from repro.core.refresh.timing import DramTiming
 from repro.core.refresh.workload import Workload
 
 
 @dataclass(frozen=True)
 class Policy:
+    """Legacy flag record; kept so historical `DramSim(..., POLICIES[x])`
+    call sites work. New code passes a registry name (or a
+    `repro.core.policy` instance) instead."""
     name: str
     ideal: bool = False
     level: str = "pb"            # 'ab' | 'pb'
@@ -41,6 +46,8 @@ class Policy:
     sarp: bool = False           # subarray access-refresh parallelization
 
 
+#: Legacy name->flags table (shim; `repro.core.policy.list_policies()` is
+#: the authoritative catalogue, including post-paper additions).
 POLICIES: dict[str, Policy] = {
     "ideal": Policy("ideal", ideal=True),
     "ref_ab": Policy("ref_ab", level="ab"),
@@ -88,306 +95,348 @@ class _Req:
         self.t_arrive = t
 
 
+# ---------------------------------------------------------------- machine
+class BankState:
+    """Per-bank occupancy and row-buffer state (arrays indexed by bank)."""
+
+    def __init__(self, n_banks: int):
+        self.free = np.zeros(n_banks)           # demand access busy until
+        self.ref_until = np.zeros(n_banks)      # refresh occupancy until
+        self.ref_sub = np.full(n_banks, -1)     # subarray being refreshed
+        self.open_row = np.full(n_banks, -1)
+        self.open_sub = np.full(n_banks, -1)
+
+
+class BusState:
+    """Shared data bus: serialization point + read/write turnaround."""
+
+    def __init__(self):
+        self.free = 0.0
+        self.last_op_write = False
+
+
+class WriteBuffer:
+    """Write buffer with high/low watermark drain and per-bank counts."""
+
+    def __init__(self, n_banks: int, cap: int, hi: int, lo: int):
+        self.buf: list[_Req] = []
+        self.cap, self.hi, self.lo = cap, hi, lo
+        self.per_bank = np.zeros(n_banks, dtype=int)
+        self.drain = False
+
+    def __len__(self):
+        return len(self.buf)
+
+    @property
+    def full(self) -> bool:
+        return len(self.buf) >= self.cap
+
+    def add(self, r: _Req) -> None:
+        self.buf.append(r)
+        self.per_bank[r.bank] += 1
+        if len(self.buf) >= self.hi:
+            self.drain = True
+
+    def remove(self, r: _Req) -> None:
+        self.buf.remove(r)
+        self.per_bank[r.bank] -= 1
+        if self.drain and len(self.buf) <= self.lo:
+            self.drain = False
+
+    def for_bank(self, b: int) -> list[_Req]:
+        return [r for r in self.buf if r.bank == b]
+
+
+class RefreshLedger:
+    """Refresh due/issued accounting: the per-bank postpone/pull-in ledger
+    plus the rank-level (all-bank) pending counter."""
+
+    def __init__(self, timing: DramTiming):
+        nb = timing.n_banks
+        self.tREFI = timing.tREFI
+        self.issued = np.zeros(nb, dtype=int)
+        self.phase = np.arange(nb) * timing.tREFI_pb   # staggered schedule
+        self.ref_sub_counter = np.zeros(nb, dtype=int)
+        self.max_abs_lag = 0
+        self.ab_pending = 0          # due-but-not-started all-bank refs
+        self.rank_drain = False      # REF_ab: stop new activates
+
+    def due(self, b: int, t: float) -> int:
+        if t < self.phase[b]:
+            return 0
+        return int(np.floor((t - self.phase[b]) / self.tREFI)) + 1
+
+    def lag(self, b: int, t: float) -> int:
+        return self.due(b, t) - int(self.issued[b])
+
+    def lag_all(self, t: float) -> list[int]:
+        due = np.floor((t - self.phase) / self.tREFI).astype(int) + 1
+        due[t < self.phase] = 0
+        return (due - self.issued).tolist()
+
+    def record_issue(self, b: int, t: float) -> None:
+        self.issued[b] += 1
+        self.max_abs_lag = max(self.max_abs_lag, abs(self.lag(b, t)))
+
+
 class DramSim:
-    """One simulation run. Construct then call .run()."""
+    """One simulation run. Construct then call .run().
+
+    `policy` may be a registry name ("dsarp", "elastic", ...), a
+    `repro.core.policy` instance, or a legacy `Policy` flag record.
+    """
 
     def __init__(self, timing: DramTiming, workload: Workload,
-                 policy: Policy, *, wbuf_cap: int = 64, wbuf_hi: int = 48,
-                 wbuf_lo: int = 16):
+                 policy: Union[str, Policy, RefreshPolicy], *,
+                 wbuf_cap: int = 64, wbuf_hi: int = 48, wbuf_lo: int = 16):
         self.T = timing
         self.wl = workload
-        self.pol = policy
+        # keep the spec so run() can resolve a FRESH policy instance each
+        # time — policies carry mutable state (e.g. a round-robin pointer);
+        # a caller passing an instance owns its lifecycle (one run each)
+        self._policy_spec = policy
+        self.policy: RefreshPolicy = resolve_policy(policy)
         self.wbuf_cap, self.wbuf_hi, self.wbuf_lo = wbuf_cap, wbuf_hi, wbuf_lo
         self.streams = workload.generate(timing.n_banks, timing.n_subarrays)
 
+    # --------------------------------------------------------- event heap
+    def _push(self, t: float, kind: str, data=None) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, data))
+        self._seq += 1
+
+    # -------------------------------------------------- refresh mechanics
+    def _start_pb_refresh(self, b: int, t: float) -> None:
+        T, banks, led = self.T, self.banks, self.ledger
+        banks.ref_until[b] = max(t, banks.free[b]) + T.tRFC_pb
+        if self.policy.sarp:
+            banks.ref_sub[b] = led.ref_sub_counter[b] % T.n_subarrays
+            if banks.open_sub[b] == banks.ref_sub[b]:
+                banks.open_row[b] = -1  # refresh closes that subarray's row
+        else:
+            banks.ref_sub[b] = -1       # whole bank unavailable
+            banks.open_row[b] = -1
+        led.ref_sub_counter[b] += 1
+        led.record_issue(b, t)
+        self.stats["ref_pb"] += 1
+        self._push(banks.ref_until[b], "sched")
+
+    def _start_ab_refresh(self, t: float) -> None:
+        T, banks, led = self.T, self.banks, self.ledger
+        end = t + T.tRFC_ab
+        for b in range(T.n_banks):
+            banks.ref_until[b] = end
+            if self.policy.sarp:
+                banks.ref_sub[b] = led.ref_sub_counter[b] % T.n_subarrays
+                if banks.open_sub[b] == banks.ref_sub[b]:
+                    banks.open_row[b] = -1
+                led.ref_sub_counter[b] += 1
+            else:
+                banks.ref_sub[b] = -1
+                banks.open_row[b] = -1
+        led.ab_pending -= 1
+        led.rank_drain = led.ab_pending > 0
+        self.stats["ref_ab"] += 1
+        self._push(end, "sched")
+
+    def _bank_available(self, b: int, sub: int, t: float) -> bool:
+        """Can a demand access to (b, sub) start at t?"""
+        banks = self.banks
+        if t < banks.free[b]:
+            return False
+        if t < banks.ref_until[b]:
+            if not self.policy.sarp:
+                return False
+            if banks.ref_sub[b] == sub:
+                return False            # same subarray as the refresh
+        if self.ledger.rank_drain:
+            return False
+        return True
+
+    def _refresh_step(self, t: float) -> None:
+        """The whole policy adapter: snapshot state into a MaintenanceView,
+        apply whatever the registered policy decides."""
+        pol, led, banks, nb = self.policy, self.ledger, self.banks, self.T.n_banks
+        if pol.ideal:
+            return
+        if pol.level == "ab":
+            if led.ab_pending <= 0:
+                return
+            view = MaintenanceView(
+                now=t, n_banks=nb, budget=self.T.refresh_budget,
+                lag=[0] * nb, demand=[0] * nb,
+                ready=[True] * nb, idle=[True] * nb,
+                write_window=self.wbuf.drain, max_issues=1,
+                rank_due=led.ab_pending,
+                rank_quiet=bool((banks.free <= t).all()
+                                and (banks.ref_until <= t).all()))
+            for d in pol.select(view):
+                if d.bank == ALL_BANKS:
+                    self._start_ab_refresh(t)
+            return
+        # ---- per-bank policies
+        wb = self.wbuf.per_bank
+        view = MaintenanceView(
+            now=t, n_banks=nb, budget=self.T.refresh_budget,
+            lag=led.lag_all(t),
+            demand=[len(self.read_q[b]) + int(wb[b]) for b in range(nb)],
+            ready=(banks.ref_until <= t).tolist(),
+            idle=(banks.free <= t).tolist(),
+            write_window=self.wbuf.drain, max_issues=1)
+        for d in pol.select(view):
+            self._start_pb_refresh(d.bank, t)
+
+    # --------------------------------------------------- demand service
+    def _pick_and_start(self, t: float) -> bool:
+        T, banks, bus, wbuf = self.T, self.banks, self.bus, self.wbuf
+        started = False
+        order = np.argsort(banks.free)   # favor longest-idle banks
+        for b in order:
+            q = self.read_q[b]
+            serving_writes = wbuf.drain
+            reqs = wbuf.for_bank(b) if serving_writes else q
+            if not reqs:
+                # outside drain mode, opportunistically serve writes when
+                # a bank has no reads and buffer is non-trivially full
+                if not serving_writes and not q and len(wbuf) > self.wbuf_lo:
+                    reqs = wbuf.for_bank(b)
+                if not reqs:
+                    continue
+            # FR-FCFS: row hit first, then oldest
+            hit = [r for r in reqs if r.row == banks.open_row[b]]
+            r = hit[0] if hit else reqs[0]
+            if not self._bank_available(b, r.sub, t):
+                continue
+            is_hit = r.row == banks.open_row[b]
+            lat = T.row_hit if is_hit else T.row_miss
+            if self.policy.sarp and t < banks.ref_until[b]:
+                lat += T.sarp_penalty    # peripheral sharing penalty
+            # bus serialization + turnaround
+            turn = 0.0
+            if r.is_write != bus.last_op_write:
+                turn = T.tRTW if r.is_write else T.tWTR
+            data_start = max(t + lat - T.tBL, bus.free + turn)
+            done = data_start + T.tBL
+            banks.free[b] = done + (T.tWR if r.is_write else 0.0)
+            if banks.free[b] > done:
+                self._push(banks.free[b], "sched")  # wake at tWR end
+            bus.free = done
+            bus.last_op_write = r.is_write
+            banks.open_row[b] = r.row
+            banks.open_sub[b] = r.sub
+            self.stats["hits" if is_hit else "misses"] += 1
+            if r.is_write:
+                wbuf.remove(r)
+                self.stats["writes"] += 1
+            else:
+                q.remove(r)
+                self.stats["reads"] += 1
+                self.read_lat.append(done - r.t_arrive)
+            self._push(done, "done", r)
+            started = True
+        return started
+
+    # ----------------------------------------------------- core front-end
+    def _core_try(self, c: int, t: float) -> None:
+        s = self.streams[c]
+        n = len(s["is_write"])
+        while self.next_idx[c] < n:
+            i = self.next_idx[c]
+            if t < self.next_issue[c]:
+                self._push(self.next_issue[c], "core", c)
+                return
+            if s["is_write"][i]:
+                if self.wbuf.full:
+                    self.blocked_write[c] = True
+                    return
+                r = _Req(c, i, True, int(s["bank"][i]), int(s["row"][i]),
+                         int(s["subarray"][i]), t)
+                self.wbuf.add(r)
+                self._complete_one(c, t)
+            else:
+                if self.out_reads[c] >= self.wl.mlp:
+                    return
+                r = _Req(c, i, False, int(s["bank"][i]), int(s["row"][i]),
+                         int(s["subarray"][i]), t)
+                self.read_q[r.bank].append(r)
+                self.out_reads[c] += 1
+            self.next_idx[c] += 1
+            self.next_issue[c] = t + s["think"][i]
+
+    def _complete_one(self, c: int, t: float) -> None:
+        self.remaining[c] -= 1
+        if self.remaining[c] == 0:
+            self.finish[c] = t
+
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
-        T, pol = self.T, self.pol
+        self.policy = resolve_policy(self._policy_spec)
+        T, pol = self.T, self.policy
         nb, ncore = T.n_banks, self.wl.n_cores
-        heap: list = []
-        seq = 0
 
-        def push(t, kind, data=None):
-            nonlocal seq
-            heapq.heappush(heap, (t, seq, kind, data))
-            seq += 1
+        # ---- machine state
+        self._heap: list = []
+        self._seq = 0
+        self.banks = BankState(nb)
+        self.bus = BusState()
+        self.wbuf = WriteBuffer(nb, self.wbuf_cap, self.wbuf_hi, self.wbuf_lo)
+        self.ledger = RefreshLedger(T)
+        self.read_q: list[list[_Req]] = [[] for _ in range(nb)]
 
-        # ---- state
-        bank_free = np.zeros(nb)            # busy with a demand access until
-        bank_ref_until = np.zeros(nb)       # refresh occupancy until
-        bank_ref_sub = np.full(nb, -1)      # subarray being refreshed
-        open_row = np.full(nb, -1)
-        open_sub = np.full(nb, -1)
-        bus_free = 0.0
-        last_op_write = False
-        read_q: list[list[_Req]] = [[] for _ in range(nb)]
-        wbuf: list[_Req] = []
-        drain = False
-        rank_drain_for_ab = False           # REF_ab: stop new activates
-        ab_pending = 0                      # due-but-not-started all-bank refs
+        # ---- core state
+        self.next_idx = np.zeros(ncore, dtype=int)
+        self.out_reads = np.zeros(ncore, dtype=int)
+        self.next_issue = np.zeros(ncore)
+        self.finish = np.full(ncore, np.nan)
+        self.remaining = np.array([len(s["is_write"]) for s in self.streams])
+        self.blocked_write = np.zeros(ncore, dtype=bool)
 
-        # per-bank refresh bookkeeping (pb policies)
-        issued = np.zeros(nb, dtype=int)
-        phase = np.arange(nb) * T.tREFI_pb  # staggered due schedule
-        rr_next = 0
-        ref_sub_counter = np.zeros(nb, dtype=int)
-        max_abs_lag = 0
+        self.read_lat: list[float] = []
+        self.stats = dict(reads=0, writes=0, hits=0, misses=0,
+                          ref_pb=0, ref_ab=0)
 
-        # core state
-        next_idx = np.zeros(ncore, dtype=int)
-        out_reads = np.zeros(ncore, dtype=int)
-        next_issue = np.zeros(ncore)
-        finish = np.full(ncore, np.nan)
-        remaining = np.array([len(s["is_write"]) for s in self.streams])
-        blocked_write = np.zeros(ncore, dtype=bool)
-
-        read_lat: list[float] = []
-        stats = dict(reads=0, writes=0, hits=0, misses=0, ref_pb=0, ref_ab=0)
-
-        def due_count(b, t):
-            return int(np.floor((t - phase[b]) / T.tREFI)) + 1 if t >= phase[b] else 0
-
-        def lag(b, t):
-            return due_count(b, t) - issued[b]
-
-        # -------------------------------------------------- refresh helpers
-        def start_pb_refresh(b, t):
-            nonlocal max_abs_lag
-            bank_ref_until[b] = max(t, bank_free[b]) + T.tRFC_pb
-            if pol.sarp:
-                bank_ref_sub[b] = ref_sub_counter[b] % T.n_subarrays
-                if open_sub[b] == bank_ref_sub[b]:
-                    open_row[b] = -1        # refresh closes that subarray's row
-            else:
-                bank_ref_sub[b] = -1        # whole bank unavailable
-                open_row[b] = -1
-            ref_sub_counter[b] += 1
-            issued[b] += 1
-            stats["ref_pb"] += 1
-            max_abs_lag = max(max_abs_lag, abs(lag(b, t)))
-            push(bank_ref_until[b], "sched")
-
-        def start_ab_refresh(t):
-            nonlocal ab_pending, rank_drain_for_ab
-            end = t + T.tRFC_ab
-            for b in range(nb):
-                bank_ref_until[b] = end
-                if pol.sarp:
-                    bank_ref_sub[b] = ref_sub_counter[b] % T.n_subarrays
-                    if open_sub[b] == bank_ref_sub[b]:
-                        open_row[b] = -1
-                    ref_sub_counter[b] += 1
-                else:
-                    bank_ref_sub[b] = -1
-                    open_row[b] = -1
-            ab_pending -= 1
-            rank_drain_for_ab = ab_pending > 0
-            stats["ref_ab"] += 1
-            push(end, "sched")
-
-        def bank_available(b, sub, t):
-            """Can a demand access to (b, sub) start at t?"""
-            if t < bank_free[b]:
-                return False
-            if t < bank_ref_until[b]:
-                if not pol.sarp:
-                    return False
-                if bank_ref_sub[b] == sub:
-                    return False            # same subarray as the refresh
-            if rank_drain_for_ab:
-                return False
-            return True
-
-        def refresh_mgmt(t):
-            nonlocal rank_drain_for_ab
-            if pol.ideal:
-                return
-            if pol.level == "ab":
-                if rank_drain_for_ab and all(bank_free <= t) and \
-                        all(bank_ref_until <= t):
-                    start_ab_refresh(t)
-                return
-            # ---- per-bank policies
-            if not pol.ooo:
-                # strict round-robin (LPDDR baseline): the due bank is blocked
-                # at its scheduled time — the refresh begins the moment the
-                # in-flight access finishes, regardless of pending demand.
-                b = rr_next % nb
-                if lag(b, t) >= 1 and t >= bank_ref_until[b]:
-                    start_pb_refresh(b, t)
-                    _advance_rr()
-                return
-            # ---- DARP out-of-order
-            budget = T.refresh_budget
-            # forced refreshes first: lag at the budget edge
-            for b in range(nb):
-                if lag(b, t) >= budget and t >= bank_ref_until[b]:
-                    # block the bank: refresh starts when current access ends
-                    start_pb_refresh(b, t)
-                    return
-            pending_total = sum(lag(b, t) for b in range(nb) if lag(b, t) > 0)
-            if pending_total <= 0 and not (pol.wrp and drain):
-                return
-            # candidate banks: idle, no pending demand, not already refreshing
-            def demand(b):
-                nw = sum(1 for r in wbuf if r.bank == b)
-                return len(read_q[b]) + nw
-            cands = [b for b in range(nb)
-                     if t >= bank_free[b] and t >= bank_ref_until[b]
-                     and lag(b, t) > -budget]
-            if not cands:
-                return
-            if pol.wrp and drain:
-                # write-refresh parallelization: hide a refresh under the
-                # write batch by refreshing a bank with no demand of its own
-                # (pull-in allowed down to -budget). Refreshing a bank that
-                # still holds batch writes would lengthen the drain instead.
-                free = [b for b in cands if demand(b) == 0]
-                if free:
-                    b = max(free, key=lambda x: lag(x, t))
-                    start_pb_refresh(b, t)
-                    return
-                # fall through to plain out-of-order below
-            # out-of-order: only refresh banks that owe one AND are idle
-            idle = [b for b in cands if demand(b) == 0 and lag(b, t) > 0]
-            if idle:
-                b = max(idle, key=lambda x: lag(x, t))
-                start_pb_refresh(b, t)
-
-        def _advance_rr():
-            nonlocal rr_next
-            rr_next += 1
-
-        # --------------------------------------------------- demand service
-        def pick_and_start(t):
-            nonlocal bus_free, last_op_write, drain
-            started = False
-            order = np.argsort(bank_free)    # favor longest-idle banks
-            for b in order:
-                q = read_q[b]
-                serving_writes = drain
-                reqs = ([r for r in wbuf if r.bank == b] if serving_writes
-                        else q)
-                if not reqs:
-                    # outside drain mode, opportunistically serve writes when
-                    # a bank has no reads and buffer is non-trivially full
-                    if not serving_writes and not q and len(wbuf) > self.wbuf_lo:
-                        reqs = [r for r in wbuf if r.bank == b]
-                    if not reqs:
-                        continue
-                # FR-FCFS: row hit first, then oldest
-                hit = [r for r in reqs if r.row == open_row[b]]
-                r = hit[0] if hit else reqs[0]
-                if not bank_available(b, r.sub, t):
-                    continue
-                is_hit = r.row == open_row[b]
-                lat = T.row_hit if is_hit else T.row_miss
-                if pol.sarp and t < bank_ref_until[b]:
-                    lat += T.sarp_penalty    # peripheral sharing penalty
-                # bus serialization + turnaround
-                turn = 0.0
-                if r.is_write != last_op_write:
-                    turn = T.tRTW if r.is_write else T.tWTR
-                data_start = max(t + lat - T.tBL, bus_free + turn)
-                done = data_start + T.tBL
-                bank_free[b] = done + (T.tWR if r.is_write else 0.0)
-                if bank_free[b] > done:
-                    push(bank_free[b], "sched")   # wake scheduler at tWR end
-                bus_free = done
-                last_op_write = r.is_write
-                open_row[b] = r.row
-                open_sub[b] = r.sub
-                stats["hits" if is_hit else "misses"] += 1
-                if r.is_write:
-                    wbuf.remove(r)
-                    stats["writes"] += 1
-                    if drain and len(wbuf) <= self.wbuf_lo:
-                        drain = False
-                else:
-                    q.remove(r)
-                    stats["reads"] += 1
-                    read_lat.append(done - r.t_arrive)
-                push(done, "done", r)
-                started = True
-            return started
-
-        # ------------------------------------------------------- core model
-        def core_try(c, t):
-            nonlocal drain
-            s = self.streams[c]
-            n = len(s["is_write"])
-            while next_idx[c] < n:
-                i = next_idx[c]
-                if t < next_issue[c]:
-                    push(next_issue[c], "core", c)
-                    return
-                if s["is_write"][i]:
-                    if len(wbuf) >= self.wbuf_cap:
-                        blocked_write[c] = True
-                        return
-                    r = _Req(c, i, True, int(s["bank"][i]), int(s["row"][i]),
-                             int(s["subarray"][i]), t)
-                    wbuf.append(r)
-                    if len(wbuf) >= self.wbuf_hi:
-                        drain = True
-                    _complete_one(c, t, was_write=True)
-                else:
-                    if out_reads[c] >= self.wl.mlp:
-                        return
-                    r = _Req(c, i, False, int(s["bank"][i]), int(s["row"][i]),
-                             int(s["subarray"][i]), t)
-                    read_q[r.bank].append(r)
-                    out_reads[c] += 1
-                next_idx[c] += 1
-                next_issue[c] = t + s["think"][i]
-
-        def _complete_one(c, t, was_write):
-            remaining[c] -= 1
-            if remaining[c] == 0:
-                finish[c] = t
-
-        # ------------------------------------------------------- event loop
+        # ---- event seeding
         for c in range(ncore):
-            push(0.0, "core", c)
+            self._push(0.0, "core", c)
         if not pol.ideal:
             if pol.level == "ab":
-                push(T.tREFI, "ab_due")
-            # pb due times are computed analytically via lag(); the periodic
-            # tick only guarantees postponed refreshes get retried
-            push(T.tREFI_pb, "tick")
+                self._push(T.tREFI, "ab_due")
+            # pb due times are computed analytically via the ledger; the
+            # periodic tick only guarantees postponed refreshes get retried
+            self._push(T.tREFI_pb, "tick")
 
         t = 0.0
         guard = 0
-        while heap and np.isnan(finish).any():
-            t, _, kind, data = heapq.heappop(heap)
+        while self._heap and np.isnan(self.finish).any():
+            t, _, kind, data = heapq.heappop(self._heap)
             guard += 1
             if guard > 20_000_000:
                 raise RuntimeError("simulator runaway")
             if kind == "ab_due":
-                ab_pending += 1
-                rank_drain_for_ab = True
-                push(t + T.tREFI, "ab_due")
+                self.ledger.ab_pending += 1
+                self.ledger.rank_drain = True
+                self._push(t + T.tREFI, "ab_due")
             elif kind == "tick":
-                push(t + T.tREFI_pb, "tick")
+                self._push(t + T.tREFI_pb, "tick")
             elif kind == "done":
                 r: _Req = data
                 if not r.is_write:
-                    out_reads[r.core] -= 1
-                    _complete_one(r.core, t, was_write=False)
-                    core_try(r.core, t)
+                    self.out_reads[r.core] -= 1
+                    self._complete_one(r.core, t)
+                    self._core_try(r.core, t)
                 else:
                     # drain progress may unblock writers
                     for c in range(ncore):
-                        if blocked_write[c] and len(wbuf) < self.wbuf_cap:
-                            blocked_write[c] = False
-                            core_try(c, t)
+                        if self.blocked_write[c] and not self.wbuf.full:
+                            self.blocked_write[c] = False
+                            self._core_try(c, t)
             elif kind == "core":
-                core_try(data, t)
+                self._core_try(data, t)
             # after every event: refresh mgmt then demand scheduling
-            refresh_mgmt(t)
-            pick_and_start(t)
+            self._refresh_step(t)
+            self._pick_and_start(t)
 
-        makespan = float(np.nanmax(finish))
+        makespan = float(np.nanmax(self.finish))
+        stats = self.stats
         # ---- energy proxy (arbitrary units; relative comparisons only).
         # Coefficients chosen so refresh is ~8-15% of total at 32Gb and
         # background dominates — matching DRAM power breakdowns; the paper's
@@ -396,22 +445,24 @@ class DramSim:
              + 12.0 * stats["misses"]              # activates+precharges
              + 6.0 * (stats["reads"] + stats["writes"])
              + 0.15 * T.tRFC_pb * stats["ref_pb"]  # refresh energy ~ latency
-             + 0.15 * T.tRFC_ab * stats["ref_ab"] * self.T.n_banks / 2)
-        rl = np.array(read_lat) if read_lat else np.array([0.0])
+             + 0.15 * T.tRFC_ab * stats["ref_ab"] * T.n_banks / 2)
+        rl = np.array(self.read_lat) if self.read_lat else np.array([0.0])
         return SimResult(
             policy=pol.name, density_gb=T.density_gb, makespan=makespan,
-            core_finish=[float(x) for x in finish],
+            core_finish=[float(x) for x in self.finish],
             reads_done=stats["reads"], writes_done=stats["writes"],
             avg_read_latency=float(rl.mean()),
             p99_read_latency=float(np.percentile(rl, 99)),
             refreshes_pb=stats["ref_pb"], refreshes_ab=stats["ref_ab"],
             row_hits=stats["hits"], row_misses=stats["misses"], energy=e,
-            max_abs_lag=int(max_abs_lag),
+            max_abs_lag=int(self.ledger.max_abs_lag),
         )
 
 
 def run_policy(policy_name: str, density_gb: int, workload: Workload,
                **kw) -> SimResult:
+    """Run any registered policy (see `repro.core.policy.list_policies()`)
+    at the given density."""
     from repro.core.refresh.timing import timing_for_density
     return DramSim(timing_for_density(density_gb), workload,
-                   POLICIES[policy_name], **kw).run()
+                   policy_name, **kw).run()

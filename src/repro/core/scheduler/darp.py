@@ -1,5 +1,5 @@
-"""DARP as a framework feature: the paper's refresh-scheduling algorithm
-abstracted over generic maintenance "banks".
+"""Generic maintenance scheduling over framework "banks" — a compatibility
+wrapper around the shared `repro.core.policy` objects.
 
 A *bank* is any resource that needs periodic maintenance:
   * training   : a parameter/optimizer shard whose checkpoint snapshot must
@@ -7,27 +7,35 @@ A *bank* is any resource that needs periodic maintenance:
   * serving    : a KV-cache page-group whose staged bf16 pages must be
                  compressed (re-quantized) every `interval` decode rounds.
 
-The scheduler reproduces, exactly, the paper's mechanism:
-  * out-of-order selection: refresh an *idle* bank (no pending demand)
-    instead of the round-robin one,
-  * write-window parallelization (WRP): during a write phase, pull
-    maintenance in (up to `budget` early) on banks with no demand,
-  * the JEDEC-style postpone/pull-in budget: for every bank, at all times,
-      -budget <= due(now) - issued <= budget,
-    with forced maintenance when the postpone budget is exhausted —
-    the data-integrity guarantee.
+The decision logic itself lives in ONE place — `repro.core.policy` — and
+is the same code the timing-accurate `DramSim` runs: this class only keeps
+the due/issued ledger (phases, counts, last-issue times), builds a
+`MaintenanceView` per call, and records whatever the policy returns.
+Policies are resolved by registry name, so anything registered (including
+post-paper additions like "elastic" and "hira") drives the serving and
+checkpoint engines unchanged:
 
-`DramSim` (core/refresh/sim.py) is the timing-accurate version of the same
-policy; property tests check both enforce the identical budget invariant.
+    DarpScheduler(n_banks=8, interval=4.0, policy="hira")
+
+`SchedulerPolicy` remains as a legacy enum shim for the four historical
+framework spellings; its members resolve through the same registry.
+
+The JEDEC-style postpone/pull-in budget is the data-integrity guarantee:
+for every bank, at all times, -budget <= due(now) - issued <= budget, with
+forced maintenance when the postpone budget is exhausted.
 """
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+from repro.core.policy import (ALL_BANKS, MaintenanceView, RefreshPolicy,
+                               resolve_policy)
 
 
 class SchedulerPolicy(str, enum.Enum):
+    """Legacy spellings; each value is a `repro.core.policy` registry name."""
     ALL_BANK = "all_bank"        # stop-the-world maintenance (REF_ab analogue)
     ROUND_ROBIN = "round_robin"  # strict in-order per-bank (REF_pb analogue)
     DARP_OOO = "darp_ooo"        # out-of-order only
@@ -45,18 +53,18 @@ class DarpScheduler:
     (steps, rounds, seconds) and strictly non-decreasing across calls."""
 
     def __init__(self, n_banks: int, interval: float, *,
-                 budget: int = 8, policy: SchedulerPolicy = SchedulerPolicy.DARP,
+                 budget: int = 8,
+                 policy: Union[str, SchedulerPolicy, RefreshPolicy] = "darp",
                  stagger: bool = True):
         assert n_banks >= 1 and interval > 0 and budget >= 1
         self.n_banks = n_banks
         self.interval = float(interval)
         self.budget = budget
-        self.policy = SchedulerPolicy(policy)
+        self.policy: RefreshPolicy = resolve_policy(policy)
         self.banks = [BankState() for _ in range(n_banks)]
         # stagger phases like LPDDR's tREFI_pb so maintenance spreads out
         self.phase = [(i * self.interval / n_banks if stagger else 0.0)
                       for i in range(n_banks)]
-        self._rr_next = 0
         self._last_now = float("-inf")
 
     # ------------------------------------------------------------- queries
@@ -74,74 +82,36 @@ class DarpScheduler:
 
     # -------------------------------------------------------------- select
     def select(self, now: float, *, demand: Sequence[int],
-               write_window: bool = False, max_issues: int = 1) -> list[int]:
+               write_window: bool = False, max_issues: int = 1,
+               ready: Optional[Sequence[bool]] = None,
+               idle: Optional[Sequence[bool]] = None) -> list[int]:
         """Pick up to `max_issues` banks to maintain at `now`.
 
         demand[b]: pending demand work on bank b (queue depth). The caller
         MUST perform the maintenance for every returned bank (they are
-        recorded as issued).
+        recorded as issued). `ready`/`idle` default to all-True — generic
+        engines can always start maintenance; the timing simulator passes
+        real occupancy masks.
         """
         assert len(demand) == self.n_banks
         assert now >= self._last_now, "time must be monotonic"
         self._last_now = now
+        view = MaintenanceView(
+            now=now, n_banks=self.n_banks, budget=self.budget,
+            lag=[self.lag(b, now) for b in range(self.n_banks)],
+            demand=list(demand),
+            ready=list(ready) if ready is not None else [True] * self.n_banks,
+            idle=list(idle) if idle is not None else [True] * self.n_banks,
+            write_window=write_window, max_issues=max_issues)
         picks: list[int] = []
-
-        def issue(b: int):
-            self.banks[b].issued += 1
-            self.banks[b].last_issue_time = now
-            picks.append(b)
-
-        # 1. forced maintenance: postpone budget exhausted (all policies) —
-        #    the data-integrity guarantee overrides demand AND max_issues.
-        for b in range(self.n_banks):
-            if self.lag(b, now) >= self.budget:
-                issue(b)
-
-        if self.policy == SchedulerPolicy.ALL_BANK:
-            # stop-the-world: when anything is due, sweep EVERY owed bank
-            # (max_issues does not apply — that is the point of REF_ab)
-            if any(self.lag(b, now) > 0 for b in range(self.n_banks)):
-                for b in range(self.n_banks):
-                    if self.lag(b, now) > 0 and b not in picks:
-                        issue(b)
-            return picks
-        if len(picks) >= max_issues:
-            return picks
-
-        if self.policy == SchedulerPolicy.ROUND_ROBIN:
-            while len(picks) < max_issues:
-                b = self._rr_next % self.n_banks
-                if self.lag(b, now) > 0:
-                    issue(b)
-                    self._rr_next += 1
-                else:
-                    break
-            return picks
-
-        # ---- DARP variants
-        if self.policy == SchedulerPolicy.DARP and write_window:
-            # WRP: pull in maintenance on zero-demand banks (down to -budget)
-            cands = sorted(
-                (b for b in range(self.n_banks)
-                 if demand[b] == 0 and self.lag(b, now) > -self.budget
-                 and b not in picks),
-                key=lambda b: -self.lag(b, now))
-            for b in cands:
-                if len(picks) >= max_issues:
-                    return picks
-                issue(b)
-            return picks
-
-        # out-of-order: serve owed banks that are currently idle, most-owed
-        # first; never touch a bank with pending demand unless forced above.
-        cands = sorted(
-            (b for b in range(self.n_banks)
-             if demand[b] == 0 and self.lag(b, now) > 0 and b not in picks),
-            key=lambda b: -self.lag(b, now))
-        for b in cands:
-            if len(picks) >= max_issues:
-                break
-            issue(b)
+        for d in self.policy.select(view):
+            # a rank-level decision means "maintain every bank now"
+            targets = (range(self.n_banks) if d.bank == ALL_BANKS
+                       else (d.bank,))
+            for b in targets:
+                self.banks[b].issued += 1
+                self.banks[b].last_issue_time = now
+                picks.append(b)
         return picks
 
     # ------------------------------------------------------------ invariant

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import get_arch
-from repro.core.scheduler import SchedulerPolicy
+from repro.core.policy import list_policies
 from repro.kvcache import PagedKVConfig
 from repro.models.api import get_model
 from repro.models.dims import make_dims
@@ -26,8 +26,7 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new", type=int, default=16)
-    ap.add_argument("--policy", default="darp",
-                    choices=[p.value for p in SchedulerPolicy])
+    ap.add_argument("--policy", default="darp", choices=list_policies())
     ap.add_argument("--page-size", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -44,8 +43,7 @@ def main():
         head_dim=cfg.attention.head_dim, page_size=args.page_size,
         n_pages=256, n_staging=12, n_groups=4, max_seqs=8)
     eng = ServingEngine(params, cfg, dims, kv_cfg,
-                        ServeConfig(max_batch=4,
-                                    policy=SchedulerPolicy(args.policy)))
+                        ServeConfig(max_batch=4, policy=args.policy))
     for i in range(args.requests):
         eng.submit(Request(prompt=[1 + i, 2, 3], max_new=args.new, rid=i))
     t0 = time.perf_counter()

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointConfig
 from repro.common.config import get_arch
-from repro.core.scheduler import SchedulerPolicy
+from repro.core.policy import list_policies
 from repro.data import Prefetcher, SyntheticLMData
 from repro.models.dims import make_dims
 from repro.optim import OptConfig
@@ -37,7 +37,7 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-interval", type=int, default=25)
     ap.add_argument("--ckpt-policy", default="darp",
-                    choices=[p.value for p in SchedulerPolicy])
+                    choices=list_policies())
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,7 +59,7 @@ def main():
     if args.ckpt_dir:
         ck = CheckpointConfig(directory=args.ckpt_dir,
                               interval=args.ckpt_interval,
-                              policy=SchedulerPolicy(args.ckpt_policy))
+                              policy=args.ckpt_policy)
     tr = Trainer(TrainerConfig(total_steps=args.steps, ckpt=ck, log_every=10),
                  step_fn, state, data)
     if tr.maybe_restore():

@@ -11,21 +11,22 @@ Per decode round:
      red-line the engine force-compresses (the paper's budget-exhausted
      forced refresh).
 
-Policies (mirrors the DRAM simulator):
-  all_bank    : stop-the-world — compress EVERYTHING when staging fills,
-  round_robin : fixed group order each round,
-  darp        : out-of-order + write-window parallelization.
+Policies resolve by `repro.core.policy` registry name — the same objects
+the DRAM timing simulator runs ("all_bank", "round_robin", "darp", plus
+registry extras like "elastic" and "hira"); `ServeConfig(policy="darp")`.
+The legacy `SchedulerPolicy` enum spellings still work.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import RefreshPolicy
 from repro.core.scheduler import DarpScheduler, SchedulerPolicy
 from repro.kvcache import PagedKVCache, PagedKVConfig
 from repro.models.dims import Dims
@@ -40,12 +41,13 @@ class Request:
     out: list = field(default_factory=list)
     sid: int = -1
     done: bool = False
+    _next: int = -1              # next token to decode; set at admission
 
 
 @dataclass
 class ServeConfig:
     max_batch: int = 4
-    policy: SchedulerPolicy = SchedulerPolicy.DARP
+    policy: Union[str, SchedulerPolicy, RefreshPolicy] = "darp"
     refresh_interval: float = 4.0      # rounds between group maintenance
     budget: int = 8
     max_compress_per_round: int = 1
@@ -76,6 +78,9 @@ class ServingEngine:
     def _admit(self) -> None:
         while self.queue and len(self.active) < self.scfg.max_batch:
             req = self.queue.pop(0)
+            if not req.prompt:           # nothing to decode from
+                req.done = True
+                continue
             req.sid = self.cache.new_seq()
             # prefill: feed prompt tokens one at a time through decode path
             # (reference engine; TPU path uses the chunked prefill graph)

@@ -12,7 +12,6 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointConfig, CheckpointEngine
-from repro.core.scheduler import SchedulerPolicy
 from repro.data import Prefetcher
 
 

@@ -1,0 +1,72 @@
+"""Tiny deterministic stand-in for `hypothesis` when it isn't installed.
+
+Implements just the surface the tests use — `given`, `settings`, and the
+`integers` / `sampled_from` / `tuples` / `lists` strategies — by drawing
+`max_examples` pseudo-random examples from a fixed seed. No shrinking, no
+database, no edge-case bias: strictly weaker than real hypothesis, but it
+keeps the property tests exercising the invariants on machines without the
+dependency. Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self.gen = gen          # gen(rs) -> drawn value
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rs: int(rs.randint(min_value, max_value + 1)))
+
+
+def sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rs: items[rs.randint(0, len(items))])
+
+
+def tuples(*strats) -> _Strategy:
+    return _Strategy(lambda rs: tuple(s.gen(rs) for s in strats))
+
+
+def lists(strat: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    return _Strategy(
+        lambda rs: [strat.gen(rs)
+                    for _ in range(rs.randint(min_size, max_size + 1))])
+
+
+def settings(max_examples: int = 50, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def run():
+            n = getattr(run, "_max_examples",
+                        getattr(fn, "_max_examples", 50))
+            rs = np.random.RandomState(0)
+            for _ in range(n):
+                fn(**{k: s.gen(rs) for k, s in strategies.items()})
+        # no functools.wraps: copying __wrapped__ would make pytest see the
+        # original signature and treat the drawn arguments as fixtures
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco
+
+
+#: lets `from _hypothesis_shim import ... strategies as st` mirror
+#: `from hypothesis import ... strategies as st`
+strategies = sys.modules[__name__]

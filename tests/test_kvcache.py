@@ -2,7 +2,11 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback; see _hypothesis_shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kvcache import PagedKVCache, PagedKVConfig, quantize_page
 from repro.kvcache.paged import page_quant_error

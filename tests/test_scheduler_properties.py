@@ -2,7 +2,11 @@
 the paper's central correctness invariant — holds under arbitrary demand."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback; see _hypothesis_shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.scheduler import DarpScheduler, SchedulerPolicy
 
