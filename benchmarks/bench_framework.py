@@ -70,6 +70,10 @@ def bench_darp_ckpt(steps: int = 40, interval: int = 8) -> dict:
 def bench_serving(n_requests: int = 6, max_new: int = 24,
                   policies: tuple = ("all_bank", "round_robin", "darp",
                                      "elastic", "hira")) -> dict:
+    """Sweep the serving engine over a policy axis (the serving engine
+    generates its own request stream; `benchmarks/run.py` passes
+    `fig_refresh.SERVING_POLICIES` so the axis is defined once, next to
+    the sweep-grid definitions)."""
     from repro.kvcache import PagedKVConfig
     from repro.models.api import get_model
     from repro.serving import Request, ServeConfig, ServingEngine

@@ -6,10 +6,14 @@ dicts go to results/bench/*.json.
   fig1  paper Fig.1: perf loss of REF_ab/REF_pb vs ideal across densities
   fig2  paper Fig.2: SARP service-timeline (read behind refresh)
   fig3  paper Fig.3: DSARP perf+energy vs baselines
+  sweep_grid     batched sweep engine: timed policy x scenario x density
+                 grid vs the scalar tick oracle + legacy DramSim loop
   darp_ckpt      framework DARP: checkpoint flush scheduling overhead
   serving        framework DARP: serving maintenance policies
   sarp_bytes     framework SARP: fused vs serial paged-attn HBM traffic
   kernel_micro   CPU reference micro-latencies
+
+`docs/figures.md` maps every emitted artifact to its paper figure.
 """
 from __future__ import annotations
 
@@ -30,13 +34,16 @@ def _emit(name: str, us: float, derived: str, payload) -> None:
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    reqs = 400 if fast else 1200
+    # the grid figures run through the batched sweep engine, so the
+    # per-cell load no longer needs to shrink much in --fast mode
+    reqs = 600 if fast else 1500
 
     from benchmarks import fig_refresh as FR
     from benchmarks import bench_framework as BF
 
     t0 = time.perf_counter()
-    f1 = FR.fig1(reqs=reqs)
+    runs = FR.fig_grids(reqs=reqs)     # one sweep set feeds fig1 AND fig3
+    f1 = FR.fig1(reqs=reqs, runs=runs)
     _emit("fig1_refresh_loss", (time.perf_counter() - t0) * 1e6,
           f"refpb_loss_32gb={f1[32]['ref_pb']:.3f};"
           f"refab_loss_32gb={f1[32]['ref_ab']:.3f}", f1)
@@ -48,11 +55,18 @@ def main() -> None:
           f"sarp_p99={f2['sarp_pb']['p99_read_ns']:.0f}ns", f2)
 
     t0 = time.perf_counter()
-    f3 = FR.fig3(reqs=reqs)
+    f3 = FR.fig3(reqs=reqs, runs=runs)
     _emit("fig3_dsarp", (time.perf_counter() - t0) * 1e6,
           f"dsarp_impr_32gb={f3[32]['dsarp']['improvement_vs_refab']:.3f};"
           f"dsarp_energy_vs_refab={f3[32]['dsarp']['energy_vs_refab']:.3f}",
           f3)
+
+    t0 = time.perf_counter()
+    sg = FR.sweep_grid(fast=fast)
+    _emit("sweep_grid", (time.perf_counter() - t0) * 1e6,
+          f"vs_dramsim_loop={sg['speedup_vs_dramsim_loop']}x;"
+          f"vs_scalar_tick={sg['speedup_vs_scalar_tick']}x;"
+          f"bit_identical={sg['bit_identical']}", sg)
 
     t0 = time.perf_counter()
     ck = BF.bench_darp_ckpt(steps=20 if fast else 40)
@@ -62,7 +76,8 @@ def main() -> None:
 
     t0 = time.perf_counter()
     sv = BF.bench_serving(n_requests=4 if fast else 6,
-                          max_new=12 if fast else 24)
+                          max_new=12 if fast else 24,
+                          policies=FR.SERVING_POLICIES)
     _emit("serving_policies", (time.perf_counter() - t0) * 1e6,
           f"darp_stalls={sv['darp']['forced_stalls']};"
           f"allbank_stalls={sv['all_bank']['forced_stalls']};"

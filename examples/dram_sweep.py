@@ -1,17 +1,27 @@
-"""Reproduce the paper's headline numbers from the DRAM simulator:
-Figure 1 (refresh loss vs density) and Figure 3 (DSARP vs baselines).
+"""Reproduce the paper's headline numbers from one batched grid sweep:
+Figure 1 (refresh loss vs density) and Figure 3 (DSARP vs baselines),
+plus a scenario x policy latency matrix from the sweep engine.
 
   PYTHONPATH=src:. python examples/dram_sweep.py [--fast]
+
+The figures used to loop the event-driven `DramSim` once per (workload,
+policy, density) point; they now run through `repro.core.sweep`, which
+advances the whole grid in lock-step (see docs/architecture.md).
 """
 import sys
 
 from benchmarks import fig_refresh as FR
+from repro.core.sweep import SweepSpec, sweep
 
 
 def main():
-    reqs = 400 if "--fast" in sys.argv else 1500
+    fast = "--fast" in sys.argv
+    # traces must span several tREFI intervals or all-bank refresh never
+    # fires and the Figure 1 ordering degenerates
+    reqs = 600 if fast else 1500
+    runs = FR.fig_grids(reqs=reqs)     # one sweep set feeds both figures
     print("== Figure 1: performance loss vs ideal (no refresh) ==")
-    f1 = FR.fig1(reqs=reqs)
+    f1 = FR.fig1(reqs=reqs, runs=runs)
     for d, row in f1.items():
         print(f"  {d:2d}Gb: REF_ab loss={row['ref_ab']*100:5.1f}%  "
               f"REF_pb loss={row['ref_pb']*100:5.1f}%")
@@ -21,12 +31,24 @@ def main():
         print(f"  {p:8s} avg={row['avg_read_ns']:6.1f}ns "
               f"p99={row['p99_read_ns']:7.1f}ns")
     print("== Figure 3: improvement over REF_ab / energy ==")
-    f3 = FR.fig3(reqs=reqs)
+    f3 = FR.fig3(reqs=reqs, runs=runs)
     for d, row in f3.items():
         print(f"  {d:2d}Gb: " + "  ".join(
             f"{p}:{row[p]['improvement_vs_refab']*100:+.1f}%"
             for p in ("ref_pb", "darp", "sarp_pb", "dsarp",
                       "elastic", "hira")))
+    print("== Sweep grid: avg read latency (ns) at 32Gb ==")
+    pols = ("ref_ab", "ref_pb", "darp", "dsarp", "elastic", "hira")
+    scens = ("read_heavy", "bank_camping", "subarray_conflict_adversarial",
+             "write_burst_draining")
+    res = sweep(SweepSpec(policies=pols, scenarios=scens, densities=(32,),
+                          reqs=reqs))
+    head = "".join(f"{s[:14]:>16}" for s in scens)
+    print(f"  {'policy':10s}{head}")
+    for p in pols:
+        row = "".join(f"{res.get(p, s, 32).avg_read_latency:16.1f}"
+                      for s in scens)
+        print(f"  {p:10s}{row}")
 
 
 if __name__ == "__main__":

@@ -87,7 +87,21 @@ class RefreshPolicy(Protocol):
 
 
 class PolicyBase:
-    """Convenience base: trait defaults + the shared forced-refresh sweep."""
+    """Convenience base: trait defaults + the shared forced-refresh sweep.
+
+    The four traits every engine consumes (see `RefreshPolicy`):
+      level : 'pb' = per-bank decisions; 'ab' = rank-level (all-bank)
+              refresh via `Decision(ALL_BANKS)`,
+      sarp  : subarray access-refresh parallelization — the timing sim
+              serves other-subarray accesses during a refresh (with a
+              peripheral-sharing penalty), and the sweep engine's
+              arbitration lets non-conflicting heads through,
+      ideal : no maintenance at all; engines skip `select()` entirely,
+      name  : registry name, stamped on results.
+    Policies that react to write drains read `view.write_window`
+    (DARP's WRP component, hira's pull-in); docstrings in `paper.py` /
+    `extras.py` state each registered policy's paper section and traits.
+    """
     name = "base"
     level = "pb"
     sarp = False

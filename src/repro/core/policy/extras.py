@@ -40,6 +40,12 @@ class ElasticPolicy(PolicyBase):
                                  worse time.
     The ±budget invariant is kept by the shared forced path (upper edge)
     and the `lag > -budget` pull-in floor (lower edge).
+
+    Not in the source paper — post-paper registry addition, motivated by
+    the refresh-access parallelism follow-up (arXiv:1805.01289).
+
+    Traits: level='pb' (per-bank) · sarp=False by default · write-drain:
+    ignored (pressure regimes come from `view.demand` instead).
     """
 
     def __init__(self, name: str = "elastic", sarp: bool = False,
@@ -101,6 +107,14 @@ class HiraPolicy(PolicyBase):
     only same-subarray requests wait. So owed banks are taken busiest
     first, falling back to idle banks when nothing is being accessed, and
     write windows additionally pull refreshes in on busy banks.
+
+    Not in the source paper — post-paper registry addition, motivated by
+    HiRA (arXiv:2209.10198); builds on the paper's §5 SARP substrate.
+
+    Traits: level='pb' (per-bank) · sarp=True (required — refreshing a
+    busy bank only hides behind accesses with subarray-level parallelism)
+    · write-drain: consumed (`view.write_window` triggers busy-bank
+    pull-in).
     """
     sarp = True
 

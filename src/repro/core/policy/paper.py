@@ -27,7 +27,12 @@ from repro.core.policy.registry import register_policy
 
 @register_policy("ideal")
 class IdealPolicy(PolicyBase):
-    """No refresh at all — the paper's upper-bound baseline."""
+    """No refresh at all — the paper's upper-bound baseline (the "ideal"
+    bar of Figures 1/3; §7 evaluation).
+
+    Traits: ideal=True (engines skip select() entirely) · level='pb'
+    (unused) · sarp=False · write-drain: ignored.
+    """
     ideal = True
 
     def __init__(self, name: str = "ideal"):
@@ -38,12 +43,17 @@ class IdealPolicy(PolicyBase):
 
 
 class AllBankPolicy(PolicyBase):
-    """REF_ab: stop-the-world maintenance.
+    """REF_ab: stop-the-world maintenance (paper §2, the DDR3 all-bank
+    refresh baseline; registered as "ref_ab"/"all_bank", and "sarp_ab"
+    for the §5 SARP-on-REF_ab variant).
 
     Timing simulator (`view.rank_due` set): the rank drains, then one
     tRFC_ab-long refresh covers every bank. Generic engines (rank_due==0):
     when anything is owed, sweep EVERY owed bank in one call — max_issues
     deliberately does not apply; that is the point of REF_ab.
+
+    Traits: level='ab' (rank-level) · sarp per registration (False for
+    "ref_ab"/"all_bank", True for "sarp_ab") · write-drain: ignored.
     """
     level = "ab"
 
@@ -69,11 +79,17 @@ class AllBankPolicy(PolicyBase):
 
 
 class RoundRobinPolicy(PolicyBase):
-    """REF_pb: strict in-order per-bank refresh (LPDDR baseline).
+    """REF_pb: strict in-order per-bank refresh (paper §3, the LPDDR
+    per-bank baseline; registered as "ref_pb"/"round_robin", and
+    "sarp_pb" for the §5 SARP-on-REF_pb variant).
 
     The due bank is maintained at its scheduled time regardless of pending
     demand — the refresh begins the moment the bank is free of refreshes,
     queueing behind any in-flight access.
+
+    Traits: level='pb' (per-bank) · sarp per registration (False for
+    "ref_pb"/"round_robin", True for "sarp_pb") · write-drain: ignored ·
+    stateful (round-robin pointer; one instance per engine run).
     """
 
     def __init__(self, name: str = "ref_pb", sarp: bool = False):
@@ -97,16 +113,24 @@ class RoundRobinPolicy(PolicyBase):
 
 
 class DarpPolicy(PolicyBase):
-    """DARP: out-of-order refresh (+ optional write-refresh parallelization).
+    """DARP: out-of-order refresh + optional write-refresh
+    parallelization (paper §4; registered as "darp_ooo" = §4.2 component
+    alone, "darp" = §4.2 + §4.3, "dsarp" = DARP with the §5 SARP trait,
+    i.e. the paper's final §6 mechanism).
 
-    Component 1 (always on): refresh an *idle* bank with no pending demand
-    instead of the round-robin one — most-owed first, and only banks that
-    actually owe a refresh (lag > 0).
+    Component 1 (always on; §4.2 out-of-order per-bank refresh): refresh
+    an *idle* bank with no pending demand instead of the round-robin one —
+    most-owed first, and only banks that actually owe a refresh (lag > 0).
 
-    Component 2 (`wrp=True`, active during write windows): hide refreshes
-    under the write drain by pulling maintenance in (down to -budget) on
-    banks with no demand of their own — refreshing a bank that still holds
-    batch writes would lengthen the drain instead.
+    Component 2 (`wrp=True`; §4.3 write-refresh parallelization, active
+    during write windows): hide refreshes under the write drain by pulling
+    maintenance in (down to -budget) on banks with no demand of their own
+    — refreshing a bank that still holds batch writes would lengthen the
+    drain instead.
+
+    Traits: level='pb' (per-bank) · wrp per registration (False for
+    "darp_ooo") · sarp per registration (True for "dsarp") · write-drain:
+    consumed when wrp=True (`view.write_window` triggers pull-in).
     """
 
     def __init__(self, name: str = "darp", wrp: bool = True,

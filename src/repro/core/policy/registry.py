@@ -31,6 +31,11 @@ def register_policy(name: str, factory: Callable[..., RefreshPolicy] = None,
     required arguments and must return a fresh `RefreshPolicy`. Name
     collisions raise unless `override=True` — silently replacing e.g.
     "darp" would change every engine's behavior at a distance.
+
+    Convention: the policy class docstring states the paper section it
+    implements (or "not in the source paper" for extras) and its traits
+    (level, sarp, write-drain use) — see `paper.py` / `extras.py`, and
+    `docs/policy-cookbook.md` for the end-to-end recipe.
     """
     def deco(obj):
         if not override and name in _REGISTRY:

@@ -1,6 +1,11 @@
 from repro.core.refresh.timing import DramTiming, DENSITIES
 from repro.core.refresh.workload import Workload, make_workload
-from repro.core.refresh.sim import DramSim, SimResult, POLICIES, run_policy
+from repro.core.refresh.scenarios import (Trace, list_scenarios, make_trace,
+                                          register_scenario)
+from repro.core.refresh.sim import (DramSim, SimResult, POLICIES,
+                                    energy_proxy, run_policy)
 
 __all__ = ["DramTiming", "DENSITIES", "Workload", "make_workload",
-           "DramSim", "SimResult", "POLICIES", "run_policy"]
+           "Trace", "list_scenarios", "make_trace", "register_scenario",
+           "DramSim", "SimResult", "POLICIES", "energy_proxy",
+           "run_policy"]

@@ -1,0 +1,295 @@
+"""Registry-style scenario (workload) library for the sweep engine.
+
+`workload.Workload` models the *closed-loop* front-end the timing-accurate
+`DramSim` needs (MLP-limited cores that stall on outstanding requests).
+The batched sweep engine (`repro.core.sweep`) instead consumes *open-loop
+traces*: flat arrays of (arrive_tick, bank, row, subarray, is_write),
+sorted by arrival — the shape that stacks across a (workload, policy,
+density) grid. This module is the library of such traces.
+
+Scenarios are registered by name, mirroring the policy registry:
+
+    @register_scenario("read_heavy")
+    def read_heavy(n_banks, n_subarrays, reqs, rs): ...
+
+    trace = make_trace("read_heavy", seed=1)       # deterministic per seed
+    list_scenarios()                               # sorted names
+
+Every generator receives a `numpy.random.RandomState` derived from
+(name, seed) so two scenarios in one grid never share a stream, and the
+same (name, seed) always reproduces the same trace bit-for-bit.
+
+The built-in library spans the pressure axes the paper's evaluation (and
+the arXiv:1805.01289 follow-up) show matter for refresh policies:
+
+  read_heavy               almost-pure reads, moderate locality
+  write_burst_draining     quiet read phases + write bursts that trip the
+                           write-drain watermark (exercises DARP's WRP)
+  row_buffer_friendly      long same-row runs (high hit rate; refresh
+                           closes rows, so REF cost is mostly re-activates)
+  bank_camping             traffic concentrated on two hot banks (DARP's
+                           idle-bank harvesting has easy pickings; the hot
+                           banks postpone to the budget edge)
+  subarray_conflict_adversarial
+                           accesses chase the subarray the round-robin
+                           refresh counter targets next (worst case for
+                           SARP, near-best for plain per-bank refresh)
+  trace_replay             replay an explicit (arrive, bank, row, sub,
+                           is_write) trace, e.g. captured from a real run
+  mixed                    the legacy `make_workload("mixed")` analogue
+  streaming                high-rate, high-locality bandwidth stress
+
+Times are integer *ticks* (the sweep engine's quantum, default 6 ns); a
+trace is density-independent — the grid reuses one trace per (scenario,
+seed) across every policy and density so cells stay comparable.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import numpy as np
+
+N_ROWS = 4096               # rows per bank exposed to scenarios
+
+_SCENARIOS: Dict[str, Callable] = {}
+
+
+@dataclass(frozen=True)
+class Trace:
+    """Open-loop request trace: parallel arrays sorted by `arrive`."""
+    name: str
+    arrive: np.ndarray          # int32 ticks, non-decreasing
+    bank: np.ndarray            # int32 in [0, n_banks)
+    row: np.ndarray             # int32 in [0, N_ROWS)
+    sub: np.ndarray             # int32 in [0, n_subarrays)
+    is_write: np.ndarray        # bool
+    n_banks: int
+    n_subarrays: int
+
+    def __len__(self) -> int:
+        return int(self.arrive.shape[0])
+
+    def validate(self) -> "Trace":
+        n = len(self)
+        assert all(len(a) == n for a in
+                   (self.bank, self.row, self.sub, self.is_write))
+        assert n > 0
+        assert (np.diff(self.arrive) >= 0).all(), "arrivals must be sorted"
+        assert self.arrive[0] >= 0
+        assert (0 <= self.bank).all() and (self.bank < self.n_banks).all()
+        assert (0 <= self.row).all() and (self.row < N_ROWS).all()
+        assert (0 <= self.sub).all() and (self.sub < self.n_subarrays).all()
+        return self
+
+
+def register_scenario(name: str, fn: Callable = None, *,
+                      override: bool = False):
+    """Register a trace generator under `name` (decorator or direct call).
+
+    The generator is called as `fn(n_banks, n_subarrays, reqs, rs, **cfg)`
+    and must return a `Trace`. Collisions raise unless `override=True`,
+    matching `register_policy`.
+    """
+    def deco(obj):
+        if not override and name in _SCENARIOS:
+            raise ValueError(
+                f"scenario {name!r} is already registered; pass "
+                f"override=True to replace it")
+        _SCENARIOS[name] = obj
+        return obj
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def list_scenarios() -> list[str]:
+    return sorted(_SCENARIOS)
+
+
+def _rs(name: str, seed: int) -> np.random.RandomState:
+    """Per-(scenario, seed) stream: stable across processes and runs."""
+    h = hashlib.sha256(f"{name}:{seed}".encode()).digest()
+    return np.random.RandomState(int.from_bytes(h[:4], "little"))
+
+
+def make_trace(name: str, n_banks: int = 8, n_subarrays: int = 8,
+               reqs: int = 800, seed: int = 0, **cfg) -> Trace:
+    """Generate the named scenario's trace (KeyError lists known names)."""
+    try:
+        fn = _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: "
+            f"{', '.join(sorted(_SCENARIOS))}") from None
+    return fn(n_banks, n_subarrays, reqs, _rs(name, seed), **cfg).validate()
+
+
+# --------------------------------------------------------------- helpers
+def _assemble(name, n_banks, n_subarrays, arrive, bank, row, is_write,
+              sub=None) -> Trace:
+    order = np.argsort(arrive, kind="stable")
+    arrive = np.asarray(arrive, np.int32)[order]
+    bank = np.asarray(bank, np.int32)[order]
+    row = np.asarray(row, np.int32)[order]
+    is_write = np.asarray(is_write, bool)[order]
+    sub = (row % n_subarrays if sub is None
+           else np.asarray(sub, np.int32)[order])
+    return Trace(name, arrive, bank, row, np.asarray(sub, np.int32),
+                 is_write, n_banks, n_subarrays)
+
+
+def _locality(rs, bank, row, p_reuse: float):
+    """With probability p_reuse, repeat the previous (bank, row)."""
+    reuse = rs.rand(len(bank)) < p_reuse
+    for i in range(1, len(bank)):
+        if reuse[i]:
+            bank[i] = bank[i - 1]
+            row[i] = row[i - 1]
+    return bank, row
+
+
+def _poisson_arrivals(rs, n: int, mean_gap: float) -> np.ndarray:
+    return np.floor(np.cumsum(rs.exponential(mean_gap, n))).astype(np.int64)
+
+
+# ------------------------------------------------------------- scenarios
+@register_scenario("read_heavy")
+def read_heavy(n_banks, n_subarrays, reqs, rs):
+    arrive = _poisson_arrivals(rs, reqs, 3.0)
+    bank = rs.randint(0, n_banks, reqs)
+    row = rs.randint(0, N_ROWS, reqs)
+    bank, row = _locality(rs, bank, row, 0.55)
+    is_write = rs.rand(reqs) < 0.05
+    return _assemble("read_heavy", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("write_burst_draining")
+def write_burst_draining(n_banks, n_subarrays, reqs, rs,
+                         burst: int = 48, phase_reads: int = 32):
+    """Quiet read phases punctuated by dense write bursts sized to trip the
+    engine's high watermark — the shape DARP's WRP component feeds on."""
+    arrive, bank, row, is_write = [], [], [], []
+    t, left = 0, reqs
+    while left > 0:
+        nr = min(phase_reads, left)
+        gaps = rs.exponential(4.0, nr)
+        for g in gaps:
+            t += max(1, int(g))
+            arrive.append(t)
+        bank.extend(rs.randint(0, n_banks, nr))
+        row.extend(rs.randint(0, N_ROWS, nr))
+        is_write.extend([False] * nr)
+        left -= nr
+        nw = min(burst, left)
+        for i in range(nw):
+            arrive.append(t + 1 + i // 2)      # ~2 writes per tick
+        bank.extend(rs.randint(0, n_banks, nw))
+        row.extend(rs.randint(0, N_ROWS, nw))
+        is_write.extend([True] * nw)
+        t += 1 + nw // 2 + 40                  # drain room before next phase
+        left -= nw
+    return _assemble("write_burst_draining", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("row_buffer_friendly")
+def row_buffer_friendly(n_banks, n_subarrays, reqs, rs, run_len: int = 16):
+    """Long same-row runs per bank: almost every access is a row hit, so
+    refresh cost shows up purely as closed rows (re-activates)."""
+    arrive = _poisson_arrivals(rs, reqs, 2.0)
+    n_runs = reqs // run_len + 1
+    run_bank = rs.randint(0, n_banks, n_runs)
+    run_row = rs.randint(0, N_ROWS, n_runs)
+    idx = np.arange(reqs) // run_len
+    bank, row = run_bank[idx], run_row[idx]
+    is_write = rs.rand(reqs) < 0.10
+    return _assemble("row_buffer_friendly", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("bank_camping")
+def bank_camping(n_banks, n_subarrays, reqs, rs, hot_frac: float = 0.7):
+    """Most traffic camps on two hot banks; the rest idle — easy pickings
+    for out-of-order refresh, budget-edge pressure on the hot banks."""
+    hot = rs.rand(reqs) < hot_frac
+    bank = np.where(hot, rs.randint(0, 2, reqs),
+                    rs.randint(0, n_banks, reqs))
+    row = rs.randint(0, N_ROWS, reqs)
+    bank, row = _locality(rs, bank.copy(), row, 0.40)
+    arrive = _poisson_arrivals(rs, reqs, 3.0)
+    is_write = rs.rand(reqs) < 0.20
+    return _assemble("bank_camping", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("subarray_conflict_adversarial")
+def subarray_conflict_adversarial(n_banks, n_subarrays, reqs, rs,
+                                  refi_pb_ticks: int = 162):
+    """Accesses chase the subarray the per-bank round-robin refresh counter
+    targets next (counter ~ t / tREFI_pb), so SARP's same-subarray
+    exception fires as often as possible. `refi_pb_ticks` approximates the
+    32 Gb per-bank refresh cadence in ticks."""
+    arrive = _poisson_arrivals(rs, reqs, 3.0)
+    bank = rs.randint(0, n_banks, reqs)
+    target_sub = (arrive // refi_pb_ticks) % n_subarrays
+    # pick rows that land exactly on the refreshing subarray
+    row = (target_sub + n_subarrays *
+           rs.randint(0, N_ROWS // n_subarrays, reqs)) % N_ROWS
+    is_write = rs.rand(reqs) < 0.15
+    return _assemble("subarray_conflict_adversarial", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("mixed")
+def mixed(n_banks, n_subarrays, reqs, rs):
+    """The legacy `make_workload("mixed")` analogue: medium locality,
+    30% writes, moderate pressure."""
+    arrive = _poisson_arrivals(rs, reqs, 2.5)
+    bank = rs.randint(0, n_banks, reqs)
+    row = rs.randint(0, N_ROWS, reqs)
+    bank, row = _locality(rs, bank, row, 0.50)
+    is_write = rs.rand(reqs) < 0.30
+    return _assemble("mixed", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("streaming")
+def streaming(n_banks, n_subarrays, reqs, rs):
+    """Bandwidth-bound: near back-to-back arrivals, high row locality,
+    write-through third."""
+    arrive = _poisson_arrivals(rs, reqs, 1.4)
+    bank = rs.randint(0, n_banks, reqs)
+    row = rs.randint(0, N_ROWS, reqs)
+    bank, row = _locality(rs, bank, row, 0.85)
+    is_write = rs.rand(reqs) < 0.33
+    return _assemble("streaming", n_banks, n_subarrays,
+                     arrive, bank, row, is_write)
+
+
+@register_scenario("trace_replay")
+def trace_replay(n_banks, n_subarrays, reqs, rs, trace: dict = None):
+    """Replay an explicit trace: `trace` maps arrive/bank/row/is_write (and
+    optionally sub) to array-likes. Without one, replays a small embedded
+    antagonist (two banks ping-ponging rows around a write pulse) so the
+    scenario is runnable out of the box; `reqs` tiles it to length."""
+    if trace is None:
+        base_n = 64
+        arrive = np.arange(base_n) * 3
+        bank = np.tile([0, 1], base_n // 2)
+        row = np.tile([7, 7, 123, 123], base_n // 4)
+        is_write = (np.arange(base_n) % 8) >= 6        # write pulse
+        reps = max(1, -(-reqs // base_n))
+        span = int(arrive[-1]) + 16
+        arrive = np.concatenate([arrive + r * span for r in range(reps)])
+        bank = np.tile(bank, reps)
+        row = np.tile(row, reps)
+        is_write = np.tile(is_write, reps)
+        trace = dict(arrive=arrive[:reqs], bank=bank[:reqs],
+                     row=row[:reqs], is_write=is_write[:reqs])
+    return _assemble("trace_replay", n_banks, n_subarrays,
+                     trace["arrive"], np.asarray(trace["bank"]) % n_banks,
+                     np.asarray(trace["row"]) % N_ROWS, trace["is_write"],
+                     sub=trace.get("sub"))

@@ -179,6 +179,20 @@ class RefreshLedger:
         self.max_abs_lag = max(self.max_abs_lag, abs(self.lag(b, t)))
 
 
+def energy_proxy(T: DramTiming, makespan_ns: float, reads: int, writes: int,
+                 misses: int, ref_pb: int, ref_ab: int) -> float:
+    """Energy proxy shared by `DramSim` and the batched sweep engine
+    (arbitrary units; relative comparisons only). Coefficients chosen so
+    refresh is ~8-15% of total at 32 Gb and background dominates —
+    matching DRAM power breakdowns; the paper's energy win comes from the
+    shorter runtime (background term)."""
+    return (0.5 * makespan_ns                    # background + periphery
+            + 12.0 * misses                      # activates + precharges
+            + 6.0 * (reads + writes)
+            + 0.15 * T.tRFC_pb * ref_pb          # refresh energy ~ latency
+            + 0.15 * T.tRFC_ab * ref_ab * T.n_banks / 2)
+
+
 class DramSim:
     """One simulation run. Construct then call .run().
 
@@ -437,15 +451,8 @@ class DramSim:
 
         makespan = float(np.nanmax(self.finish))
         stats = self.stats
-        # ---- energy proxy (arbitrary units; relative comparisons only).
-        # Coefficients chosen so refresh is ~8-15% of total at 32Gb and
-        # background dominates — matching DRAM power breakdowns; the paper's
-        # energy win comes from the shorter runtime (background term).
-        e = (0.5 * makespan                        # background + periphery
-             + 12.0 * stats["misses"]              # activates+precharges
-             + 6.0 * (stats["reads"] + stats["writes"])
-             + 0.15 * T.tRFC_pb * stats["ref_pb"]  # refresh energy ~ latency
-             + 0.15 * T.tRFC_ab * stats["ref_ab"] * T.n_banks / 2)
+        e = energy_proxy(T, makespan, stats["reads"], stats["writes"],
+                         stats["misses"], stats["ref_pb"], stats["ref_ab"])
         rl = np.array(self.read_lat) if self.read_lat else np.array([0.0])
         return SimResult(
             policy=pol.name, density_gb=T.density_gb, makespan=makespan,

@@ -1,0 +1,18 @@
+"""Batched scenario-sweep engine: run (workload, policy, density) grids
+in lock-step over stacked state arrays, with the scalar tick loop kept as
+a bit-identical reference oracle and a jax/pallas fast path for the
+per-tick availability/arbitration step.
+
+    from repro.core.sweep import SweepSpec, sweep
+    res = sweep(SweepSpec(policies=("ref_pb", "darp", "dsarp"),
+                          scenarios=("read_heavy", "bank_camping"),
+                          densities=(8, 32)))
+    res.stat("avg_read_latency")       # [P, S, D] array
+
+See `repro.core.refresh.scenarios` for the workload library and
+`docs/architecture.md` for where this sits in the stack.
+"""
+from repro.core.sweep.engine import (CellResult, SweepResult, SweepSpec,
+                                     TickTiming, sweep)
+
+__all__ = ["CellResult", "SweepResult", "SweepSpec", "TickTiming", "sweep"]

@@ -1,0 +1,79 @@
+"""The sweep engine's per-tick availability/arbitration step.
+
+This is the hot inner step of the batched simulator: given the stacked
+machine state, score every (cell, bank) pair and pick at most one request
+start per cell for this tick (the data bus serializes starts — one burst
+per tick, tick == tBL). The scoring is written against a pluggable array
+module `xp` so the numpy backend and the jax/pallas fast path
+(`repro.kernels.sweep_arbiter`) share one definition; everything is int32
+so every backend is bit-identical.
+
+Priority of an eligible head request (descending):
+  1. drain-mode writes (the write window empties the buffer first,
+     mirroring `DramSim`'s drain serving writes only),
+  2. row-buffer hits (FR-FCFS),
+  3. age (oldest arrival first; capped so the packed score fits in int32).
+
+Eligibility mirrors `DramSim._bank_available`: the bank is not busy with a
+demand access, not mid-refresh (unless the policy has the SARP trait and
+the request targets a different subarray than the one refreshing), and the
+rank is not draining for an all-bank refresh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: age saturates here so score = W_WRITE + W_HIT + age stays within int32
+AGE_CAP = (1 << 20) - 1
+W_HIT = 1 << 21
+W_WRITE = 1 << 22
+
+
+def arbiter_scores(xp, t, *, has_req, head_row, head_sub, head_arrive,
+                   head_is_write, bank_free, ref_until, ref_sub, open_row,
+                   drain, sarp, rank_drain):
+    """Score every (cell, bank); ineligible slots get -1.
+
+    [G, B] int32: head_row, head_sub, head_arrive, bank_free, ref_until,
+                  ref_sub, open_row
+    [G, B] bool : has_req, head_is_write
+    [G] bool    : drain, sarp, rank_drain
+    t           : scalar tick
+    """
+    mid_ref = ref_until > t
+    avail = ((bank_free <= t)
+             & (~mid_ref | (sarp[:, None] & (ref_sub != head_sub))))
+    elig = has_req & avail & ~rank_drain[:, None]
+    age = xp.minimum(t - head_arrive, AGE_CAP)
+    score = (xp.where(drain[:, None] & head_is_write, W_WRITE, 0)
+             + xp.where(head_row == open_row, W_HIT, 0) + age)
+    return xp.where(elig, score, -1).astype(xp.int32)
+
+
+def arbiter_scores_masked(t, *, has_req, idle, ready, head_row, head_sub,
+                          head_arrive, head_is_write, ref_sub, open_row,
+                          drain, sarp_col, rank_drain, rank_can_drain):
+    """`arbiter_scores`, restated over precomputed availability masks —
+    the batched numpy backend's per-tick fast path (``idle`` must equal
+    ``bank_free <= t`` and ``ready`` must equal ``ref_until <= t`` at the
+    same instant; ``sarp_col`` is the [G, 1] SARP trait column and
+    ``rank_can_drain`` statically disables the rank-drain gate for grids
+    without rank-level policies). Kept in this module, next to the shared
+    definition, so the two formulations are edited in lock-step;
+    `tests/test_sweep.py::test_masked_scores_match_shared` pins them
+    bit-identical."""
+    elig = has_req & idle & (ready | (sarp_col & (ref_sub != head_sub)))
+    if rank_can_drain:
+        elig &= ~rank_drain[:, None]
+    base = np.minimum(t - head_arrive, AGE_CAP) \
+        + np.where(head_row == open_row, W_HIT, 0)
+    if drain.any():
+        base += np.where(drain[:, None] & head_is_write, W_WRITE, 0)
+    return np.where(elig, base, -1)
+
+
+def arbiter_choice(score: np.ndarray):
+    """argmax per cell (first max -> lowest bank) + validity mask."""
+    b = np.argmax(score, axis=1)
+    ok = np.take_along_axis(score, b[:, None], 1)[:, 0] >= 0
+    return b, ok

@@ -1,0 +1,1051 @@
+"""Batched scenario-sweep engine: (workload, policy, density) grids in
+lock-step.
+
+`DramSim` is the timing-fidelity oracle — an event-heap, per-request
+Python loop that simulates ONE (workload, policy, density) point at a
+time. The paper's headline claims, and every future policy PR, need the
+*grid*: many scenarios x many policies x several densities. This engine
+makes that grid cheap by hoisting the per-tick machine state (banks, bus,
+write buffer, refresh ledger) into stacked ``[G, n_banks]`` arrays, where
+``G`` is the number of grid cells, and advancing every cell one tick at a
+time with vectorized numpy (policy decisions included — see
+`sweep.policies`); the availability/arbitration inner step also has a
+jax/pallas kernel (`repro.kernels.sweep_arbiter`) for accelerator runs.
+
+Tick semantics (the contract every backend implements identically):
+
+  * Time is an integer tick counter; one tick = `dt_ns` (default 6 ns =
+    tBL, so the shared data bus serializes to at most one request START
+    per cell per tick). All derived timings quantize via
+    ``max(1, round(ns / dt_ns))`` — all-integer state means the scalar
+    oracle, the batched numpy backend, and the jax/pallas arbiter are
+    **bit-identical**, not merely close.
+  * Each tick, per active cell, in order:
+      A. arrivals join their bank FIFO; pending-write count may trip the
+         write-drain high watermark,
+      B. rank-level (all-bank) refresh debt accrues every tREFI for
+         level='ab' policies,
+      C. the cell's policy decides maintenance against a MaintenanceView
+         built from the stacked state (vectorized for the built-in policy
+         classes, real `select()` for custom registrations), and the
+         decisions are applied exactly like `DramSim`'s adapter
+         (`_start_pb_refresh` / `_start_ab_refresh`),
+      D. arbitration starts at most one eligible head-of-queue request
+         (drain-writes > row hits > oldest; see `sweep.arbiter`),
+      E. a cell deactivates once every request has been issued; its
+         makespan is the completion tick of the last data burst.
+  * Differences vs `DramSim`, accepted for vectorizability and kept
+    identical across backends: per-bank FIFO order (no FR-FCFS
+    *reordering* within a bank — row-hit preference applies across
+    banks), open-loop arrival traces instead of closed-loop MLP-limited
+    cores, a symmetric read/write turnaround penalty folded into request
+    latency, and read latencies clipped to `MAX_LAT_TICKS` in the p99
+    histogram.
+
+Backends:
+
+  * ``backend="batched"`` — stacked numpy, vectorized policies, the
+    default. `arbiter="pallas"` routes step D through the jax/pallas
+    kernel (interpret mode off-TPU).
+  * ``backend="scalar"`` — the reference oracle: a plain-Python
+    per-cell tick loop that drives the *real* registered policy objects
+    through `MaintenanceView`/`select()`. Slow by construction; exists so
+    `tests/test_sweep.py` can demand bit-identical stats from the batched
+    path for every registered policy.
+
+    res = sweep(SweepSpec(policies=("ref_ab", "darp", "dsarp"),
+                          scenarios=("read_heavy", "bank_camping"),
+                          densities=(8, 32)))
+    res.get("dsarp", "bank_camping", 32).avg_read_latency
+    res.stat("energy")            # [n_policies, n_scenarios, n_densities]
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from itertools import product
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.policy import ALL_BANKS, MaintenanceView, resolve_policy
+from repro.core.refresh.scenarios import Trace, make_trace
+from repro.core.refresh.timing import timing_for_density
+from repro.core.sweep.arbiter import (AGE_CAP, W_HIT, W_WRITE,
+                                      arbiter_scores,
+                                      arbiter_scores_masked)
+from repro.core.sweep.policies import (KIND_AB, KIND_CUSTOM, KIND_IDEAL,
+                                       classify, could_pick, select_batch)
+
+#: read-latency histogram width (ticks); larger waits clip into the top bin
+MAX_LAT_TICKS = 4095
+_PAD_ARRIVE = np.int32(1 << 30)       # queue padding: never arrives
+
+
+# ------------------------------------------------------------------ spec
+@dataclass(frozen=True)
+class TickTiming:
+    """A `DramTiming` quantized to integer ticks of `dt_ns`."""
+    density_gb: int
+    dt_ns: float
+    REFI: int
+    REFI_PB: int
+    RFC_PB: int
+    RFC_AB: int
+    HIT: int
+    MISS: int
+    WR: int
+    TURN: int
+    SARP_PEN: int
+    budget: int
+
+    @classmethod
+    def from_density(cls, density_gb: int, dt_ns: float = 6.0,
+                     n_banks: int = 8, n_subarrays: int = 8) -> "TickTiming":
+        T = timing_for_density(density_gb, n_banks=n_banks,
+                               n_subarrays=n_subarrays)
+
+        def tk(ns: float) -> int:
+            return max(1, int(ns / dt_ns + 0.5))
+
+        refi = tk(T.tREFI)
+        return cls(density_gb=density_gb, dt_ns=dt_ns, REFI=refi,
+                   REFI_PB=max(1, refi // n_banks), RFC_PB=tk(T.tRFC_pb),
+                   RFC_AB=tk(T.tRFC_ab), HIT=tk(T.row_hit),
+                   MISS=tk(T.row_miss), WR=tk(T.tWR), TURN=tk(T.tWTR),
+                   SARP_PEN=tk(T.sarp_penalty), budget=T.refresh_budget)
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """One sweep grid: the cross product policies x scenarios x densities.
+
+    One trace per (scenario, seed) is shared by every policy and density
+    in the grid, so cells differ only in the axis under study.
+    """
+    policies: Sequence[str]
+    scenarios: Sequence[Union[str, Trace]]
+    densities: Sequence[int] = (8, 16, 32)
+    reqs: int = 800
+    seed: int = 0
+    dt_ns: float = 6.0
+    n_banks: int = 8
+    n_subarrays: int = 8
+    wbuf_hi: int = 48            # pending-write drain high watermark
+    wbuf_lo: int = 16            # drain low watermark
+    horizon: Optional[int] = None   # tick cap; None = auto
+
+    def __post_init__(self):
+        object.__setattr__(self, "policies", tuple(self.policies))
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "densities", tuple(self.densities))
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (len(self.policies), len(self.scenarios),
+                len(self.densities))
+
+    def cells(self) -> list[tuple]:
+        """Grid cells in canonical (policy, scenario, density) order."""
+        return list(product(self.policies, self.scenarios, self.densities))
+
+
+@dataclass(frozen=True)
+class CellResult:
+    """Per-cell stats, field-compatible with the figure pipelines."""
+    policy: str
+    scenario: str
+    density_gb: int
+    makespan: float              # ns
+    reads_done: int
+    writes_done: int
+    avg_read_latency: float      # ns
+    p99_read_latency: float      # ns
+    refreshes_pb: int
+    refreshes_ab: int
+    row_hits: int
+    row_misses: int
+    energy: float
+    max_abs_lag: int
+    finished: bool
+
+    def speedup_vs(self, ideal: "CellResult") -> float:
+        """Makespan ratio. NOTE: under open-loop arrivals the makespan of
+        an under-utilized cell converges to the arrival span for every
+        policy — use `latency_speedup_vs` for refresh-degradation
+        comparisons (the figure pipelines do)."""
+        return ideal.makespan / self.makespan
+
+    def latency_speedup_vs(self, ideal: "CellResult") -> float:
+        """Open-loop analogue of the paper's weighted speedup: how much
+        refresh inflates mean read latency vs the no-refresh ideal
+        (<= 1.0 when this policy is worse)."""
+        if self.avg_read_latency == 0.0:
+            return 1.0
+        return ideal.avg_read_latency / self.avg_read_latency
+
+
+class SweepResult:
+    """Results of one grid run, indexable by name or as [P, S, D] arrays."""
+
+    def __init__(self, spec: SweepSpec, cells: list[CellResult],
+                 backend: str):
+        self.spec = spec
+        self.cells = cells
+        self.backend = backend
+        self._by_key = {(c.policy, c.scenario, c.density_gb): c
+                        for c in cells}
+
+    def get(self, policy: str, scenario: str, density: int) -> CellResult:
+        return self._by_key[(policy, _scenario_name(scenario), density)]
+
+    def stat(self, name: str) -> np.ndarray:
+        """One stat as a [n_policies, n_scenarios, n_densities] array."""
+        P, S, D = self.spec.shape
+        return np.array([getattr(c, name) for c in self.cells]
+                        ).reshape(P, S, D)
+
+    def __iter__(self):
+        return iter(self.cells)
+
+
+def _scenario_name(s) -> str:
+    return s.name if isinstance(s, Trace) else s
+
+
+# ------------------------------------------------------------------ grid
+class _Grid:
+    """Spec unpacked into stacked arrays + per-cell constants."""
+
+    def __init__(self, spec: SweepSpec):
+        if not (spec.policies and spec.scenarios and spec.densities):
+            raise ValueError(
+                "sweep() needs at least one policy, scenario, and density "
+                f"(got {len(spec.policies)} policies, "
+                f"{len(spec.scenarios)} scenarios, "
+                f"{len(spec.densities)} densities); a spec built only to "
+                "share one axis with another tool cannot be swept itself")
+        self.spec = spec
+        self.cells = spec.cells()
+        G, B = len(self.cells), spec.n_banks
+        self.G, self.B, self.S = G, B, spec.n_subarrays
+
+        traces = {}
+        for s in spec.scenarios:
+            tr = s if isinstance(s, Trace) else make_trace(
+                s, spec.n_banks, spec.n_subarrays, spec.reqs, spec.seed)
+            traces[_scenario_name(s)] = tr
+        self.traces = traces
+
+        # per-(scenario, bank) FIFO split, padded to the global max length
+        split = {}
+        L = 1
+        for name, tr in traces.items():
+            per_bank = []
+            for b in range(B):
+                m = tr.bank == b
+                per_bank.append((tr.arrive[m], tr.row[m], tr.sub[m],
+                                 tr.is_write[m]))
+                L = max(L, int(m.sum()))
+            split[name] = per_bank
+        self.L = L
+        self.q_arrive = np.full((G, B, L), _PAD_ARRIVE, np.int32)
+        self.q_row = np.zeros((G, B, L), np.int32)
+        self.q_sub = np.zeros((G, B, L), np.int32)
+        self.q_write = np.zeros((G, B, L), bool)
+        self.n_per_bank = np.zeros((G, B), np.int32)
+
+        self.timing = {d: TickTiming.from_density(
+            d, spec.dt_ns, spec.n_banks, spec.n_subarrays)
+            for d in spec.densities}
+
+        # per-cell constants
+        ints = lambda: np.zeros(G, np.int32)
+        self.kind = ints()
+        self.level_ab = np.zeros(G, bool)
+        self.sarp = np.zeros(G, bool)
+        self.wrp = np.zeros(G, bool)
+        self.urgent_at = np.ones(G, np.int32)
+        self.budget = ints()
+        for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR", "TURN",
+                  "SARP_PEN"):
+            setattr(self, f, ints())
+        self.phase = np.zeros((G, B), np.int32)
+        self.customs: list[tuple[int, object]] = []
+
+        for g, (p, s, d) in enumerate(self.cells):
+            tk = self.timing[d]
+            pol = resolve_policy(p)
+            kind, params = classify(pol, tk.budget)
+            self.kind[g] = kind
+            self.level_ab[g] = (not pol.ideal) and pol.level == "ab"
+            self.sarp[g] = pol.sarp
+            self.wrp[g] = params.get("wrp", False)
+            self.urgent_at[g] = params.get("urgent_at", 1)
+            self.budget[g] = tk.budget
+            for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR",
+                      "TURN", "SARP_PEN"):
+                getattr(self, f)[g] = getattr(tk, f)
+            self.phase[g] = np.arange(B) * tk.REFI_PB
+            if kind == KIND_CUSTOM:
+                self.customs.append((g, pol))
+            for b, (arr, row, sub, isw) in enumerate(
+                    split[_scenario_name(s)]):
+                n = len(arr)
+                self.n_per_bank[g, b] = n
+                self.q_arrive[g, b, :n] = arr
+                self.q_row[g, b, :n] = row
+                self.q_sub[g, b, :n] = sub
+                self.q_write[g, b, :n] = isw
+
+        self.n_tot = self.n_per_bank.sum(axis=1)
+        max_arrive = max(int(tr.arrive[-1]) for tr in traces.values())
+        auto = (max_arrive
+                + 4 * int(self.n_tot.max())
+                * int(self.MISS.max() + self.WR.max() + 2)
+                + 8 * int(self.RFC_AB.max()) + 64)
+        self.horizon = spec.horizon if spec.horizon else min(auto, 1 << 28)
+
+
+# ----------------------------------------------------------- finalization
+def _p99_ticks(hist_row: np.ndarray, n_reads: int) -> int:
+    if n_reads <= 0:
+        return 0
+    target = math.ceil(0.99 * n_reads)
+    return int(np.searchsorted(np.cumsum(hist_row), target, side="left"))
+
+
+def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
+              refab, lat_sum, hist, maxlag, last_done, finished
+              ) -> CellResult:
+    """Integer machine stats -> CellResult. Shared by every backend so the
+    derived floats are bit-identical whenever the integers are."""
+    from repro.core.refresh.sim import energy_proxy
+    p, s, d = grid.cells[g]
+    spec = grid.spec
+    T = timing_for_density(d, n_banks=spec.n_banks,
+                           n_subarrays=spec.n_subarrays)
+    dt = spec.dt_ns
+    makespan = float(last_done) * dt
+    return CellResult(
+        policy=p, scenario=_scenario_name(s), density_gb=d,
+        makespan=makespan, reads_done=int(reads), writes_done=int(writes),
+        avg_read_latency=(dt * int(lat_sum) / int(reads)) if reads else 0.0,
+        p99_read_latency=dt * _p99_ticks(hist, int(reads)),
+        refreshes_pb=int(refpb), refreshes_ab=int(refab),
+        row_hits=int(hits), row_misses=int(misses),
+        energy=energy_proxy(T, makespan, int(reads), int(writes),
+                            int(misses), int(refpb), int(refab)),
+        max_abs_lag=int(maxlag), finished=bool(finished))
+
+
+# --------------------------------------------------------- batched backend
+def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
+    spec = grid.spec
+    G, B, L, S = grid.G, grid.B, grid.L, grid.S
+    HI, LO = spec.wbuf_hi, spec.wbuf_lo
+
+    score_fn = None
+    if arbiter == "pallas":
+        from repro.kernels.sweep_arbiter import make_arbiter
+        score_fn = make_arbiter(G, B)
+    elif arbiter != "numpy":
+        raise ValueError(f"unknown arbiter {arbiter!r}")
+
+    # flat [G*B, L] views for single-op queue gathers
+    qa = grid.q_arrive.reshape(G * B, L)
+    qr = grid.q_row.reshape(G * B, L)
+    qs = grid.q_sub.reshape(G * B, L)
+    qw = grid.q_write.reshape(G * B, L)
+    n_pb_flat = grid.n_per_bank.reshape(G * B)
+
+    # machine state, stacked [G, B]
+    bank_free = np.zeros((G, B), np.int32)
+    ref_until = np.zeros((G, B), np.int32)
+    ref_sub = np.full((G, B), -1, np.int32)
+    open_row = np.full((G, B), -1, np.int32)
+    open_sub = np.full((G, B), -1, np.int32)
+    ctr = np.zeros((G, B), np.int32)
+    issued = np.zeros((G, B), np.int32)
+    n_arrived = np.zeros((G, B), np.int32)
+    n_served = np.zeros((G, B), np.int32)
+    rr = np.zeros(G, np.int32)
+    wpend = np.zeros(G, np.int32)
+    drain = np.zeros(G, bool)
+    last_op = np.zeros(G, bool)
+    ab_pending = np.zeros(G, np.int32)
+    rank_drain = np.zeros(G, bool)
+    active = grid.n_tot > 0
+    n_left = grid.n_tot.astype(np.int64).copy()
+    kind_active = np.where(active, grid.kind, KIND_IDEAL)
+    has_ab = bool(grid.level_ab.any())
+
+    # incrementally-maintained next-arrival and head-of-queue mirrors
+    next_arrive = grid.q_arrive[:, :, 0].copy()
+    next_w = grid.q_write[:, :, 0].copy()
+    h_arr = grid.q_arrive[:, :, 0].copy()
+    h_row = grid.q_row[:, :, 0].copy()
+    h_sub = grid.q_sub[:, :, 0].copy()
+    h_w = grid.q_write[:, :, 0].copy()
+
+    # stats
+    reads = np.zeros(G, np.int64)
+    writes = np.zeros(G, np.int64)
+    hits = np.zeros(G, np.int64)
+    misses = np.zeros(G, np.int64)
+    refpb = np.zeros(G, np.int64)
+    refab = np.zeros(G, np.int64)
+    lat_sum = np.zeros(G, np.int64)
+    hist = np.zeros((G, MAX_LAT_TICKS + 1), np.int32)
+    maxlag = np.zeros(G, np.int32)
+    last_done = np.zeros(G, np.int32)
+
+    phase, REFI_col = grid.phase, grid.REFI[:, None]
+    RFC_PB_col = grid.RFC_PB[:, None]
+    sarp_c = grid.sarp[:, None]
+    sarp_g, kind_g = grid.sarp, grid.kind
+    budget_g, wrp_g, urgent_g = grid.budget, grid.wrp, grid.urgent_at
+    level_ab = grid.level_ab
+    refi_values = sorted({int(v) for v in grid.REFI[level_ab]})
+    has_drain_block = has_ab or bool(grid.customs)
+    nav = next_arrive.ravel()
+    nwv = next_w.ravel()
+    arG = np.arange(G)
+    t = 0
+    alive = int(active.sum())
+    while alive and t < grid.horizon:
+        # ---- A: arrivals (one queue slot per iteration handles bursts)
+        while True:
+            can = next_arrive <= t
+            if not can.any():
+                break
+            wpend += (can & next_w).sum(axis=1)
+            n_arrived += can
+            gf = np.nonzero(can.ravel())[0]
+            slot = n_arrived.ravel()[gf]
+            sl = np.minimum(slot, L - 1)
+            nav[gf] = np.where(slot >= n_pb_flat[gf], _PAD_ARRIVE,
+                               qa[gf, sl])
+            nwv[gf] = qw[gf, sl]
+        drain |= wpend >= HI
+
+        # ---- B: rank refresh debt for all-bank policies
+        if has_ab and t > 0 and any(t % R == 0 for R in refi_values):
+            acc = active & level_ab & (t % grid.REFI == 0)
+            ab_pending += acc
+            rank_drain |= acc
+
+        # ---- C: policy decisions against the stacked view
+        # due = 0 while t < phase; phase < tREFI, so the floor-div form is
+        # exact without the explicit branch
+        due = np.maximum((t - phase) // REFI_col + 1, 0)
+        lag = due - issued
+        demand = n_arrived - n_served
+        ready = ref_until <= t
+        idle = bank_free <= t
+        need = could_pick(kind=kind_active, lag=lag, demand=demand,
+                          write_window=drain, budget=budget_g, wrp=wrp_g)
+        picks = None
+        if need.any():
+            picks, rr = select_batch(
+                np, kind=np.where(need, kind_active, KIND_IDEAL), lag=lag,
+                ready=ready, idle=idle, demand=demand, write_window=drain,
+                budget=budget_g, wrp=wrp_g, urgent_at=urgent_g, rr=rr,
+                gate=True)
+            if not picks.any():
+                picks = None
+
+        start_ab = None
+        if has_ab:
+            pend = active & (kind_g == KIND_AB) & (ab_pending > 0)
+            if pend.any():
+                start_ab = pend & idle.all(axis=1) & ready.all(axis=1)
+
+        for g, pol in grid.customs:          # non-vectorizable registrations
+            if not active[g]:
+                continue
+            if pol.level == "ab":
+                if ab_pending[g] <= 0:
+                    continue
+                quiet_g = bool(idle[g].all() and ready[g].all())
+                view = MaintenanceView(
+                    now=float(t), n_banks=B, budget=int(grid.budget[g]),
+                    lag=[0] * B, demand=[0] * B, ready=[True] * B,
+                    idle=[True] * B, write_window=bool(drain[g]),
+                    max_issues=1, rank_due=int(ab_pending[g]),
+                    rank_quiet=quiet_g)
+                for dec in pol.select(view):
+                    if dec.bank == ALL_BANKS:
+                        if start_ab is None:
+                            start_ab = np.zeros(G, bool)
+                        start_ab[g] = True
+            else:
+                view = MaintenanceView(
+                    now=float(t), n_banks=B, budget=int(grid.budget[g]),
+                    lag=lag[g].tolist(), demand=demand[g].tolist(),
+                    ready=ready[g].tolist(), idle=idle[g].tolist(),
+                    write_window=bool(drain[g]), max_issues=1)
+                for dec in pol.select(view):
+                    if dec.bank == ALL_BANKS:
+                        raise ValueError(
+                            f"policy {pol.name!r} returned ALL_BANKS from "
+                            f"a per-bank (level='pb') decision point")
+                    if picks is None:
+                        picks = np.zeros((G, B), bool)
+                    picks[g, dec.bank] = True
+
+        if start_ab is not None and start_ab.any():
+            m = np.broadcast_to(start_ab[:, None], (G, B))
+            new_sub = (ctr % S).astype(np.int32)
+            ref_until = np.where(m, (t + grid.RFC_AB)[:, None], ref_until)
+            ref_sub = np.where(m, np.where(sarp_c, new_sub, -1), ref_sub)
+            close = m & np.where(sarp_c, open_sub == new_sub, True)
+            open_row = np.where(close, -1, open_row)
+            ctr = ctr + (m & sarp_c)
+            ab_pending -= start_ab
+            rank_drain = np.where(start_ab, ab_pending > 0, rank_drain)
+            refab += start_ab
+            ready &= ~m                     # tRFC_ab >= 1: mid-refresh now
+
+        if picks is not None:
+            new_sub = (ctr % S).astype(np.int32)
+            ref_until = np.where(
+                picks, np.maximum(t, bank_free) + RFC_PB_col, ref_until)
+            ref_sub = np.where(picks, np.where(sarp_c, new_sub, -1),
+                               ref_sub)
+            close = picks & np.where(sarp_c, open_sub == new_sub, True)
+            open_row = np.where(close, -1, open_row)
+            ctr = ctr + picks
+            issued = issued + picks
+            refpb += picks.sum(axis=1)
+            lag_after = due - issued
+            maxlag = np.maximum(
+                maxlag, np.where(picks, np.abs(lag_after), 0).max(axis=1))
+            ready &= ~picks                 # tRFC_pb >= 1: mid-refresh now
+
+        # ---- D: arbitration — at most one request start per cell
+        # (`ready`/`idle` mirror ref_until/bank_free vs t after the refresh
+        # applications above, so the shared scoring reduces to these masks)
+        has_req = demand > 0
+        if not has_req.any():
+            t += 1
+            continue
+        if score_fn is not None:
+            score = np.asarray(score_fn(
+                t, has_req=has_req, head_row=h_row, head_sub=h_sub,
+                head_arrive=h_arr, head_is_write=h_w, bank_free=bank_free,
+                ref_until=ref_until, ref_sub=ref_sub, open_row=open_row,
+                drain=drain, sarp=sarp_g, rank_drain=rank_drain))
+        else:
+            score = arbiter_scores_masked(
+                t, has_req=has_req, idle=idle, ready=ready, head_row=h_row,
+                head_sub=h_sub, head_arrive=h_arr, head_is_write=h_w,
+                ref_sub=ref_sub, open_row=open_row, drain=drain,
+                sarp_col=sarp_c, rank_drain=rank_drain,
+                rank_can_drain=has_drain_block)
+        bs_all = score.argmax(axis=1)
+        ok = score[arG, bs_all] >= 0
+
+        if ok.any():
+            gs = np.nonzero(ok)[0]
+            bs = bs_all[gs]
+            row, sub = h_row[gs, bs], h_sub[gs, bs]
+            arr, isw = h_arr[gs, bs], h_w[gs, bs]
+            hit = row == open_row[gs, bs]
+            lat = np.where(hit, grid.HIT[gs], grid.MISS[gs])
+            lat = lat + np.where(grid.sarp[gs] & (ref_until[gs, bs] > t),
+                                 grid.SARP_PEN[gs], 0)
+            lat = lat + np.where(isw != last_op[gs], grid.TURN[gs], 0)
+            done = t + lat
+            bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
+            last_op[gs] = isw
+            open_row[gs, bs] = row
+            open_sub[gs, bs] = sub
+            n_served[gs, bs] += 1
+            hits[gs] += hit
+            misses[gs] += ~hit
+            writes[gs] += isw
+            reads[gs] += ~isw
+            wpend[gs] -= isw
+            drain[gs] &= ~(isw & (wpend[gs] <= LO))
+            rmask = ~isw
+            lrec = np.minimum(done - arr, MAX_LAT_TICKS)
+            lat_sum[gs] += np.where(rmask, lrec, 0)
+            np.add.at(hist, (gs[rmask], lrec[rmask]), 1)
+            last_done[gs] = np.maximum(last_done[gs], done)
+            # refresh the head-of-queue mirror for the served banks
+            gf = gs * B + bs
+            sl = np.minimum(n_served[gs, bs], L - 1)
+            h_arr[gs, bs] = qa[gf, sl]
+            h_row[gs, bs] = qr[gf, sl]
+            h_sub[gs, bs] = qs[gf, sl]
+            h_w[gs, bs] = qw[gf, sl]
+            # ---- E: retire finished cells
+            n_left[gs] -= 1
+            if (n_left[gs] == 0).any():
+                done_cells = gs[n_left[gs] == 0]
+                active[done_cells] = False
+                kind_active[done_cells] = KIND_IDEAL
+                alive = int(active.sum())
+        t += 1
+
+    finished = ~active
+    return [_finalize(grid, g, reads=reads[g], writes=writes[g],
+                      hits=hits[g], misses=misses[g], refpb=refpb[g],
+                      refab=refab[g], lat_sum=lat_sum[g], hist=hist[g],
+                      maxlag=maxlag[g], last_done=last_done[g],
+                      finished=finished[g])
+            for g in range(grid.G)]
+
+
+# ---------------------------------------------------------- scalar oracle
+def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
+    """Plain-Python reference: one cell, real policy object, same tick
+    contract. Deliberately shares no machine code with the batched path."""
+    spec = grid.spec
+    p, s, d = grid.cells[g]
+    tk = grid.timing[d]
+    B, S = grid.B, grid.S
+    HI, LO = spec.wbuf_hi, spec.wbuf_lo
+    pol = resolve_policy(p)
+    budget = tk.budget
+
+    q = []
+    for b in range(B):
+        n = int(grid.n_per_bank[g, b])
+        q.append(list(zip(grid.q_arrive[g, b, :n].tolist(),
+                          grid.q_row[g, b, :n].tolist(),
+                          grid.q_sub[g, b, :n].tolist(),
+                          grid.q_write[g, b, :n].tolist())))
+    total = sum(len(x) for x in q)
+    phase = [b * tk.REFI_PB for b in range(B)]
+
+    bank_free = [0] * B
+    ref_until = [0] * B
+    ref_sub = [-1] * B
+    open_row = [-1] * B
+    open_sub = [-1] * B
+    ctr = [0] * B
+    issued = [0] * B
+    n_arrived = [0] * B
+    n_served = [0] * B
+    wpend = 0
+    drain = False
+    last_op = False
+    ab_pending = 0
+    rank_drain = False
+    served = 0
+
+    reads = writes = hits = misses = refpb = refab = 0
+    lat_sum = 0
+    hist = np.zeros(MAX_LAT_TICKS + 1, np.int32)
+    maxlag = 0
+    last_done = 0
+
+    def due(b: int, t: int) -> int:
+        return 0 if t < phase[b] else (t - phase[b]) // tk.REFI + 1
+
+    def start_pb(b: int, t: int):
+        nonlocal refpb, maxlag
+        ref_until[b] = max(t, bank_free[b]) + tk.RFC_PB
+        ns = ctr[b] % S
+        if pol.sarp:
+            ref_sub[b] = ns
+            if open_sub[b] == ns:
+                open_row[b] = -1
+        else:
+            ref_sub[b] = -1
+            open_row[b] = -1
+        ctr[b] += 1
+        issued[b] += 1
+        refpb += 1
+        maxlag = max(maxlag, abs(due(b, t) - issued[b]))
+
+    def start_ab(t: int):
+        nonlocal ab_pending, rank_drain, refab
+        end = t + tk.RFC_AB
+        for b in range(B):
+            ref_until[b] = end
+            if pol.sarp:
+                ref_sub[b] = ctr[b] % S
+                if open_sub[b] == ref_sub[b]:
+                    open_row[b] = -1
+                ctr[b] += 1
+            else:
+                ref_sub[b] = -1
+                open_row[b] = -1
+        ab_pending -= 1
+        rank_drain = ab_pending > 0
+        refab += 1
+
+    t = 0
+    while served < total and t < grid.horizon:
+        # A: arrivals
+        for b in range(B):
+            qb, nb = q[b], n_arrived[b]
+            while nb < len(qb) and qb[nb][0] <= t:
+                if qb[nb][3]:
+                    wpend += 1
+                nb += 1
+            n_arrived[b] = nb
+        if wpend >= HI:
+            drain = True
+        # B: rank debt
+        if (not pol.ideal and pol.level == "ab" and t > 0
+                and t % tk.REFI == 0):
+            ab_pending += 1
+            rank_drain = True
+        # C: decision
+        if not pol.ideal:
+            if pol.level == "ab":
+                if ab_pending > 0:
+                    quiet = (all(f <= t for f in bank_free)
+                             and all(r <= t for r in ref_until))
+                    view = MaintenanceView(
+                        now=float(t), n_banks=B, budget=budget,
+                        lag=[0] * B, demand=[0] * B, ready=[True] * B,
+                        idle=[True] * B, write_window=drain, max_issues=1,
+                        rank_due=ab_pending, rank_quiet=quiet)
+                    for dec in pol.select(view):
+                        if dec.bank == ALL_BANKS:
+                            start_ab(t)
+            else:
+                view = MaintenanceView(
+                    now=float(t), n_banks=B, budget=budget,
+                    lag=[due(b, t) - issued[b] for b in range(B)],
+                    demand=[n_arrived[b] - n_served[b] for b in range(B)],
+                    ready=[ref_until[b] <= t for b in range(B)],
+                    idle=[bank_free[b] <= t for b in range(B)],
+                    write_window=drain, max_issues=1)
+                for dec in pol.select(view):
+                    if dec.bank == ALL_BANKS:
+                        raise ValueError(
+                            f"policy {pol.name!r} returned ALL_BANKS from "
+                            f"a per-bank (level='pb') decision point")
+                    start_pb(dec.bank, t)
+        # D: arbitration
+        if not rank_drain:
+            best, best_score = -1, -1
+            for b in range(B):
+                if n_arrived[b] - n_served[b] <= 0:
+                    continue
+                arr, row, sub, isw = q[b][n_served[b]]
+                if bank_free[b] > t:
+                    continue
+                if ref_until[b] > t and not (pol.sarp
+                                             and ref_sub[b] != sub):
+                    continue
+                sc = (W_WRITE if (drain and isw) else 0) \
+                    + (W_HIT if row == open_row[b] else 0) \
+                    + min(t - arr, AGE_CAP)
+                if sc > best_score:
+                    best, best_score = b, sc
+            if best >= 0:
+                b = best
+                arr, row, sub, isw = q[b][n_served[b]]
+                hit = row == open_row[b]
+                lat = tk.HIT if hit else tk.MISS
+                if pol.sarp and ref_until[b] > t:
+                    lat += tk.SARP_PEN
+                if isw != last_op:
+                    lat += tk.TURN
+                done = t + lat
+                bank_free[b] = done + (tk.WR if isw else 0)
+                last_op = isw
+                open_row[b] = row
+                open_sub[b] = sub
+                n_served[b] += 1
+                served += 1
+                if hit:
+                    hits += 1
+                else:
+                    misses += 1
+                if isw:
+                    writes += 1
+                    wpend -= 1
+                    if drain and wpend <= LO:
+                        drain = False
+                else:
+                    reads += 1
+                    lat_sum += min(done - arr, MAX_LAT_TICKS)
+                    hist[min(done - arr, MAX_LAT_TICKS)] += 1
+                last_done = max(last_done, done)
+        t += 1
+
+    return _finalize(grid, g, reads=reads, writes=writes, hits=hits,
+                     misses=misses, refpb=refpb, refab=refab,
+                     lat_sum=lat_sum, hist=hist, maxlag=maxlag,
+                     last_done=last_done, finished=served >= total)
+
+
+# --------------------------------------------------------- jax fast path
+def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
+    """The whole tick loop as one jitted `lax.while_loop`: state lives in
+    jnp int32 arrays, policies run through the same xp-generic
+    `select_batch`, and the arbitration step optionally routes through the
+    Pallas kernel. Integer arithmetic keeps this bit-identical to the
+    numpy backend and the scalar oracle; custom (non-vectorizable) policy
+    registrations are not traceable and must use `backend="batched"`."""
+    if grid.customs:
+        raise ValueError(
+            "backend='jax' supports only the built-in policy classes; "
+            f"custom policies {[p.name for _, p in grid.customs]!r} need "
+            "backend='batched'")
+    # jnp runs x32: the clipped-latency sum fits int32 only while
+    # reads_per_cell * MAX_LAT_TICKS < 2**31
+    if int(grid.n_tot.max()) * MAX_LAT_TICKS >= 2 ** 31:
+        raise ValueError(
+            f"backend='jax' accumulates latency sums in int32; "
+            f"{int(grid.n_tot.max())} requests per cell could overflow — "
+            "use backend='batched'")
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if arbiter == "pallas":
+        from repro.kernels.sweep_arbiter import _arbiter_call
+        interp = jax.default_backend() != "tpu"
+
+        def scores(t, **kw):
+            return _arbiter_call(t, **kw, interpret=interp)
+    elif arbiter == "jnp":
+        def scores(t, **kw):
+            return arbiter_scores(jnp, t, **kw)
+    else:
+        raise ValueError(f"unknown jax arbiter {arbiter!r}")
+
+    spec = grid.spec
+    G, B, L, S = grid.G, grid.B, grid.L, grid.S
+    HI, LO = spec.wbuf_hi, spec.wbuf_lo
+    j32 = lambda x: jnp.asarray(x, jnp.int32)
+    qa = j32(grid.q_arrive.reshape(G * B, L))
+    qr = j32(grid.q_row.reshape(G * B, L))
+    qs = j32(grid.q_sub.reshape(G * B, L))
+    qw = jnp.asarray(grid.q_write.reshape(G * B, L))
+    n_pb = j32(grid.n_per_bank)
+    n_tot = j32(grid.n_tot)
+    total_all = int(grid.n_tot.sum())
+    phase = j32(grid.phase)
+    kind = j32(grid.kind)
+    level_ab = jnp.asarray(grid.level_ab)
+    sarp = jnp.asarray(grid.sarp)
+    wrp = jnp.asarray(grid.wrp)
+    urgent_at = j32(grid.urgent_at)
+    budget = j32(grid.budget)
+    REFI, RFC_PB, RFC_AB = j32(grid.REFI), j32(grid.RFC_PB), j32(grid.RFC_AB)
+    HIT, MISS, WR = j32(grid.HIT), j32(grid.MISS), j32(grid.WR)
+    TURN, SARP_PEN = j32(grid.TURN), j32(grid.SARP_PEN)
+    arG = jnp.arange(G)
+    flat_gb = (arG[:, None] * B + jnp.arange(B)[None, :])
+
+    st = dict(
+        t=jnp.int32(0),
+        bank_free=jnp.zeros((G, B), jnp.int32),
+        ref_until=jnp.zeros((G, B), jnp.int32),
+        ref_sub=jnp.full((G, B), -1, jnp.int32),
+        open_row=jnp.full((G, B), -1, jnp.int32),
+        open_sub=jnp.full((G, B), -1, jnp.int32),
+        ctr=jnp.zeros((G, B), jnp.int32),
+        issued=jnp.zeros((G, B), jnp.int32),
+        n_arrived=jnp.zeros((G, B), jnp.int32),
+        n_served=jnp.zeros((G, B), jnp.int32),
+        rr=jnp.zeros(G, jnp.int32),
+        wpend=jnp.zeros(G, jnp.int32),
+        drain=jnp.zeros(G, bool),
+        last_op=jnp.zeros(G, bool),
+        ab_pending=jnp.zeros(G, jnp.int32),
+        rank_drain=jnp.zeros(G, bool),
+        next_arrive=j32(grid.q_arrive[:, :, 0]),
+        next_w=jnp.asarray(grid.q_write[:, :, 0]),
+        h_arr=j32(grid.q_arrive[:, :, 0]),
+        h_row=j32(grid.q_row[:, :, 0]),
+        h_sub=j32(grid.q_sub[:, :, 0]),
+        h_w=jnp.asarray(grid.q_write[:, :, 0]),
+        reads=jnp.zeros(G, jnp.int32),
+        writes=jnp.zeros(G, jnp.int32),
+        hits=jnp.zeros(G, jnp.int32),
+        misses=jnp.zeros(G, jnp.int32),
+        refpb=jnp.zeros(G, jnp.int32),
+        refab=jnp.zeros(G, jnp.int32),
+        lat_sum=jnp.zeros(G, jnp.int32),     # exact: clipped lats, guarded
+        hist=jnp.zeros((G, MAX_LAT_TICKS + 1), jnp.int32),
+        maxlag=jnp.zeros(G, jnp.int32),
+        last_done=jnp.zeros(G, jnp.int32),
+    )
+
+    def cond(s):
+        return ((s["t"] < grid.horizon)
+                & (s["n_served"].sum() < total_all))
+
+    def body(s):
+        t = s["t"]
+
+        # ---- A: arrivals
+        def acond(a):
+            return (a["next_arrive"] <= t).any()
+
+        def abody(a):
+            can = a["next_arrive"] <= t
+            n_arrived = a["n_arrived"] + can
+            sl = jnp.minimum(n_arrived, L - 1)
+            na = qa[flat_gb, sl]
+            exhausted = n_arrived >= n_pb
+            return dict(
+                n_arrived=n_arrived,
+                wpend=a["wpend"] + (can & a["next_w"]).sum(axis=1),
+                next_arrive=jnp.where(
+                    can, jnp.where(exhausted, _PAD_ARRIVE, na),
+                    a["next_arrive"]),
+                next_w=jnp.where(can, qw[flat_gb, sl], a["next_w"]))
+
+        sub = lax.while_loop(acond, abody, dict(
+            n_arrived=s["n_arrived"], wpend=s["wpend"],
+            next_arrive=s["next_arrive"], next_w=s["next_w"]))
+        n_arrived, wpend = sub["n_arrived"], sub["wpend"]
+        drain = s["drain"] | (wpend >= HI)
+        n_served = s["n_served"]
+        active = n_served.sum(axis=1) < n_tot
+
+        # ---- B: rank refresh debt
+        acc = active & level_ab & (t > 0) & (t % REFI == 0)
+        ab_pending = s["ab_pending"] + acc
+        rank_drain = s["rank_drain"] | acc
+
+        # ---- C: decisions
+        due = jnp.where(t >= phase, (t - phase) // REFI[:, None] + 1, 0)
+        issued = s["issued"]
+        lag = due - issued
+        bank_free, ref_until = s["bank_free"], s["ref_until"]
+        ready = ref_until <= t
+        idle = bank_free <= t
+        demand = n_arrived - n_served
+        picks, rr = select_batch(
+            jnp, kind=jnp.where(active, kind, KIND_IDEAL), lag=lag,
+            ready=ready, idle=idle, demand=demand, write_window=drain,
+            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"])
+
+        quiet = idle.all(axis=1) & ready.all(axis=1)
+        start_ab = active & (kind == KIND_AB) & (ab_pending > 0) & quiet
+        ctr, ref_sub = s["ctr"], s["ref_sub"]
+        open_row, open_sub = s["open_row"], s["open_sub"]
+        sarp_c = sarp[:, None]
+
+        m = start_ab[:, None]
+        new_sub = ctr % S
+        ref_until = jnp.where(m, (t + RFC_AB)[:, None], ref_until)
+        ref_sub = jnp.where(m, jnp.where(sarp_c, new_sub, -1), ref_sub)
+        close = m & jnp.where(sarp_c, open_sub == new_sub, True)
+        open_row = jnp.where(close, -1, open_row)
+        ctr = ctr + (m & sarp_c)
+        ab_pending = ab_pending - start_ab
+        rank_drain = jnp.where(start_ab, ab_pending > 0, rank_drain)
+        refab = s["refab"] + start_ab
+
+        new_sub = ctr % S
+        ref_until = jnp.where(
+            picks, jnp.maximum(t, bank_free) + RFC_PB[:, None], ref_until)
+        ref_sub = jnp.where(picks, jnp.where(sarp_c, new_sub, -1), ref_sub)
+        close = picks & jnp.where(sarp_c, open_sub == new_sub, True)
+        open_row = jnp.where(close, -1, open_row)
+        ctr = ctr + picks
+        issued = issued + picks
+        refpb = s["refpb"] + picks.sum(axis=1)
+        maxlag = jnp.maximum(
+            s["maxlag"],
+            jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
+
+        # ---- D: arbitration + serve
+        score = scores(t, has_req=demand > 0, head_row=s["h_row"],
+                       head_sub=s["h_sub"], head_arrive=s["h_arr"],
+                       head_is_write=s["h_w"], bank_free=bank_free,
+                       ref_until=ref_until, ref_sub=ref_sub,
+                       open_row=open_row, drain=drain, sarp=sarp,
+                       rank_drain=rank_drain)
+        bs = jnp.argmax(score, axis=1)
+        ok = score[arG, bs] >= 0
+        row, sub_ = s["h_row"][arG, bs], s["h_sub"][arG, bs]
+        arr, isw = s["h_arr"][arG, bs], s["h_w"][arG, bs]
+        hit = row == open_row[arG, bs]
+        lat = (jnp.where(hit, HIT, MISS)
+               + jnp.where(sarp & (ref_until[arG, bs] > t), SARP_PEN, 0)
+               + jnp.where(isw != s["last_op"], TURN, 0))
+        done = t + lat
+        bank_free = bank_free.at[arG, bs].set(
+            jnp.where(ok, done + jnp.where(isw, WR, 0),
+                      bank_free[arG, bs]))
+        last_op = jnp.where(ok, isw, s["last_op"])
+        open_row = open_row.at[arG, bs].set(
+            jnp.where(ok, row, open_row[arG, bs]))
+        open_sub = open_sub.at[arG, bs].set(
+            jnp.where(ok, sub_, open_sub[arG, bs]))
+        n_served = n_served.at[arG, bs].add(ok)
+        served_w = ok & isw
+        wpend = wpend - served_w
+        drain = drain & ~(served_w & (wpend <= LO))
+        rmask = ok & ~isw
+        lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
+        hist = s["hist"].at[arG, lrec].add(rmask)
+        flat = arG * B + bs
+        sl = jnp.minimum(n_served[arG, bs], L - 1)
+
+        return dict(
+            t=t + 1, bank_free=bank_free, ref_until=ref_until,
+            ref_sub=ref_sub, open_row=open_row, open_sub=open_sub,
+            ctr=ctr, issued=issued, n_arrived=n_arrived,
+            n_served=n_served, rr=rr, wpend=wpend, drain=drain,
+            last_op=last_op, ab_pending=ab_pending, rank_drain=rank_drain,
+            next_arrive=sub["next_arrive"], next_w=sub["next_w"],
+            h_arr=s["h_arr"].at[arG, bs].set(
+                jnp.where(ok, qa[flat, sl], s["h_arr"][arG, bs])),
+            h_row=s["h_row"].at[arG, bs].set(
+                jnp.where(ok, qr[flat, sl], s["h_row"][arG, bs])),
+            h_sub=s["h_sub"].at[arG, bs].set(
+                jnp.where(ok, qs[flat, sl], s["h_sub"][arG, bs])),
+            h_w=s["h_w"].at[arG, bs].set(
+                jnp.where(ok, qw[flat, sl], s["h_w"][arG, bs])),
+            reads=s["reads"] + rmask, writes=s["writes"] + served_w,
+            hits=s["hits"] + (ok & hit), misses=s["misses"] + (ok & ~hit),
+            refpb=refpb, refab=refab,
+            lat_sum=s["lat_sum"] + jnp.where(rmask, lrec, 0),
+            hist=hist, maxlag=maxlag,
+            last_done=jnp.where(ok, jnp.maximum(s["last_done"], done),
+                                s["last_done"]),
+        )
+
+    run = jax.jit(lambda s0: lax.while_loop(cond, body, s0))
+    out = jax.device_get(run(st))
+    finished = out["n_served"].sum(axis=1) >= grid.n_tot
+    return [_finalize(grid, g, reads=out["reads"][g],
+                      writes=out["writes"][g], hits=out["hits"][g],
+                      misses=out["misses"][g], refpb=out["refpb"][g],
+                      refab=out["refab"][g], lat_sum=out["lat_sum"][g],
+                      hist=out["hist"][g], maxlag=out["maxlag"][g],
+                      last_done=out["last_done"][g], finished=finished[g])
+            for g in range(grid.G)]
+
+
+# ------------------------------------------------------------------ entry
+def sweep(spec: SweepSpec, backend: str = "batched",
+          arbiter: Optional[str] = None) -> SweepResult:
+    """Run the whole grid.
+
+    backend="batched" : stacked-numpy lock-step (default; supports custom
+                        policy registrations via per-cell fallback),
+    backend="jax"     : the whole tick loop jitted (`lax.while_loop`),
+                        fastest; built-in policy classes only,
+    backend="scalar"  : plain-Python per-cell reference oracle.
+
+    `arbiter` selects the availability/arbitration step implementation:
+    "numpy" (batched default), "jnp" (jax default), or "pallas" (the
+    kernel in `repro.kernels.sweep_arbiter`; interpret mode off-TPU).
+    """
+    grid = _Grid(spec)
+    if backend == "batched":
+        cells = _run_batched(grid, arbiter=arbiter or "numpy")
+    elif backend == "jax":
+        cells = _run_jax(grid, arbiter=arbiter or "jnp")
+    elif backend == "scalar":
+        cells = [_run_scalar_cell(grid, g) for g in range(grid.G)]
+    else:
+        raise ValueError(f"unknown sweep backend {backend!r}")
+    return SweepResult(spec, cells, backend)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the sweep engine's availability/arbitration step.
+
+The batched sweep engine (`repro.core.sweep`) advances a whole
+(workload, policy, density) grid one tick at a time; the hot inner step
+scores every (cell, bank) pair — can this bank start its head-of-queue
+request now, and at what FR-FCFS-style priority? — and arg-maxes over
+banks. On numpy that is a dozen elementwise ops over ``[G, B]`` arrays;
+this module provides the same step as a Pallas kernel so accelerator runs
+keep the grid resident on-device.
+
+The kernel reuses the idiom of `kernels/refresh_paged_attention.py`:
+scalar prefetch carries the tick counter, and the grid axis tiles over
+cells so while the VPU scores tile ``i`` the pipeline DMAs tile ``i+1`` —
+the arbitration of one slice of the sweep overlaps the fetch of the next,
+which is the same access/refresh parallelization shape the paper builds
+in DRAM.
+
+All arithmetic is int32 on both paths (`sweep.arbiter.arbiter_scores` is
+the shared scoring definition), so the kernel is bit-identical to the
+numpy backend — asserted by `tests/test_sweep.py`. Off-TPU the kernel
+runs in interpret mode, where `pallas_call` lowers to plain XLA ops
+under jit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sweep.arbiter import AGE_CAP, W_HIT, W_WRITE, arbiter_scores
+
+#: cells per grid step; G is padded up to a multiple of this
+TILE_G = 256
+
+
+def _arbiter_kernel(t_ref,                                # scalar prefetch
+                    has_req_ref, head_row_ref, head_sub_ref,
+                    head_arrive_ref, head_is_write_ref, bank_free_ref,
+                    ref_until_ref, ref_sub_ref, open_row_ref,
+                    drain_ref, sarp_ref, rank_drain_ref,   # [TILE_G, 1]
+                    score_ref):
+    t = t_ref[0]
+    sarp = sarp_ref[...] != 0
+    mid_ref = ref_until_ref[...] > t
+    other_sub = sarp & (ref_sub_ref[...] != head_sub_ref[...])
+    avail = (bank_free_ref[...] <= t) & (~mid_ref | other_sub)
+    elig = ((has_req_ref[...] != 0) & avail
+            & (rank_drain_ref[...] == 0))
+    age = jnp.minimum(t - head_arrive_ref[...], AGE_CAP)
+    wantw = (drain_ref[...] != 0) & (head_is_write_ref[...] != 0)
+    score = (jnp.where(wantw, W_WRITE, 0)
+             + jnp.where(head_row_ref[...] == open_row_ref[...], W_HIT, 0)
+             + age)
+    score_ref[...] = jnp.where(elig, score, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
+                  head_is_write, bank_free, ref_until, ref_sub, open_row,
+                  drain, sarp, rank_drain, *, interpret: bool):
+    G, B = head_row.shape
+    tiles = -(-G // TILE_G)
+    pad = tiles * TILE_G - G
+
+    def prep(x):
+        x = jnp.asarray(x, jnp.int32)
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+    gb = pl.BlockSpec((TILE_G, B), lambda i, t_: (i, 0))
+    g1 = pl.BlockSpec((TILE_G, 1), lambda i, t_: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[gb] * 9 + [g1] * 3,
+        out_specs=gb,
+    )
+    out = pl.pallas_call(
+        _arbiter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((tiles * TILE_G, B), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray([t], jnp.int32),
+      prep(has_req), prep(head_row), prep(head_sub), prep(head_arrive),
+      prep(head_is_write), prep(bank_free), prep(ref_until),
+      prep(ref_sub), prep(open_row),
+      prep(drain[:, None]), prep(sarp[:, None]), prep(rank_drain[:, None]))
+    return out[:G]
+
+
+def make_arbiter(G: int, B: int, interpret: bool | None = None):
+    """Build a score function with the `sweep.arbiter.arbiter_scores`
+    keyword signature, backed by the Pallas kernel. `interpret=None`
+    auto-selects interpret mode off-TPU."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def score(t, *, has_req, head_row, head_sub, head_arrive,
+              head_is_write, bank_free, ref_until, ref_sub, open_row,
+              drain, sarp, rank_drain):
+        out = _arbiter_call(
+            int(t), has_req, head_row, head_sub, head_arrive,
+            head_is_write, bank_free, ref_until, ref_sub, open_row,
+            drain, sarp, rank_drain, interpret=interpret)
+        return np.asarray(out)
+
+    return score
+
+
+def arbiter_scores_ref(t, **kw):
+    """jnp reference of the same step (shared scoring definition)."""
+    kw = {k: jnp.asarray(v) for k, v in kw.items()}
+    return arbiter_scores(jnp, jnp.int32(t), **kw)

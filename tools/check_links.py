@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Markdown link checker for README + docs/ (no third-party deps).
+
+Collects every inline markdown link/image target from the given files
+(default: README.md, ROADMAP.md, docs/*.md), resolves relative targets
+against the containing file, and fails if any pointed-to file is missing.
+External (http/https/mailto) targets are skipped — CI must not depend on
+network. Run from anywhere:
+
+    python tools/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: inline links/images: [text](target) — stops at closing paren/space
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def targets(md_path: str):
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    # drop fenced code blocks: example links in code are not contracts
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        yield m.group(1)
+
+
+def main(argv: list[str]) -> int:
+    files = argv or (["README.md", "ROADMAP.md"]
+                     + sorted(glob.glob(os.path.join(REPO, "docs", "*.md"))))
+    missing = []
+    checked = 0
+    for f in files:
+        path = f if os.path.isabs(f) else os.path.join(REPO, f)
+        if not os.path.exists(path):
+            missing.append((f, "<file itself missing>"))
+            continue
+        base = os.path.dirname(path)
+        for tgt in targets(path):
+            if tgt.startswith(_SKIP):
+                continue
+            checked += 1
+            rel = tgt.split("#", 1)[0]
+            if not rel:
+                continue
+            dest = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(dest):
+                missing.append((os.path.relpath(path, REPO), tgt))
+    if missing:
+        print("BROKEN LINKS:")
+        for src, tgt in missing:
+            print(f"  {src}: {tgt}")
+        return 1
+    print(f"link-check OK: {checked} relative links across "
+          f"{len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
