@@ -2,9 +2,14 @@
 
 bench_darp_ckpt    : trainer step-time overhead — synchronous stop-the-world
                      checkpointing vs DARP write-window flushes.
-bench_serving      : serving engine policies by registry name (all_bank /
+bench_serving      : serving policies by registry name (all_bank /
                      round_robin / darp / elastic / hira): throughput,
-                     forced stalls, maintenance smoothness.
+                     forced stalls, maintenance smoothness. Runs through
+                     the legacy ServingEngine shim on purpose — it doubles
+                     as the compat regression for that surface.
+bench_serving_lifecycle : the EngineCore request-lifecycle bench — a
+                     mixed-prompt batch with chunked prefill; publishes
+                     TTFT/TPOT percentiles and forward-call counts.
 bench_sarp_bytes   : derived HBM traffic of fused vs serial paged attention
                      (the TPU-relevant SARP metric) + numerics check.
 bench_kernel_micro : us/call of jitted reference paths on CPU.
@@ -104,6 +109,51 @@ def bench_serving(n_requests: int = 6, max_new: int = 24,
             "forced_stalls": eng.stats["stall_rounds"],
             "compressions": eng.cache.stats["compressions"]
                             + eng.cache.stats["forced"],
+        }
+    return out
+
+
+def bench_serving_lifecycle(n_requests: int = 6, max_new: int = 12,
+                            policies: tuple = ("darp", "all_bank"),
+                            prefill_chunk: int = 8) -> dict:
+    """EngineCore under a mixed-prompt batch (3..32-token prompts): per-
+    policy TTFT/TPOT percentiles, stall/eviction counts, and the
+    prefill/decode forward-call split that chunked prefill buys."""
+    from repro.kvcache import PagedKVConfig
+    from repro.models.api import get_model
+    from repro.serving import EngineConfig, EngineCore
+
+    cfg, dims = _reduced("qwen2-0.5b")
+    mod = get_model(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg, dims)
+    prompts = [[1 + i] + [2 + (5 * j + i) % 11
+                          for j in range(2 + (13 * i) % 30)]
+               for i in range(n_requests)]
+    out = {"prompt_lens": [len(p) for p in prompts], "max_new": max_new,
+           "prefill_chunk": prefill_chunk}
+    for pol in policies:
+        kv_cfg = PagedKVConfig(
+            n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
+            head_dim=cfg.attention.head_dim, page_size=4, n_pages=128,
+            n_staging=16, n_groups=4, max_seqs=8)
+        ecfg = EngineConfig(
+            max_batch=4, policy=pol, refresh_interval=3.0,
+            prefill_chunk=prefill_chunk,
+            force_threshold=0.99 if pol == "all_bank" else 0.8)
+        eng = EngineCore(params, cfg, dims, kv_cfg, ecfg)
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new, rid=i)
+        t0 = time.perf_counter()
+        eng.run_until_done(max_rounds=800)
+        wall = time.perf_counter() - t0
+        summ = eng.metrics_summary()
+        out[pol] = {
+            "wall_s": round(wall, 2),
+            "tokens": eng.stats["tokens"],
+            "tok_per_s": round(eng.stats["tokens"] / wall, 1),
+            "timed_out": eng.stats["timed_out"],
+            "evictions": eng.stats["evictions"],
+            **summ,
         }
     return out
 

@@ -9,7 +9,9 @@ dicts go to results/bench/*.json.
   sweep_grid     batched sweep engine: timed policy x scenario x density
                  grid vs the scalar tick oracle + legacy DramSim loop
   darp_ckpt      framework DARP: checkpoint flush scheduling overhead
-  serving        framework DARP: serving maintenance policies
+  serving        framework DARP: serving maintenance policies (legacy shim)
+  serving_lifecycle   EngineCore request lifecycle: TTFT/TPOT percentiles
+                 under a mixed-prompt batch with chunked prefill
   sarp_bytes     framework SARP: fused vs serial paged-attn HBM traffic
   kernel_micro   CPU reference micro-latencies
 
@@ -82,6 +84,15 @@ def main() -> None:
           f"darp_stalls={sv['darp']['forced_stalls']};"
           f"allbank_stalls={sv['all_bank']['forced_stalls']};"
           f"darp_tps={sv['darp']['tok_per_s']}", sv)
+
+    t0 = time.perf_counter()
+    sl = BF.bench_serving_lifecycle(n_requests=4 if fast else 6,
+                                    max_new=8 if fast else 12)
+    _emit("serving_lifecycle", (time.perf_counter() - t0) * 1e6,
+          f"darp_ttft_p50_ms={sl['darp']['ttft']['p50_ms']};"
+          f"darp_tpot_p50_ms={sl['darp']['tpot']['p50_ms']};"
+          f"prefill_calls={sl['darp']['prefill_calls']};"
+          f"decode_calls={sl['darp']['decode_calls']}", sl)
 
     sb = BF.bench_sarp_bytes()
     _emit("sarp_decode_bytes", 0.0,

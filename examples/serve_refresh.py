@@ -1,6 +1,6 @@
 """End-to-end serving driver (the paper's kind: memory-maintenance
-scheduling): batched requests through the continuous-batching engine with a
-paged int8 KV cache, comparing refresh policies.
+scheduling): a mixed-prompt batch through the request-lifecycle EngineCore
+with a paged int8 KV cache, comparing refresh policies.
 
   all_bank    : stop-the-world page compression (REF_ab analogue)
   round_robin : fixed-order group compression (LPDDR REF_pb analogue)
@@ -10,6 +10,8 @@ paged int8 KV cache, comparing refresh policies.
 
 Policies resolve by `repro.core.policy` registry name — add your own with
 `@register_policy("name")` and pass it here, no engine changes needed.
+Tokens stream through each request handle's callback as they are made;
+the summary reports TTFT/TPOT percentiles per policy.
 
   PYTHONPATH=src python examples/serve_refresh.py [--requests 8] [--new 24]
 """
@@ -17,13 +19,13 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.common.config import get_arch
 from repro.kvcache import PagedKVConfig
 from repro.models.api import get_model
 from repro.models.dims import make_dims
-from repro.serving import Request, ServeConfig, ServingEngine
-import jax.numpy as jnp
+from repro.serving import EngineConfig, EngineCore
 
 
 def main():
@@ -38,26 +40,35 @@ def main():
     mod = get_model(cfg)
     params = mod.init(jax.random.PRNGKey(0), cfg, dims)
 
+    # mixed prompt lengths — short chat turns next to a long document
+    prompts = [[1 + i] + [2 + (3 * j) % 9 for j in range(2 + (7 * i) % 14)]
+               for i in range(args.requests)]
+
     for pol in ("all_bank", "round_robin", "darp", "elastic", "hira"):
         kv_cfg = PagedKVConfig(
             n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
             head_dim=cfg.attention.head_dim, page_size=4, n_pages=128,
             n_staging=10, n_groups=4, max_seqs=8)
-        scfg = ServeConfig(
+        ecfg = EngineConfig(
             max_batch=3, policy=pol, refresh_interval=3.0,
             force_threshold=0.99 if pol == "all_bank" else 0.8)
-        eng = ServingEngine(params, cfg, dims, kv_cfg, scfg)
-        for i in range(args.requests):
-            eng.submit(Request(prompt=[1 + i, 2, 3, 4], max_new=args.new,
-                               rid=i))
+        eng = EngineCore(params, cfg, dims, kv_cfg, ecfg)
+        streamed = []
+        for i, p in enumerate(prompts):
+            eng.submit(p, args.new, rid=i,
+                       on_token=lambda h, tok: streamed.append((h.rid, tok)))
         t0 = time.perf_counter()
         eng.run_until_done(max_rounds=800)
         wall = time.perf_counter() - t0
+        s = eng.metrics_summary()
         print(f"{pol:12s} tokens={eng.stats['tokens']:4d} "
               f"tok/s={eng.stats['tokens']/wall:6.1f} "
               f"forced_stalls={eng.stats['stall_rounds']:3d} "
               f"compressions={eng.cache.stats['compressions']:3d} "
-              f"(forced={eng.cache.stats['forced']})")
+              f"(forced={eng.cache.stats['forced']}) "
+              f"ttft_p50={s['ttft']['p50_ms']}ms "
+              f"tpot_p50={s['tpot']['p50_ms']}ms "
+              f"streamed={len(streamed)}")
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ Importing this package registers the built-in policies (paper family +
 the elastic/hira extras)."""
 from repro.core.policy.base import (ALL_BANKS, Decision, MaintenanceView,
                                     PolicyBase, RefreshPolicy)
+from repro.core.policy.ledger import BankLedgerState, MaintenanceLedger
 from repro.core.policy.registry import (get_policy, list_policies,
                                         register_policy, resolve_policy)
 from repro.core.policy.paper import (AllBankPolicy, DarpPolicy, IdealPolicy,
@@ -17,7 +18,8 @@ from repro.core.policy.extras import ElasticPolicy, HiraPolicy
 
 __all__ = [
     "ALL_BANKS", "Decision", "MaintenanceView", "PolicyBase",
-    "RefreshPolicy", "get_policy", "list_policies", "register_policy",
+    "RefreshPolicy", "BankLedgerState", "MaintenanceLedger",
+    "get_policy", "list_policies", "register_policy",
     "resolve_policy", "AllBankPolicy", "DarpPolicy", "IdealPolicy",
     "RoundRobinPolicy", "ElasticPolicy", "HiraPolicy",
 ]

@@ -6,9 +6,12 @@ same policy object drives every engine in the repo:
 
   * `DramSim` (core/refresh/sim.py): timing-accurate DRAM refresh, where a
     bank is a DRAM bank and maintenance is a REF command,
-  * `DarpScheduler` (core/scheduler/darp.py): generic maintenance over
-    framework "banks" — KV-cache page-groups (serving) and checkpoint
-    shard-banks (training),
+  * `EngineCore` (serving/engine.py): KV-cache page-group compression via
+    the shared `MaintenanceLedger` (core/policy/ledger.py) — demand is
+    attended page-groups, pressure is staging occupancy,
+  * `DarpScheduler` (core/scheduler/darp.py): the compat wrapper over the
+    ledger for generic framework "banks" (checkpoint shard-banks and the
+    legacy serving spelling),
   * anything new: implement `select()` once, `@register_policy("name")`,
     and every engine can resolve it by name.
 
@@ -57,6 +60,11 @@ class MaintenanceView:
     max_issues: int = 1          # non-forced issues allowed this call
     rank_due: int = 0            # pending all-bank refreshes (sim only)
     rank_quiet: bool = True      # every bank drained; REF_ab may start
+    pressure: float = 0.0        # write-buffer fill fraction in [0, 1]:
+    #   DRAM sim = write-buffer occupancy; serving EngineCore = KV staging
+    #   pressure (1.0 means the forced red-line is imminent). Policies may
+    #   use it to modulate how aggressively they repay lag; engines that
+    #   have no buffer analogue leave it 0.
 
 
 @runtime_checkable

@@ -1,5 +1,5 @@
 """Generic maintenance scheduling over framework "banks" — a compatibility
-wrapper around the shared `repro.core.policy` objects.
+wrapper around `MaintenanceLedger` + the shared `repro.core.policy` objects.
 
 A *bank* is any resource that needs periodic maintenance:
   * training   : a parameter/optimizer shard whose checkpoint snapshot must
@@ -7,13 +7,19 @@ A *bank* is any resource that needs periodic maintenance:
   * serving    : a KV-cache page-group whose staged bf16 pages must be
                  compressed (re-quantized) every `interval` decode rounds.
 
-The decision logic itself lives in ONE place — `repro.core.policy` — and
-is the same code the timing-accurate `DramSim` runs: this class only keeps
-the due/issued ledger (phases, counts, last-issue times), builds a
-`MaintenanceView` per call, and records whatever the policy returns.
-Policies are resolved by registry name, so anything registered (including
-post-paper additions like "elastic" and "hira") drives the serving and
-checkpoint engines unchanged:
+Both halves of the job live elsewhere and are shared with every other
+engine in the repo:
+
+  * the decision logic is the registered `repro.core.policy` objects —
+    the same code the timing-accurate `DramSim` runs,
+  * the due/issued bookkeeping and `MaintenanceView` construction is
+    `repro.core.policy.ledger.MaintenanceLedger` — the same object the
+    serving `EngineCore` drives directly (its hot path does not go
+    through this class).
+
+This wrapper only glues the two together behind the historical
+`select(now, demand=...) -> [bank]` call shape, for callers that predate
+the ledger (checkpoint engine, existing tests, notebooks):
 
     DarpScheduler(n_banks=8, interval=4.0, policy="hira")
 
@@ -27,11 +33,12 @@ forced maintenance when the postpone budget is exhausted.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass
 from typing import Optional, Sequence, Union
 
-from repro.core.policy import (ALL_BANKS, MaintenanceView, RefreshPolicy,
+from repro.core.policy import (MaintenanceLedger, RefreshPolicy,
                                resolve_policy)
+from repro.core.policy.ledger import BankLedgerState as BankState  # noqa: F401
+# (re-exported: `BankState` was defined here before the ledger existed)
 
 
 class SchedulerPolicy(str, enum.Enum):
@@ -42,12 +49,6 @@ class SchedulerPolicy(str, enum.Enum):
     DARP = "darp"                # out-of-order + write-window parallelization
 
 
-@dataclass
-class BankState:
-    issued: int = 0
-    last_issue_time: float = -1.0
-
-
 class DarpScheduler:
     """Decide *which* banks get maintenance *now*. Time is caller-defined
     (steps, rounds, seconds) and strictly non-decreasing across calls."""
@@ -56,29 +57,40 @@ class DarpScheduler:
                  budget: int = 8,
                  policy: Union[str, SchedulerPolicy, RefreshPolicy] = "darp",
                  stagger: bool = True):
-        assert n_banks >= 1 and interval > 0 and budget >= 1
-        self.n_banks = n_banks
-        self.interval = float(interval)
-        self.budget = budget
+        self.ledger = MaintenanceLedger(n_banks, interval, budget=budget,
+                                        stagger=stagger)
         self.policy: RefreshPolicy = resolve_policy(policy)
-        self.banks = [BankState() for _ in range(n_banks)]
-        # stagger phases like LPDDR's tREFI_pb so maintenance spreads out
-        self.phase = [(i * self.interval / n_banks if stagger else 0.0)
-                      for i in range(n_banks)]
-        self._last_now = float("-inf")
 
-    # ------------------------------------------------------------- queries
+    # ---------------------------------------------------- ledger passthrough
+    @property
+    def n_banks(self) -> int:
+        return self.ledger.n_banks
+
+    @property
+    def interval(self) -> float:
+        return self.ledger.interval
+
+    @property
+    def budget(self) -> int:
+        return self.ledger.budget
+
+    @property
+    def banks(self) -> list:
+        return self.ledger.banks
+
+    @property
+    def phase(self) -> list:
+        return self.ledger.phase
+
     def due(self, b: int, now: float) -> int:
-        if now < self.phase[b]:
-            return 0
-        return int((now - self.phase[b]) // self.interval) + 1
+        return self.ledger.due(b, now)
 
     def lag(self, b: int, now: float) -> int:
         """due - issued; >0 means owed, <0 means pulled in."""
-        return self.due(b, now) - self.banks[b].issued
+        return self.ledger.lag(b, now)
 
     def overdue(self, now: float) -> list[int]:
-        return [b for b in range(self.n_banks) if self.lag(b, now) > 0]
+        return self.ledger.overdue(now)
 
     # -------------------------------------------------------------- select
     def select(self, now: float, *, demand: Sequence[int],
@@ -93,37 +105,16 @@ class DarpScheduler:
         engines can always start maintenance; the timing simulator passes
         real occupancy masks.
         """
-        assert len(demand) == self.n_banks
-        assert now >= self._last_now, "time must be monotonic"
-        self._last_now = now
-        view = MaintenanceView(
-            now=now, n_banks=self.n_banks, budget=self.budget,
-            lag=[self.lag(b, now) for b in range(self.n_banks)],
-            demand=list(demand),
-            ready=list(ready) if ready is not None else [True] * self.n_banks,
-            idle=list(idle) if idle is not None else [True] * self.n_banks,
-            write_window=write_window, max_issues=max_issues)
-        picks: list[int] = []
-        for d in self.policy.select(view):
-            # a rank-level decision means "maintain every bank now"
-            targets = (range(self.n_banks) if d.bank == ALL_BANKS
-                       else (d.bank,))
-            for b in targets:
-                self.banks[b].issued += 1
-                self.banks[b].last_issue_time = now
-                picks.append(b)
-        return picks
+        view = self.ledger.view(now, demand=demand,
+                                write_window=write_window,
+                                max_issues=max_issues, ready=ready, idle=idle)
+        return self.ledger.apply(self.policy.select(view), now)
 
     # ------------------------------------------------------------ invariant
     def check_invariant(self, now: float) -> None:
         """JEDEC budget invariant; raises on violation."""
-        for b in range(self.n_banks):
-            lag = self.lag(b, now)
-            if not (-self.budget <= lag <= self.budget):
-                raise AssertionError(
-                    f"bank {b}: lag {lag} outside ±{self.budget} at t={now}")
+        self.ledger.check_invariant(now)
 
     def snapshot_age(self, b: int, now: float) -> float:
         """Time since bank b's last maintenance (RPO metric for checkpoints)."""
-        t = self.banks[b].last_issue_time
-        return now - t if t >= 0 else now
+        return self.ledger.snapshot_age(b, now)

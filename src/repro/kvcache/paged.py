@@ -167,12 +167,27 @@ class PagedKVCache:
         return out
 
     def demand_by_group(self, attending_pages: list[int]) -> list[int]:
-        """Demand vector for the DARP scheduler: pages the current decode
+        """Demand vector for the maintenance view: pages the current decode
         batch is reading, bucketed by bank-group."""
         d = [0] * self.cfg.n_groups
         for p in attending_pages:
             d[self.group_of(p)] += 1
         return d
+
+    def compressible_by_group(self) -> list[int]:
+        """Per-group count of full staged pages (the maintenance work
+        actually available on each "bank" right now)."""
+        counts = [0] * self.cfg.n_groups
+        for p in self.compressible_pages():
+            counts[self.group_of(p)] += 1
+        return counts
+
+    def group_ready(self) -> list[bool]:
+        """`ready` mask for the maintenance view: a group is ready when a
+        compression can *start* there, i.e. it holds at least one full
+        staged page. (A not-ready group has nothing at risk — its lag may
+        keep accruing until a page fills.)"""
+        return [c > 0 for c in self.compressible_by_group()]
 
     def compress_page(self, p: int, forced: bool = False) -> None:
         """The refresh operation: staging -> int8 + scale, frees the slot."""
@@ -200,7 +215,14 @@ class PagedKVCache:
         return n
 
     def staging_pressure(self) -> float:
+        """Staging occupancy in [0, 1] — the serving analogue of the DRAM
+        write-buffer fill level (`MaintenanceView.pressure`)."""
         return 1.0 - len(self.free_staging) / self.cfg.n_staging
+
+    def page_pressure(self) -> float:
+        """Long-term page-pool occupancy in [0, 1]; 1.0 means the next
+        page allocation must evict a sequence."""
+        return 1.0 - len(self.free_pages) / self.cfg.n_pages
 
     # ------------------------------------------------------------- reads
     def gather_seq(self, sid: int, layer: int, dtype=jnp.bfloat16):

@@ -1,12 +1,17 @@
-"""Serving launcher: continuous batching over the paged int8 KV cache with
-DARP-scheduled page refresh.
+"""Serving launcher: the request-lifecycle EngineCore over the paged int8
+KV cache, with registry-resolved maintenance policies and per-request
+TTFT/TPOT metrics.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --requests 8 --new 16 --policy darp
+      --requests 8 --new 16 --policy darp --mixed
+
+Exits non-zero if the engine times out before draining (livelock is never
+masked), which makes this the CI serving smoke.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -17,7 +22,16 @@ from repro.core.policy import list_policies
 from repro.kvcache import PagedKVConfig
 from repro.models.api import get_model
 from repro.models.dims import make_dims
-from repro.serving import Request, ServeConfig, ServingEngine
+from repro.serving import EngineConfig, EngineCore
+
+
+def _prompts(n: int, mixed: bool, vocab: int):
+    """Deterministic prompt set; --mixed varies lengths (3..32 tokens) the
+    way a real arrival mix would."""
+    lens = [3 + (11 * i) % 30 for i in range(n)] if mixed else [3] * n
+    return [[1 + i] + [(5 * j + i) % max(2, vocab - 1) + 1
+                       for j in range(l - 1)]
+            for i, l in enumerate(lens)]
 
 
 def main():
@@ -28,6 +42,12 @@ def main():
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--policy", default="darp", choices=list_policies())
     ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prompt tokens per batched prefill round")
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed prompt lengths (3..32 tokens)")
+    ap.add_argument("--max-rounds", type=int, default=2000)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,19 +61,34 @@ def main():
     kv_cfg = PagedKVConfig(
         n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
         head_dim=cfg.attention.head_dim, page_size=args.page_size,
-        n_pages=256, n_staging=12, n_groups=4, max_seqs=8)
-    eng = ServingEngine(params, cfg, dims, kv_cfg,
-                        ServeConfig(max_batch=4, policy=args.policy))
-    for i in range(args.requests):
-        eng.submit(Request(prompt=[1 + i, 2, 3], max_new=args.new, rid=i))
+        n_pages=256, n_staging=24, n_groups=4, max_seqs=8)
+    eng = EngineCore(params, cfg, dims, kv_cfg, EngineConfig(
+        max_batch=4, policy=args.policy, max_queue=args.max_queue,
+        prefill_chunk=args.chunk))
+    handles = [eng.submit(p, args.new, rid=i)
+               for i, p in enumerate(_prompts(args.requests, args.mixed,
+                                              cfg.vocab_size))]
     t0 = time.perf_counter()
-    eng.run_until_done()
+    eng.run_until_done(max_rounds=args.max_rounds)
     wall = time.perf_counter() - t0
+    summ = eng.metrics_summary()
     print(f"policy={args.policy} tokens={eng.stats['tokens']} "
           f"tok/s={eng.stats['tokens']/wall:.1f} "
           f"forced_stalls={eng.stats['stall_rounds']} "
-          f"cache={eng.cache.stats}")
+          f"evictions={eng.stats['evictions']} "
+          f"prefill_calls={eng.stats['prefill_calls']} "
+          f"decode_calls={eng.stats['decode_calls']}")
+    print(f"ttft_ms p50={summ['ttft']['p50_ms']} p99={summ['ttft']['p99_ms']} "
+          f"| tpot_ms p50={summ['tpot']['p50_ms']} "
+          f"p99={summ['tpot']['p99_ms']} | cache={eng.cache.stats}")
+    for h in handles:
+        print(f"  rid={h.rid} state={h.state.value} prompt={len(h.prompt)} "
+              f"tokens={len(h.tokens)} ttft={h.ttft*1e3:.1f}ms")
+    if eng.stats["timed_out"]:
+        print("TIMED OUT before draining", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

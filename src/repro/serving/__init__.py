@@ -1,3 +1,10 @@
-from repro.serving.engine import ServeConfig, ServingEngine, Request
+from repro.serving.engine import (EngineConfig, EngineCore, QueueFull,
+                                  Request, RequestHandle, RequestMetrics,
+                                  RequestState, ServeConfig, ServingEngine)
 
-__all__ = ["ServeConfig", "ServingEngine", "Request"]
+__all__ = [
+    "EngineConfig", "EngineCore", "QueueFull", "RequestHandle",
+    "RequestMetrics", "RequestState",
+    # legacy shim spellings
+    "ServeConfig", "ServingEngine", "Request",
+]

@@ -12,10 +12,16 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kvcache import PagedKVCache
 from repro.models import layers as L
 from repro.models.dims import Dims
+
+#: Forward-call counters, keyed by entry point. The whole point of chunked
+#: prefill is fewer host-side forward invocations per prompt token; tests
+#: and benches read (and may zero) these to pin that ratio.
+FORWARD_CALLS = {"decode": 0, "prefill": 0}
 
 
 def _attend_one(q, k, v):
@@ -39,6 +45,7 @@ def paged_decode_forward(params, cfg, dims: Dims, cache: PagedKVCache,
     (logits [B, V], k_new [L, B, H_kv, Dh], v_new [L, B, H_kv, Dh]) —
     the caller appends k/v_new into the cache afterwards.
     """
+    FORWARD_CALLS["decode"] += 1
     att = cfg.attention
     bsz = len(sids)
     h = jnp.take(params["embed"], jnp.asarray(tokens)[:, None],
@@ -94,3 +101,98 @@ def paged_decode_forward(params, cfg, dims: Dims, cache: PagedKVCache,
     vmask = jnp.arange(head.shape[-1]) < cfg.vocab_size
     logits = jnp.where(vmask[None, :], logits.astype(jnp.float32), -jnp.inf)
     return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def paged_prefill_forward(params, cfg, dims: Dims, cache: PagedKVCache,
+                          sids: Sequence[int], chunks: Sequence[Sequence[int]]):
+    """One chunked-prefill round: several prompt tokens per sequence, for
+    several sequences, in ONE forward call.
+
+    chunks[bi] is the next slice of sequence sids[bi]'s prompt (lengths may
+    differ; shorter chunks are padded internally and the pad positions are
+    never returned). The cache is NOT written here — the caller appends the
+    returned K/V in order afterwards, so it can handle allocation failure
+    (forced compression / eviction) itself.
+
+    Bit-identical to feeding the same tokens one at a time through
+    `paged_decode_forward` + `cache.append`: linear layers and the MLP run
+    batched over the whole [B, T] chunk, while attention replays the
+    sequential semantics exactly — a chunk token attends to earlier chunk
+    tokens through the cache's storage dtype (as if they had already been
+    appended) and to itself at full precision, which is precisely what the
+    token-at-a-time path sees. Prompt logits are discarded by definition,
+    so no lm_head work is done.
+
+    Returns (k_new [L, B, Tmax, H_kv, Dh], v_new [L, B, Tmax, H_kv, Dh]);
+    entries past len(chunks[bi]) are padding.
+    """
+    FORWARD_CALLS["prefill"] += 1
+    att = cfg.attention
+    bsz = len(sids)
+    lens = [len(c) for c in chunks]
+    assert bsz and all(lens), "every sequence needs a non-empty chunk"
+    tmax = max(lens)
+    toks = np.zeros((bsz, tmax), np.int32)
+    for bi, c in enumerate(chunks):
+        toks[bi, :len(c)] = c
+    start = [int(cache.seq_len[sid]) for sid in sids]
+    cdtype = cache.cfg.dtype
+    h = jnp.take(params["embed"], jnp.asarray(toks),
+                 axis=0).astype(dims.compute_dtype)          # [B, T, D]
+    layers = params["layers"]
+    k_news, v_news = [], []
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda x: x[li], layers)
+        ap = lp["attn"]
+        x = L.rmsnorm(h, ap["ln"], cfg.norm_eps)
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"].astype(dt))
+        if "bq" in ap:
+            q = q + ap["bq"].astype(dt)
+            k = k + ap["bk"].astype(dt)
+            v = v + ap["bv"].astype(dt)
+        outs, k_layer, v_layer = [], [], []
+        for bi, sid in enumerate(sids):
+            past_k, past_v = cache.gather_seq(sid, li, dims.compute_dtype)
+            kb_f, vb_f, ob = [], [], []
+            for t in range(lens[bi]):
+                pv = jnp.full((1, 1), start[bi] + t, jnp.int32)
+                sin, cos = L.rope_angles(pv, att.head_dim, att.rope_theta)
+                qb = L.apply_rope(q[bi:bi + 1, t:t + 1], sin, cos)[0, 0]
+                kb = L.apply_rope(k[bi:bi + 1, t:t + 1], sin, cos)[0, 0]
+                vb = v[bi, t]
+                if t:
+                    # earlier chunk tokens are seen through the cache's
+                    # storage dtype, exactly as if already appended
+                    k_prev = jnp.stack(kb_f).astype(cdtype).astype(
+                        dims.compute_dtype)
+                    v_prev = jnp.stack(vb_f).astype(cdtype).astype(
+                        dims.compute_dtype)
+                    k_all = jnp.concatenate([past_k, k_prev, kb[None]], 0)
+                    v_all = jnp.concatenate([past_v, v_prev, vb[None]], 0)
+                else:
+                    k_all = jnp.concatenate([past_k, kb[None]], 0)
+                    v_all = jnp.concatenate([past_v, vb[None]], 0)
+                ob.append(_attend_one(qb, k_all, v_all))
+                kb_f.append(kb)
+                vb_f.append(vb)
+            pad = tmax - lens[bi]
+            z = jnp.zeros((pad,) + ob[0].shape, ob[0].dtype)
+            outs.append(jnp.concatenate([jnp.stack(ob), z])
+                        if pad else jnp.stack(ob))
+            zk = jnp.zeros((pad,) + kb_f[0].shape, kb_f[0].dtype)
+            k_layer.append(jnp.concatenate([jnp.stack(kb_f), zk])
+                           if pad else jnp.stack(kb_f))
+            v_layer.append(jnp.concatenate([jnp.stack(vb_f), zk])
+                           if pad else jnp.stack(vb_f))
+        out = jnp.stack(outs).astype(dt)                     # [B, T, H, Dh]
+        y = jnp.einsum("bshk,hkd->bsd", out, ap["wo"].astype(dt))
+        h = h + y
+        mp = lp["mlp"]
+        x2 = L.rmsnorm(h, mp["ln"], cfg.norm_eps)
+        h = h + L.gated_mlp(x2, mp["wi"], mp["wg"], mp["wd"])
+        k_news.append(jnp.stack(k_layer))
+        v_news.append(jnp.stack(v_layer))
+    return jnp.stack(k_news), jnp.stack(v_news)

@@ -1,0 +1,221 @@
+"""EngineCore request-lifecycle tests: admission/backpressure, chunked
+prefill equivalence vs the legacy token-at-a-time path, eviction under
+page exhaustion, livelock reporting, and the legacy ServingEngine shim."""
+import inspect
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core.policy import MaintenanceLedger
+from repro.kvcache import PagedKVCache, PagedKVConfig
+from repro.models.api import get_model
+from repro.serving import (EngineConfig, EngineCore, QueueFull, Request,
+                           RequestState, ServeConfig, ServingEngine)
+from repro.serving.paged_decode import FORWARD_CALLS, paged_decode_forward
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg, dims = reduced("qwen2-0.5b")
+    mod = get_model(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg, dims)
+    return params, cfg, dims
+
+
+def _kv(cfg, dims, **over):
+    base = dict(n_layers=cfg.n_layers, n_kv_heads=dims.n_kv,
+                head_dim=cfg.attention.head_dim, page_size=4, n_pages=64,
+                n_staging=16, n_groups=4, max_seqs=8, dtype=jnp.float32)
+    base.update(over)
+    return PagedKVConfig(**base)
+
+
+def _engine(model, kv_over=None, **ecfg):
+    params, cfg, dims = model
+    return EngineCore(params, cfg, dims, _kv(cfg, dims, **(kv_over or {})),
+                      EngineConfig(**ecfg))
+
+
+# ------------------------------------------------------------ edge cases
+
+def test_empty_prompt_and_zero_max_new_finish_at_submit(model):
+    eng = _engine(model)
+    h_empty = eng.submit([], max_new=8)
+    h_zero = eng.submit([1, 2, 3], max_new=0)
+    assert h_empty.state is RequestState.DONE and h_empty.tokens == []
+    assert h_zero.state is RequestState.DONE and h_zero.tokens == []
+    assert not eng.has_work()
+    eng.run_until_done()             # no-op, must not spin or time out
+    assert eng.stats["rounds"] == 0 and not eng.stats["timed_out"]
+
+
+def test_queue_full_backpressure(model):
+    eng = _engine(model, max_queue=2)
+    h1 = eng.submit([1, 2], max_new=1)
+    h2 = eng.submit([1, 3], max_new=1)
+    assert eng.would_block()
+    with pytest.raises(QueueFull):
+        eng.submit([1, 4], max_new=1)
+    assert eng.stats["rejected"] == 1
+    eng.run_until_done(max_rounds=50)
+    assert h1.state is RequestState.DONE and h2.state is RequestState.DONE
+    assert not eng.would_block()     # draining reopens the queue
+
+
+def test_eviction_under_page_exhaustion(model):
+    # 4 pages x 4 tokens = 16-token capacity; rid=1 wants 3+30 tokens and
+    # must be evicted instead of crashing the engine (the legacy engine
+    # died on an assert here).
+    eng = _engine(model, kv_over=dict(n_pages=4, n_staging=4,
+                                      max_pages_per_seq=8),
+                  policy="ideal", max_batch=2)
+    short = eng.submit([1, 2, 3], max_new=6, rid=0)
+    long = eng.submit([1, 2, 4], max_new=30, rid=1)
+    eng.run_until_done(max_rounds=200)
+    assert not eng.stats["timed_out"]
+    assert short.state is RequestState.DONE and len(short.tokens) == 6
+    assert long.state is RequestState.EVICTED and len(long.tokens) < 30
+    assert eng.stats["evictions"] == 1
+    # eviction released everything: the pools are whole again
+    assert len(eng.cache.free_pages) == eng.cache.cfg.n_pages
+    assert len(eng.cache.free_staging) == eng.cache.cfg.n_staging
+
+
+def test_timed_out_recorded_not_masked(model):
+    eng = _engine(model, policy="ideal")
+    h = eng.submit([1, 2, 3], max_new=30)
+    with pytest.warns(RuntimeWarning, match="max_rounds"):
+        eng.run_until_done(max_rounds=2)
+    assert eng.stats["timed_out"] and not h.done
+    eng.run_until_done(max_rounds=200)       # finishing clears the flag
+    assert not eng.stats["timed_out"] and h.state is RequestState.DONE
+
+
+# ------------------------------------------- chunked-prefill equivalence
+
+def _legacy_greedy(model, kv_cfg, prompts, max_new):
+    """The pre-EngineCore reference loop: token-at-a-time prefill through
+    the decode path, then batched greedy decode — the oracle the redesign
+    must reproduce bit-identically."""
+    params, cfg, dims = model
+    cache = PagedKVCache(kv_cfg)
+    reqs = []
+    for prompt in prompts:
+        sid = cache.new_seq()
+        for tok in prompt[:-1]:
+            _, k, v = paged_decode_forward(params, cfg, dims, cache, [sid],
+                                           jnp.asarray([tok], jnp.int32))
+            assert cache.append(sid, k[:, 0], v[:, 0])
+        reqs.append({"sid": sid, "next": prompt[-1], "out": []})
+    while any(len(r["out"]) < max_new for r in reqs):
+        act = [r for r in reqs if len(r["out"]) < max_new]
+        logits, k, v = paged_decode_forward(
+            params, cfg, dims, cache, [r["sid"] for r in act],
+            jnp.asarray([r["next"] for r in act], jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for bi, r in enumerate(act):
+            assert cache.append(r["sid"], k[:, bi], v[:, bi])
+            r["out"].append(int(nxt[bi]))
+            r["next"] = int(nxt[bi])
+    return [r["out"] for r in reqs]
+
+
+def test_greedy_equivalence_and_call_reduction(model):
+    """32-token-prompt batch: EngineCore's chunked prefill must produce
+    bit-identical greedy tokens to the legacy per-token loop, in >= 3x
+    fewer forward calls (acceptance criterion)."""
+    params, cfg, dims = model
+    prompts = [[1 + i] + [(7 * j + 3 * i) % (cfg.vocab_size - 1) + 1
+                          for j in range(31)] for i in range(2)]
+    max_new = 3
+    # no compression may fire on either side (it is lossy and would break
+    # bit-identity): "ideal" policy + staging big enough for both prompts
+    staging = dict(n_staging=24)
+    kv = _kv(cfg, dims, **staging)
+
+    c0 = sum(FORWARD_CALLS.values())
+    ref = _legacy_greedy(model, kv, prompts, max_new)
+    legacy_calls = sum(FORWARD_CALLS.values()) - c0
+
+    eng = _engine(model, kv_over=staging, policy="ideal", prefill_chunk=8,
+                  force_threshold=2.0)   # red-line off: no forced compress
+    streamed = []
+    handles = [eng.submit(p, max_new, rid=i,
+                          on_token=lambda h, t: streamed.append((h.rid, t)))
+               for i, p in enumerate(prompts)]
+    c0 = sum(FORWARD_CALLS.values())
+    eng.run_until_done(max_rounds=100)
+    core_calls = sum(FORWARD_CALLS.values()) - c0
+
+    assert [h.tokens for h in handles] == ref          # bit-identical
+    assert legacy_calls >= 3 * core_calls, (legacy_calls, core_calls)
+    # streaming callbacks observed every token, in order per request
+    for h in handles:
+        assert [t for r, t in streamed if r == h.rid] == h.tokens
+    # lifecycle metrics populated
+    for h in handles:
+        m = h.metrics
+        assert m.admit_round >= m.submit_round >= 0
+        assert m.first_token_round >= m.admit_round
+        assert m.finish_round >= m.first_token_round
+        assert np.isfinite(h.ttft) and np.isfinite(h.tpot)
+        assert m.prefill_chunks == 4                   # ceil(31 / 8)
+
+
+# ------------------------------------------------- maintenance hot path
+
+def test_registry_hot_path_has_no_darpscheduler(model):
+    """Acceptance: EngineCore resolves policies by registry name with no
+    DarpScheduler dependency in the hot path."""
+    import repro.serving.engine as E
+    imports = [l for l in inspect.getsource(E).splitlines()
+               if l.lstrip().startswith(("from ", "import "))]
+    assert not any("scheduler" in l or "DarpScheduler" in l for l in imports)
+    eng = _engine(model, policy="darp")
+    assert eng.policy.name == "darp"
+    assert isinstance(eng.ledger, MaintenanceLedger)
+    # legacy enum spellings still resolve through the registry
+    from repro.core.scheduler import SchedulerPolicy
+    eng2 = _engine(model, policy=SchedulerPolicy.ALL_BANK)
+    assert eng2.policy.name == "all_bank"
+
+
+def test_maintenance_counts_stall_once_per_round(model):
+    """A round where the pressure red-line AND an append failure both
+    force-compress must count ONE stall (the legacy engine double-counted)."""
+    eng = _engine(model, kv_over=dict(n_pages=64, n_staging=3),
+                  policy="ideal", force_threshold=0.5, max_batch=1)
+    h = eng.submit([1, 2, 3, 4, 5, 6], max_new=10)
+    eng.run_until_done(max_rounds=100)
+    assert h.state is RequestState.DONE
+    assert eng.stats["stall_rounds"] <= eng.stats["rounds"]
+    assert h.metrics.stall_rounds == eng.stats["stall_rounds"]
+
+
+# ------------------------------------------------------------ legacy shim
+
+def test_legacy_shim_runs_unchanged(model):
+    params, cfg, dims = model
+    with pytest.warns(DeprecationWarning):
+        eng = ServingEngine(params, cfg, dims, _kv(cfg, dims),
+                            ServeConfig(max_batch=2, policy="darp",
+                                        refresh_interval=3.0))
+    reqs = [Request(prompt=[1 + i, 2, 3], max_new=4, rid=i)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_rounds=200)
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    # the legacy stats/cache surfaces still exist with the same keys
+    for key in ("rounds", "tokens", "stall_rounds", "maintenance_events"):
+        assert key in eng.stats
+    assert eng.stats["tokens"] == 12
+    assert eng.cache.stats["appends"] > 0
+    # empty prompt: legacy behavior (finishes immediately, no crash)
+    empty = Request(prompt=[], max_new=4, rid=99)
+    eng.submit(empty)
+    assert empty.done and empty.out == []
