@@ -1,18 +1,24 @@
 """Paper-figure reproductions, driven by the batched sweep engine.
 
 fig1: performance loss of REF_ab / REF_pb vs the no-refresh ideal across
-      densities (paper Figure 1; claims C1, C2) — one sweep-grid call.
+      densities (paper Figure 1; claims C1, C2) — one *closed-loop*
+      sweep-grid call reporting true weighted speedup.
 fig2: service-timeline microbenchmark — a read arriving during a refresh
       to another subarray of the SAME bank (paper Figure 2; SARP
       mechanism). Stays on the event-driven `DramSim` (single focused
       scenario; timing fidelity matters more than throughput).
 fig3: DSARP (and components) performance + energy vs baselines across
       densities (paper Figure 3; claims C3, C4), plus the post-paper
-      registry policies (elastic, hira) — one sweep-grid call.
-sweep_grid: the engine's own benchmark — a timed 8x8x3
+      registry policies (elastic, hira) — one *closed-loop* sweep-grid
+      call; `ws` is `CellResult.weighted_speedup_vs`, the paper's metric.
+sweep_grid: the engine's own benchmark — a timed 8x8x3 *open-loop*
       (policy x scenario x density) grid through the batched backend vs
       (a) the bit-identical scalar tick oracle and (b) the legacy
       workflow of looping the event-driven `DramSim` per cell.
+closed_loop: the closed-loop analogue — a timed (policy x closed-scenario
+      x density) grid through the batched backend vs looping
+      `DramSim.run_ticks` per cell, plus the bit_identical conformance
+      flag (the same cross-check `tests/test_conformance.py` enforces).
 
 `docs/figures.md` maps each emitted results/bench/*.json artifact to its
 paper figure and regeneration command.
@@ -23,18 +29,26 @@ import time
 
 import numpy as np
 
-from repro.core.refresh import make_workload, run_policy
+from repro.core.refresh import (DramSim, make_closed_workload,
+                                make_workload, run_policy)
+from repro.core.refresh.timing import timing_for_density
 from repro.core.refresh.workload import Workload
 from repro.core.sweep import SweepSpec, sweep
 
 DENSITIES = (8, 16, 32)
-#: scenario axis used for the paper figures: low-contention, mixed,
-#: write-drain, hot-bank contention, and the replay antagonist — the
-#: last two sustain multi-bank refresh debt, which is what separates
+#: scenario axis used for the open-loop engine benchmarks: low-contention,
+#: mixed, write-drain, hot-bank contention, and the replay antagonist —
+#: the last two sustain multi-bank refresh debt, which is what separates
 #: policies like hira from sarp_pb (with a single owed bank every
 #: selection rule picks it)
 FIG_SCENARIOS = ("read_heavy", "mixed", "write_burst_draining",
                  "bank_camping", "trace_replay")
+#: closed-loop scenario axis for the paper figures: the MLP spread is the
+#: point — refresh hurts most where cores stall on every miss (low_mlp)
+#: and least where deep MLP hides it (streaming)
+CLOSED_FIG_SCENARIOS = ("closed_mixed", "closed_read_heavy",
+                        "closed_write_heavy", "closed_low_mlp",
+                        "closed_streaming")
 #: every figure statistic averages these trace seeds
 FIG_SEEDS = (1, 2)
 #: the full default grid axes for sweep_grid (8 x 8 x 3)
@@ -56,28 +70,35 @@ FIG3_POLICIES = ("ref_ab", "ref_pb", "darp", "sarp_pb", "dsarp",
                  "elastic", "hira", "ideal")
 
 
-def fig_grids(reqs: int = 800) -> list:
-    """One full figure grid per seed — pass to fig1/fig3 via `runs=` to
-    compute both figures from a single set of sweeps."""
+def fig_grids(reqs: int = 2000) -> list:
+    """One full closed-loop figure grid per seed — pass to fig1/fig3 via
+    `runs=` to compute both figures from a single set of sweeps. The
+    demand must span several tREFI intervals (reqs >= ~1500) or all-bank
+    refresh barely fires and the Figure 1 ordering degenerates."""
     return [sweep(SweepSpec(policies=FIG3_POLICIES,
-                            scenarios=FIG_SCENARIOS, densities=DENSITIES,
-                            reqs=reqs, seed=s))
+                            scenarios=CLOSED_FIG_SCENARIOS,
+                            densities=DENSITIES, reqs=reqs, seed=s,
+                            mode="closed"))
             for s in FIG_SEEDS]
 
 
-def fig1(reqs: int = 800, runs: list = None) -> dict:
+def fig1(reqs: int = 2000, runs: list = None) -> dict:
+    """Performance loss vs the no-refresh ideal: 1 - weighted speedup,
+    the paper's closed-loop metric (was a latency proxy before the
+    closed-loop sweep mode landed)."""
     if runs is None:
         runs = [sweep(SweepSpec(policies=("ideal", "ref_ab", "ref_pb"),
-                                scenarios=FIG_SCENARIOS,
-                                densities=DENSITIES, reqs=reqs, seed=s))
+                                scenarios=CLOSED_FIG_SCENARIOS,
+                                densities=DENSITIES, reqs=reqs, seed=s,
+                                mode="closed"))
                 for s in FIG_SEEDS]
     out = {}
     for d in DENSITIES:
         out[d] = {}
         for p in ("ref_ab", "ref_pb"):
-            ws = [res.get(p, s, d).latency_speedup_vs(
+            ws = [res.get(p, s, d).weighted_speedup_vs(
                       res.get("ideal", s, d))
-                  for res in runs for s in FIG_SCENARIOS]
+                  for res in runs for s in CLOSED_FIG_SCENARIOS]
             out[d][p] = 1.0 - float(np.mean(ws))
     return out
 
@@ -97,7 +118,9 @@ def fig2() -> dict:
     return out
 
 
-def fig3(reqs: int = 800, runs: list = None) -> dict:
+def fig3(reqs: int = 2000, runs: list = None) -> dict:
+    """DSARP + components vs baselines: `ws` is the true closed-loop
+    weighted speedup vs the per-grid ideal (`weighted_speedup_vs`)."""
     policies = FIG3_POLICIES
     if runs is None:
         runs = fig_grids(reqs)
@@ -107,9 +130,9 @@ def fig3(reqs: int = 800, runs: list = None) -> dict:
         for p in policies:
             ws, es = [], []
             for res in runs:
-                for s in FIG_SCENARIOS:
+                for s in CLOSED_FIG_SCENARIOS:
                     cell = res.get(p, s, d)
-                    ws.append(cell.latency_speedup_vs(
+                    ws.append(cell.weighted_speedup_vs(
                         res.get("ideal", s, d)))
                     es.append(cell.energy)
             row[p] = {"ws": float(np.mean(ws)), "energy": float(np.mean(es))}
@@ -162,5 +185,54 @@ def sweep_grid(fast: bool = False) -> dict:
         "legacy_dramsim_loop_s": round(t_legacy, 3),
         "speedup_vs_scalar_tick": round(t_scalar / t_batched, 2),
         "speedup_vs_dramsim_loop": round(t_legacy / t_batched, 2),
+        "bit_identical": identical,
+    }
+
+
+def closed_loop(fast: bool = False) -> dict:
+    """Timed closed-loop grid: the batched backend advancing every
+    (policy x closed-scenario x density) cell in lock-step vs the
+    conformance workflow of looping `DramSim.run_ticks` per cell —
+    including the bit_identical cross-check over every shared stat."""
+    reqs = 120 if fast else 400
+    seed = 0
+    spec = SweepSpec(policies=GRID_POLICIES,
+                     scenarios=CLOSED_FIG_SCENARIOS, densities=DENSITIES,
+                     reqs=reqs, seed=seed, mode="closed")
+
+    t0 = time.perf_counter()
+    batched = sweep(spec, backend="batched")
+    t_batched = time.perf_counter() - t0
+
+    wls = {s: make_closed_workload(s, reqs, seed)
+           for s in CLOSED_FIG_SCENARIOS}
+    identical = True
+    t0 = time.perf_counter()
+    for p, s, d in spec.cells():
+        sim = DramSim(timing_for_density(d), wls[s], p).run_ticks()
+        cell = batched.get(p, s, d)
+        identical &= (
+            cell.makespan == sim.makespan
+            and cell.reads_done == sim.reads_done
+            and cell.writes_done == sim.writes_done
+            and cell.avg_read_latency == sim.avg_read_latency
+            and cell.p99_read_latency == sim.p99_read_latency
+            and cell.refreshes_pb == sim.refreshes_pb
+            and cell.refreshes_ab == sim.refreshes_ab
+            and cell.row_hits == sim.row_hits
+            and cell.row_misses == sim.row_misses
+            and cell.energy == sim.energy
+            and cell.max_abs_lag == sim.max_abs_lag
+            and list(cell.core_finish) == list(sim.core_finish))
+    t_ticks_loop = time.perf_counter() - t0
+
+    return {
+        "grid": {"policies": len(spec.policies),
+                 "scenarios": len(spec.scenarios),
+                 "densities": len(spec.densities),
+                 "cells": len(spec.cells()), "reqs_per_cell": spec.reqs},
+        "batched_s": round(t_batched, 3),
+        "dramsim_ticks_loop_s": round(t_ticks_loop, 3),
+        "speedup_vs_dramsim_ticks": round(t_ticks_loop / t_batched, 2),
         "bit_identical": identical,
     }

@@ -4,10 +4,14 @@ Prints ``name,us_per_call,derived`` CSV (per the repo convention); detailed
 dicts go to results/bench/*.json.
 
   fig1  paper Fig.1: perf loss of REF_ab/REF_pb vs ideal across densities
+        (closed-loop weighted speedup — the paper's metric)
   fig2  paper Fig.2: SARP service-timeline (read behind refresh)
-  fig3  paper Fig.3: DSARP perf+energy vs baselines
-  sweep_grid     batched sweep engine: timed policy x scenario x density
-                 grid vs the scalar tick oracle + legacy DramSim loop
+  fig3  paper Fig.3: DSARP perf+energy vs baselines (closed-loop ws)
+  sweep_grid     batched sweep engine: timed open-loop policy x scenario
+                 x density grid vs the scalar tick oracle + legacy
+                 DramSim loop
+  sweep_closed_loop   closed-loop grid vs looping DramSim.run_ticks per
+                 cell, with the bit_identical conformance flag
   darp_ckpt      framework DARP: checkpoint flush scheduling overhead
   serving        framework DARP: serving maintenance policies (legacy shim)
   serving_lifecycle   EngineCore request lifecycle: TTFT/TPOT percentiles
@@ -37,8 +41,10 @@ def _emit(name: str, us: float, derived: str, payload) -> None:
 def main() -> None:
     fast = "--fast" in sys.argv
     # the grid figures run through the batched sweep engine, so the
-    # per-cell load no longer needs to shrink much in --fast mode
-    reqs = 600 if fast else 1500
+    # per-cell load no longer needs to shrink much in --fast mode; the
+    # closed-loop demand must still span several tREFI intervals or
+    # all-bank refresh barely fires
+    reqs = 800 if fast else 2000
 
     from benchmarks import fig_refresh as FR
     from benchmarks import bench_framework as BF
@@ -69,6 +75,12 @@ def main() -> None:
           f"vs_dramsim_loop={sg['speedup_vs_dramsim_loop']}x;"
           f"vs_scalar_tick={sg['speedup_vs_scalar_tick']}x;"
           f"bit_identical={sg['bit_identical']}", sg)
+
+    t0 = time.perf_counter()
+    cl = FR.closed_loop(fast=fast)
+    _emit("sweep_closed_loop", (time.perf_counter() - t0) * 1e6,
+          f"vs_dramsim_ticks={cl['speedup_vs_dramsim_ticks']}x;"
+          f"bit_identical={cl['bit_identical']}", cl)
 
     t0 = time.perf_counter()
     ck = BF.bench_darp_ckpt(steps=20 if fast else 40)

@@ -5,8 +5,11 @@ plus a scenario x policy latency matrix from the sweep engine.
   PYTHONPATH=src:. python examples/dram_sweep.py [--fast]
 
 The figures used to loop the event-driven `DramSim` once per (workload,
-policy, density) point; they now run through `repro.core.sweep`, which
-advances the whole grid in lock-step (see docs/architecture.md).
+policy, density) point; they now run through `repro.core.sweep`'s
+closed-loop mode, which advances the whole MLP-limited grid in lock-step
+and reports true weighted speedup — the paper's metric (see
+docs/architecture.md). The latency matrix at the end stays on an
+open-loop trace grid.
 """
 import sys
 
@@ -16,11 +19,11 @@ from repro.core.sweep import SweepSpec, sweep
 
 def main():
     fast = "--fast" in sys.argv
-    # traces must span several tREFI intervals or all-bank refresh never
-    # fires and the Figure 1 ordering degenerates
-    reqs = 600 if fast else 1500
+    # the closed-loop demand must span several tREFI intervals or
+    # all-bank refresh barely fires and the Figure 1 ordering degenerates
+    reqs = 800 if fast else 2000
     runs = FR.fig_grids(reqs=reqs)     # one sweep set feeds both figures
-    print("== Figure 1: performance loss vs ideal (no refresh) ==")
+    print("== Figure 1: weighted-speedup loss vs ideal (no refresh) ==")
     f1 = FR.fig1(reqs=reqs, runs=runs)
     for d, row in f1.items():
         print(f"  {d:2d}Gb: REF_ab loss={row['ref_ab']*100:5.1f}%  "

@@ -70,12 +70,16 @@ class MaintenanceLedger:
              write_window: bool = False, max_issues: int = 1,
              ready: Optional[Sequence[bool]] = None,
              idle: Optional[Sequence[bool]] = None,
-             pressure: float = 0.0) -> MaintenanceView:
+             pressure: float = 0.0, rank_due: int = 0,
+             rank_quiet: bool = True) -> MaintenanceView:
         """Build the read-only snapshot a policy decides against.
 
         demand[b]: pending demand work on bank b. `ready`/`idle` default
         to all-True (generic engines can always start maintenance);
         `pressure` is the engine's write-buffer/staging fill fraction.
+        `rank_due`/`rank_quiet` only matter to rank-level (all-bank)
+        policies — engines that track rank refresh debt themselves (the
+        tick simulators) pass them through here.
         """
         assert len(demand) == self.n_banks
         assert now >= self._last_now, "time must be monotonic"
@@ -87,7 +91,8 @@ class MaintenanceLedger:
             ready=list(ready) if ready is not None else [True] * self.n_banks,
             idle=list(idle) if idle is not None else [True] * self.n_banks,
             write_window=write_window, max_issues=max_issues,
-            pressure=float(pressure))
+            pressure=float(pressure), rank_due=int(rank_due),
+            rank_quiet=bool(rank_quiet))
 
     def apply(self, decisions: Sequence[Decision], now: float) -> list[int]:
         """Record the policy's decisions as issued; returns the flat bank

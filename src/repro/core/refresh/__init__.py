@@ -1,11 +1,19 @@
 from repro.core.refresh.timing import DramTiming, DENSITIES
-from repro.core.refresh.workload import Workload, make_workload
-from repro.core.refresh.scenarios import (Trace, list_scenarios, make_trace,
+from repro.core.refresh.workload import (Workload, make_workload,
+                                         quantize_streams)
+from repro.core.refresh.scenarios import (ClosedDemand, Trace,
+                                          list_closed_scenarios,
+                                          list_scenarios,
+                                          make_closed_demand,
+                                          make_closed_workload, make_trace,
+                                          register_closed_scenario,
                                           register_scenario)
 from repro.core.refresh.sim import (DramSim, SimResult, POLICIES,
                                     energy_proxy, run_policy)
 
 __all__ = ["DramTiming", "DENSITIES", "Workload", "make_workload",
-           "Trace", "list_scenarios", "make_trace", "register_scenario",
-           "DramSim", "SimResult", "POLICIES", "energy_proxy",
-           "run_policy"]
+           "quantize_streams", "Trace", "list_scenarios", "make_trace",
+           "register_scenario", "ClosedDemand", "list_closed_scenarios",
+           "make_closed_demand", "make_closed_workload",
+           "register_closed_scenario", "DramSim", "SimResult", "POLICIES",
+           "energy_proxy", "run_policy"]

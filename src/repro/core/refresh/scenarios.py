@@ -42,6 +42,22 @@ the arXiv:1805.01289 follow-up) show matter for refresh policies:
 Times are integer *ticks* (the sweep engine's quantum, default 6 ns); a
 trace is density-independent — the grid reuses one trace per (scenario,
 seed) across every policy and density so cells stay comparable.
+
+Closed-loop scenarios (PR 4) live in a second registry: a closed scenario
+names a `workload.Workload` — the SAME MLP-limited multi-core generator
+`DramSim` consumes — so the sweep engine's closed-loop mode and the
+event/tick simulators replay one demand stream:
+
+    @register_closed_scenario("closed_mixed")
+    def closed_mixed(reqs, seed): return make_workload("mixed", ...)
+
+    dem = make_closed_demand("closed_mixed", seed=1)   # quantized ticks
+    list_closed_scenarios()
+
+`make_closed_demand` stacks the per-core streams into [n_cores, n_req]
+arrays with think gaps quantized via `workload.quantize_streams`, and
+keeps the originating `Workload` on the result so conformance tests can
+hand the identical demand to `DramSim`.
 """
 from __future__ import annotations
 
@@ -50,6 +66,9 @@ from dataclasses import dataclass
 from typing import Callable, Dict
 
 import numpy as np
+
+from repro.core.refresh.workload import (Workload, make_workload,
+                                         quantize_streams)
 
 N_ROWS = 4096               # rows per bank exposed to scenarios
 
@@ -293,3 +312,124 @@ def trace_replay(n_banks, n_subarrays, reqs, rs, trace: dict = None):
                      trace["arrive"], np.asarray(trace["bank"]) % n_banks,
                      np.asarray(trace["row"]) % N_ROWS, trace["is_write"],
                      sub=trace.get("sub"))
+
+
+# ===================================================== closed-loop library
+_CLOSED_SCENARIOS: Dict[str, Callable] = {}
+
+
+@dataclass(frozen=True)
+class ClosedDemand:
+    """Closed-loop demand for one scenario: per-core request streams
+    stacked as [n_cores, n_req] arrays, think gaps in integer ticks.
+
+    `workload` is the generating `Workload` spec — hand it to `DramSim`
+    (event or tick mode) and both simulators replay the same stream.
+    """
+    name: str
+    workload: Workload          # the generator spec (shared with DramSim)
+    is_write: np.ndarray        # [C, N] bool
+    bank: np.ndarray            # [C, N] int32
+    row: np.ndarray             # [C, N] int32
+    sub: np.ndarray             # [C, N] int32
+    think: np.ndarray           # [C, N] int32 ticks (>= 0)
+    n_banks: int
+    n_subarrays: int
+    dt_ns: float
+
+    @property
+    def n_cores(self) -> int:
+        return int(self.is_write.shape[0])
+
+    @property
+    def mlp(self) -> int:
+        return int(self.workload.mlp)
+
+    def __len__(self) -> int:
+        return int(self.is_write.size)
+
+    def validate(self) -> "ClosedDemand":
+        C, N = self.is_write.shape
+        assert C == self.workload.n_cores and C >= 1 and N >= 1
+        assert self.workload.mlp >= 1
+        for a in (self.bank, self.row, self.sub, self.think):
+            assert a.shape == (C, N)
+        assert (0 <= self.bank).all() and (self.bank < self.n_banks).all()
+        assert (0 <= self.sub).all() and (self.sub < self.n_subarrays).all()
+        assert (self.think >= 0).all()
+        return self
+
+
+def register_closed_scenario(name: str, fn: Callable = None, *,
+                             override: bool = False):
+    """Register a closed-loop scenario under `name`. The generator is
+    called as `fn(reqs, seed)` — `reqs` is the total request budget across
+    cores, `seed` an already-derived deterministic int — and must return a
+    `workload.Workload`."""
+    def deco(obj):
+        if not override and name in _CLOSED_SCENARIOS:
+            raise ValueError(
+                f"closed scenario {name!r} is already registered; pass "
+                f"override=True to replace it")
+        _CLOSED_SCENARIOS[name] = obj
+        return obj
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def list_closed_scenarios() -> list[str]:
+    return sorted(_CLOSED_SCENARIOS)
+
+
+def make_closed_workload(name: str, reqs: int = 800, seed: int = 0
+                         ) -> Workload:
+    """Resolve the named closed scenario to its `Workload` (the exact spec
+    `make_closed_demand` quantizes — pass it to `DramSim` for the same
+    demand stream). Deterministic per (name, seed), like `make_trace`."""
+    try:
+        fn = _CLOSED_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown closed scenario {name!r}; registered: "
+            f"{', '.join(sorted(_CLOSED_SCENARIOS))}") from None
+    h = hashlib.sha256(f"closed:{name}:{seed}".encode()).digest()
+    return fn(reqs, int.from_bytes(h[:4], "little"))
+
+
+def make_closed_demand(name: str, n_banks: int = 8, n_subarrays: int = 8,
+                       reqs: int = 800, seed: int = 0, dt_ns: float = 6.0
+                       ) -> ClosedDemand:
+    """Generate + tick-quantize the named closed scenario's demand."""
+    wl = make_closed_workload(name, reqs, seed)
+    streams = quantize_streams(wl.generate(n_banks, n_subarrays), dt_ns)
+    return ClosedDemand(
+        name=name, workload=wl,
+        is_write=np.stack([s["is_write"] for s in streams]),
+        bank=np.stack([s["bank"] for s in streams]),
+        row=np.stack([s["row"] for s in streams]),
+        sub=np.stack([s["subarray"] for s in streams]),
+        think=np.stack([s["think"] for s in streams]),
+        n_banks=n_banks, n_subarrays=n_subarrays, dt_ns=dt_ns).validate()
+
+
+def _closed_preset(preset: str, n_cores: int):
+    def gen(reqs: int, seed: int) -> Workload:
+        return make_workload(preset, n_cores=n_cores,
+                             reqs_per_core=max(1, reqs // n_cores),
+                             seed=seed)
+    gen.__name__ = f"closed_{preset}"
+    return gen
+
+
+#: Closed-loop variants of the workload library, riding on the
+#: `make_workload` presets `DramSim` has always consumed. Spanning the
+#: MLP axis matters here: refresh hurts most when cores stall on every
+#: miss (closed_low_mlp) and least when deep MLP hides it
+#: (closed_streaming) — the paper's Figure 1/3 sensitivity.
+register_closed_scenario("closed_mixed", _closed_preset("mixed", 4))
+register_closed_scenario("closed_read_heavy", _closed_preset("read_heavy", 4))
+register_closed_scenario("closed_write_heavy",
+                         _closed_preset("write_heavy", 4))
+register_closed_scenario("closed_low_mlp", _closed_preset("low_mlp", 4))
+register_closed_scenario("closed_streaming", _closed_preset("streaming", 4))

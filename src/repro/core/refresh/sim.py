@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Union
+from typing import Optional, Union
 
 import numpy as np
 
@@ -382,6 +382,269 @@ class DramSim:
             self.finish[c] = t
 
     # ------------------------------------------------------------------ run
+    def run_ticks(self, dt_ns: float = 6.0,
+                  horizon: Optional[int] = None) -> SimResult:
+        """Closed-loop run on the sweep engine's integer tick contract.
+
+        The event-heap `run()` above is the float timing-fidelity mode;
+        this method instead drives the SAME workload streams and the SAME
+        registered policy through the integer tick contract the sweep
+        engine's closed-loop mode implements (see
+        `repro.core.sweep.engine`'s module docstring) — making `DramSim`
+        the differential-conformance target for every fast backend:
+        `tests/test_conformance.py` asserts the batched/jax/pallas grids
+        are **bit-identical** to looping this method per cell.
+
+        Deliberately an independent implementation: per-request Python
+        tuples, per-bank lists, and the shared `MaintenanceLedger`
+        (`repro.core.policy.ledger`) for the due/issued accounting the
+        stacked backends carry as `[G, B]` arrays. The known, named
+        divergences from `run()` (per-bank FIFO order, symmetric
+        turnaround, tick quantization, no separate bus serialization
+        point) are asserted as divergences in the conformance tests, not
+        papered over.
+        """
+        from repro.core.policy.ledger import MaintenanceLedger
+        from repro.core.refresh.workload import quantize_streams
+        from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT,
+                                              W_OCC, W_WRITE)
+        from repro.core.sweep.engine import MAX_LAT_TICKS, _p99_ticks
+
+        pol = resolve_policy(self._policy_spec)
+        T = self.T
+        B, S = T.n_banks, T.n_subarrays
+
+        def tkq(ns: float) -> int:        # same quantization as TickTiming
+            return max(1, int(ns / dt_ns + 0.5))
+
+        REFI = tkq(T.tREFI)
+        REFI_PB = max(1, REFI // B)
+        RFC_PB, RFC_AB = tkq(T.tRFC_pb), tkq(T.tRFC_ab)
+        HIT, MISS = tkq(T.row_hit), tkq(T.row_miss)
+        WR, TURN = tkq(T.tWR), tkq(T.tWTR)
+        SARP_PEN = tkq(T.sarp_penalty)
+        budget = T.refresh_budget
+
+        streams = quantize_streams(self.streams, dt_ns)
+        C, mlp = len(streams), self.wl.mlp
+        n_req = [len(s["is_write"]) for s in streams]
+        CAP, HI, LO = self.wbuf_cap, self.wbuf_hi, self.wbuf_lo
+
+        led = MaintenanceLedger(B, interval=float(REFI), budget=budget,
+                                stagger=False)
+        led.phase = [float(b * REFI_PB) for b in range(B)]
+
+        if horizon is None:
+            think_span = max((int(s["think"].sum()) for s in streams),
+                             default=0)
+            horizon = (think_span + 4 * sum(n_req)
+                       * (MISS + WR + TURN + 2) + 8 * RFC_AB + 64)
+        horizon = min(horizon, 1 << 28)
+
+        q: list[list[tuple]] = [[] for _ in range(B)]
+        next_idx = [0] * C
+        next_issue = [0] * C
+        out_reads = [0] * C
+        remaining = list(n_req)
+        finish = [0 if remaining[c] == 0 else -1 for c in range(C)]
+        n_finished = sum(1 for c in range(C) if remaining[c] == 0)
+        comp: list[tuple[int, int]] = []
+
+        bank_free = [0] * B
+        ref_until = [0] * B
+        ref_sub = [-1] * B
+        open_row = [-1] * B
+        open_sub = [-1] * B
+        ctr = [0] * B
+        wpend = 0
+        drain = False
+        last_op = False
+        ab_pending = 0
+        rank_drain = False
+        maxlag = 0
+
+        reads = writes = hits = misses = refpb = refab = 0
+        lat_sum = 0
+        hist = np.zeros(MAX_LAT_TICKS + 1, np.int32)
+        last_done = 0
+
+        def start_pb(b: int, t: int):
+            nonlocal refpb, maxlag
+            ref_until[b] = max(t, bank_free[b]) + RFC_PB
+            ns_ = ctr[b] % S
+            if pol.sarp:
+                ref_sub[b] = ns_
+                if open_sub[b] == ns_:
+                    open_row[b] = -1
+            else:
+                ref_sub[b] = -1
+                open_row[b] = -1
+            ctr[b] += 1
+            refpb += 1
+            maxlag = max(maxlag, abs(led.lag(b, float(t))))
+
+        def start_ab(t: int):
+            nonlocal ab_pending, rank_drain, refab
+            end = t + RFC_AB
+            for b in range(B):
+                ref_until[b] = end
+                if pol.sarp:
+                    ref_sub[b] = ctr[b] % S
+                    if open_sub[b] == ref_sub[b]:
+                        open_row[b] = -1
+                    ctr[b] += 1
+                else:
+                    ref_sub[b] = -1
+                    open_row[b] = -1
+            ab_pending -= 1
+            rank_drain = ab_pending > 0
+            refab += 1
+
+        t = 0
+        while n_finished < C and t < horizon:
+            # 0: outstanding-read completions
+            if comp:
+                rest = []
+                for done, c in comp:
+                    if done <= t:
+                        out_reads[c] -= 1
+                        remaining[c] -= 1
+                        if remaining[c] == 0:
+                            finish[c] = t
+                            n_finished += 1
+                    else:
+                        rest.append((done, c))
+                comp = rest
+            # 1: core issue (one per core per tick, core order)
+            for c in range(C):
+                i = next_idx[c]
+                if i >= n_req[c] or t < next_issue[c]:
+                    continue
+                s = streams[c]
+                if s["is_write"][i]:
+                    if wpend >= CAP:
+                        continue
+                    q[s["bank"][i]].append(
+                        (t, int(s["row"][i]), int(s["subarray"][i]),
+                         True, c))
+                    wpend += 1
+                    remaining[c] -= 1
+                    if remaining[c] == 0:
+                        finish[c] = t
+                        n_finished += 1
+                else:
+                    if out_reads[c] >= mlp:
+                        continue
+                    q[s["bank"][i]].append(
+                        (t, int(s["row"][i]), int(s["subarray"][i]),
+                         False, c))
+                    out_reads[c] += 1
+                next_idx[c] = i + 1
+                next_issue[c] = t + int(s["think"][i])
+            if n_finished >= C:
+                break
+            # 2: write-drain watermark
+            if wpend >= HI:
+                drain = True
+            # 3: rank refresh debt
+            if (not pol.ideal and pol.level == "ab" and t > 0
+                    and t % REFI == 0):
+                ab_pending += 1
+                rank_drain = True
+            # 4: policy decision (pb lag accounting via the shared ledger)
+            if not pol.ideal:
+                if pol.level == "ab":
+                    if ab_pending > 0:
+                        quiet = (all(f <= t for f in bank_free)
+                                 and all(r <= t for r in ref_until))
+                        view = MaintenanceView(
+                            now=float(t), n_banks=B, budget=budget,
+                            lag=[0] * B, demand=[0] * B, ready=[True] * B,
+                            idle=[True] * B, write_window=drain,
+                            max_issues=1, rank_due=ab_pending,
+                            rank_quiet=quiet)
+                        for dec in pol.select(view):
+                            if dec.bank == ALL_BANKS:
+                                start_ab(t)
+                else:
+                    view = led.view(
+                        float(t),
+                        demand=[len(q[b]) for b in range(B)],
+                        write_window=drain,
+                        ready=[ref_until[b] <= t for b in range(B)],
+                        idle=[bank_free[b] <= t for b in range(B)])
+                    decs = pol.select(view)
+                    for dec in decs:
+                        if dec.bank == ALL_BANKS:
+                            raise ValueError(
+                                f"policy {pol.name!r} returned ALL_BANKS "
+                                "from a per-bank (level='pb') decision "
+                                "point")
+                    for b in led.apply(decs, float(t)):
+                        start_pb(b, t)
+            # 5: occupancy-aware arbitration (one start per tick)
+            if not rank_drain:
+                best, best_score = -1, -1
+                for b in range(B):
+                    if not q[b]:
+                        continue
+                    arr, row, sub, isw, core = q[b][0]
+                    if bank_free[b] > t:
+                        continue
+                    if ref_until[b] > t and not (pol.sarp
+                                                 and ref_sub[b] != sub):
+                        continue
+                    sc = (W_WRITE if (drain and isw) else 0) \
+                        + W_OCC * min(len(q[b]), OCC_CAP) \
+                        + (W_HIT if row == open_row[b] else 0) \
+                        + min(t - arr, AGE_CAP)
+                    if sc > best_score:
+                        best, best_score = b, sc
+                if best >= 0:
+                    b = best
+                    arr, row, sub, isw, core = q[b].pop(0)
+                    hit = row == open_row[b]
+                    lat = HIT if hit else MISS
+                    if pol.sarp and ref_until[b] > t:
+                        lat += SARP_PEN
+                    if isw != last_op:
+                        lat += TURN
+                    done = t + lat
+                    bank_free[b] = done + (WR if isw else 0)
+                    last_op = isw
+                    open_row[b] = row
+                    open_sub[b] = sub
+                    if hit:
+                        hits += 1
+                    else:
+                        misses += 1
+                    if isw:
+                        writes += 1
+                        wpend -= 1
+                        if drain and wpend <= LO:
+                            drain = False
+                    else:
+                        reads += 1
+                        lat_sum += min(done - arr, MAX_LAT_TICKS)
+                        hist[min(done - arr, MAX_LAT_TICKS)] += 1
+                        comp.append((done, core))
+                    last_done = max(last_done, done)
+            t += 1
+
+        fin = [f if f >= 0 else t for f in finish]
+        makespan = float(max(fin, default=0)) * dt_ns
+        e = energy_proxy(T, makespan, reads, writes, misses, refpb, refab)
+        return SimResult(
+            policy=pol.name, density_gb=T.density_gb, makespan=makespan,
+            core_finish=[float(int(f)) * dt_ns for f in fin],
+            reads_done=reads, writes_done=writes,
+            avg_read_latency=(dt_ns * lat_sum / reads) if reads else 0.0,
+            p99_read_latency=dt_ns * _p99_ticks(hist, reads),
+            refreshes_pb=refpb, refreshes_ab=refab,
+            row_hits=hits, row_misses=misses, energy=e,
+            max_abs_lag=maxlag,
+        )
+
     def run(self) -> SimResult:
         self.policy = resolve_policy(self._policy_spec)
         T, pol = self.T, self.policy

@@ -47,6 +47,26 @@ class Workload:
         return streams
 
 
+def quantize_streams(streams, dt_ns: float = 6.0):
+    """Quantize `Workload.generate` streams to the sweep engine's integer
+    tick quantum: think gaps become ``int(think / dt_ns + 0.5)`` ticks
+    (>= 0). This is THE shared quantization — `DramSim.run_ticks` and the
+    sweep engine's closed-loop mode both consume it, so a (workload, seed)
+    pair yields bit-identical demand on either path.
+    """
+    out = []
+    for s in streams:
+        think = np.maximum(
+            0, np.floor(np.asarray(s["think"]) / dt_ns + 0.5)
+        ).astype(np.int32)
+        out.append(dict(is_write=np.asarray(s["is_write"], bool),
+                        bank=np.asarray(s["bank"], np.int32),
+                        row=np.asarray(s["row"], np.int32),
+                        subarray=np.asarray(s["subarray"], np.int32),
+                        think=think))
+    return out
+
+
 def make_workload(name: str = "mixed", n_cores: int = 8, reqs_per_core: int = 3000,
                   seed: int = 0) -> Workload:
     presets = {

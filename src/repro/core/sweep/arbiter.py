@@ -11,8 +11,15 @@ so every backend is bit-identical.
 Priority of an eligible head request (descending):
   1. drain-mode writes (the write window empties the buffer first,
      mirroring `DramSim`'s drain serving writes only),
-  2. row-buffer hits (FR-FCFS),
-  3. age (oldest arrival first; capped so the packed score fits in int32).
+  2. demand-side occupancy (closed-loop mode only: deeper per-bank queues
+     first — serving the most-backed-up bank unblocks the most MLP-limited
+     cores; open-loop runs pass `occ=None` and the field stays zero),
+  3. row-buffer hits (FR-FCFS),
+  4. age (oldest arrival first; capped so the packed score fits in int32).
+
+The packed int32 score keeps the fields disjoint: age in bits 0..19, hit
+at bit 21, occupancy (clamped to OCC_CAP) in bits 22..24, drain-write at
+bit 25 — max score < 2**26.
 
 Eligibility mirrors `DramSim._bank_available`: the bank is not busy with a
 demand access, not mid-refresh (unless the policy has the SARP trait and
@@ -23,19 +30,21 @@ from __future__ import annotations
 
 import numpy as np
 
-#: age saturates here so score = W_WRITE + W_HIT + age stays within int32
+#: age saturates here so the packed score stays within int32
 AGE_CAP = (1 << 20) - 1
 W_HIT = 1 << 21
-W_WRITE = 1 << 22
+W_OCC = 1 << 22              # occupancy field (closed-loop demand depth)
+OCC_CAP = 7                  # occupancy clamps to 3 bits
+W_WRITE = 1 << 25
 
 
 def arbiter_scores(xp, t, *, has_req, head_row, head_sub, head_arrive,
                    head_is_write, bank_free, ref_until, ref_sub, open_row,
-                   drain, sarp, rank_drain):
+                   drain, sarp, rank_drain, occ=None):
     """Score every (cell, bank); ineligible slots get -1.
 
     [G, B] int32: head_row, head_sub, head_arrive, bank_free, ref_until,
-                  ref_sub, open_row
+                  ref_sub, open_row (+ occ when given: queue depth)
     [G, B] bool : has_req, head_is_write
     [G] bool    : drain, sarp, rank_drain
     t           : scalar tick
@@ -47,12 +56,15 @@ def arbiter_scores(xp, t, *, has_req, head_row, head_sub, head_arrive,
     age = xp.minimum(t - head_arrive, AGE_CAP)
     score = (xp.where(drain[:, None] & head_is_write, W_WRITE, 0)
              + xp.where(head_row == open_row, W_HIT, 0) + age)
+    if occ is not None:
+        score = score + W_OCC * xp.minimum(occ, OCC_CAP)
     return xp.where(elig, score, -1).astype(xp.int32)
 
 
 def arbiter_scores_masked(t, *, has_req, idle, ready, head_row, head_sub,
                           head_arrive, head_is_write, ref_sub, open_row,
-                          drain, sarp_col, rank_drain, rank_can_drain):
+                          drain, sarp_col, rank_drain, rank_can_drain,
+                          occ=None):
     """`arbiter_scores`, restated over precomputed availability masks —
     the batched numpy backend's per-tick fast path (``idle`` must equal
     ``bank_free <= t`` and ``ready`` must equal ``ref_until <= t`` at the
@@ -67,6 +79,8 @@ def arbiter_scores_masked(t, *, has_req, idle, ready, head_row, head_sub,
         elig &= ~rank_drain[:, None]
     base = np.minimum(t - head_arrive, AGE_CAP) \
         + np.where(head_row == open_row, W_HIT, 0)
+    if occ is not None:
+        base += W_OCC * np.minimum(occ, OCC_CAP)
     if drain.any():
         base += np.where(drain[:, None] & head_is_write, W_WRITE, 0)
     return np.where(elig, base, -1)

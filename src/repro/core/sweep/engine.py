@@ -34,13 +34,42 @@ Tick semantics (the contract every backend implements identically):
          (drain-writes > row hits > oldest; see `sweep.arbiter`),
       E. a cell deactivates once every request has been issued; its
          makespan is the completion tick of the last data burst.
-  * Differences vs `DramSim`, accepted for vectorizability and kept
-    identical across backends: per-bank FIFO order (no FR-FCFS
-    *reordering* within a bank — row-hit preference applies across
-    banks), open-loop arrival traces instead of closed-loop MLP-limited
-    cores, a symmetric read/write turnaround penalty folded into request
-    latency, and read latencies clipped to `MAX_LAT_TICKS` in the p99
-    histogram.
+  * Differences vs `DramSim`'s event-driven float mode, accepted for
+    vectorizability and kept identical across backends: per-bank FIFO
+    order (no FR-FCFS *reordering* within a bank — row-hit preference
+    applies across banks), a symmetric read/write turnaround penalty
+    folded into request latency, and read latencies clipped to
+    `MAX_LAT_TICKS` in the p99 histogram.
+
+Closed-loop mode (``SweepSpec(mode="closed")``) replaces the open-loop
+arrival trace with `DramSim`'s MLP-limited multi-core front-end, on the
+same tick contract (every backend, and `DramSim.run_ticks`, implements it
+identically):
+
+  * Demand comes from a `repro.core.refresh.scenarios.ClosedDemand` —
+    per-core request streams from the SAME `workload.Workload` generators
+    `DramSim` consumes, think gaps quantized to ticks
+    (`workload.quantize_streams`).
+  * Each tick, per active cell, BEFORE the open-loop phases A-E:
+      0. outstanding-read completions whose service finished at or before
+         `t` retire: the issuing core's outstanding-window slot frees and
+         its instruction-progress counter decrements,
+      1. cores issue in core-index order, at most ONE request per core per
+         tick: a core issues iff its think gap elapsed and (read: fewer
+         than `mlp` reads outstanding | write: the shared write buffer is
+         below `wbuf_cap`, first-come in core order). Issued requests
+         append to the target bank's FIFO stamped with the issue tick;
+         writes complete architecturally at issue (instruction progress),
+         reads at data return.
+  * A core finishes when its instruction count hits zero; the cell
+    deactivates the tick its LAST core finishes (buffered writes may
+    remain unserved, exactly like `DramSim.run` ending on core finish).
+    `CellResult.core_finish` records per-core finish times, making
+    `weighted_speedup_vs` — the paper's actual metric — well-defined.
+  * Arbitration scoring additionally sees demand-side occupancy (per-bank
+    queue depth, `W_OCC` field in `sweep.arbiter`): the most-backed-up
+    eligible bank unblocks the most stalled cores. Open-loop runs keep the
+    field at zero.
 
 Backends:
 
@@ -69,10 +98,11 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.core.policy import ALL_BANKS, MaintenanceView, resolve_policy
-from repro.core.refresh.scenarios import Trace, make_trace
+from repro.core.refresh.scenarios import (ClosedDemand, Trace,
+                                          make_closed_demand, make_trace)
 from repro.core.refresh.timing import timing_for_density
-from repro.core.sweep.arbiter import (AGE_CAP, W_HIT, W_WRITE,
-                                      arbiter_scores,
+from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
+                                      W_WRITE, arbiter_scores,
                                       arbiter_scores_masked)
 from repro.core.sweep.policies import (KIND_AB, KIND_CUSTOM, KIND_IDEAL,
                                        classify, could_pick, select_batch)
@@ -120,11 +150,16 @@ class TickTiming:
 class SweepSpec:
     """One sweep grid: the cross product policies x scenarios x densities.
 
-    One trace per (scenario, seed) is shared by every policy and density
-    in the grid, so cells differ only in the axis under study.
+    One demand stream per (scenario, seed) is shared by every policy and
+    density in the grid, so cells differ only in the axis under study.
+
+    `mode="open"` consumes open-loop `Trace` scenarios; `mode="closed"`
+    consumes closed-loop scenarios (`ClosedDemand` / names registered via
+    `register_closed_scenario`) and runs the MLP-limited front-end — the
+    configuration whose `weighted_speedup` matches the paper's metric.
     """
     policies: Sequence[str]
-    scenarios: Sequence[Union[str, Trace]]
+    scenarios: Sequence[Union[str, Trace, ClosedDemand]]
     densities: Sequence[int] = (8, 16, 32)
     reqs: int = 800
     seed: int = 0
@@ -133,12 +168,17 @@ class SweepSpec:
     n_subarrays: int = 8
     wbuf_hi: int = 48            # pending-write drain high watermark
     wbuf_lo: int = 16            # drain low watermark
+    wbuf_cap: int = 64           # write-buffer capacity (closed-loop issue
+    #                              backpressure; open-loop traces ignore it)
+    mode: str = "open"           # 'open' | 'closed'
     horizon: Optional[int] = None   # tick cap; None = auto
 
     def __post_init__(self):
         object.__setattr__(self, "policies", tuple(self.policies))
         object.__setattr__(self, "scenarios", tuple(self.scenarios))
         object.__setattr__(self, "densities", tuple(self.densities))
+        if self.mode not in ("open", "closed"):
+            raise ValueError(f"unknown sweep mode {self.mode!r}")
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -152,7 +192,14 @@ class SweepSpec:
 
 @dataclass(frozen=True)
 class CellResult:
-    """Per-cell stats, field-compatible with the figure pipelines."""
+    """Per-cell stats, field-compatible with the figure pipelines.
+
+    `mode` records how the cell was produced: "open" (arrival trace) or
+    "closed" (MLP-limited cores). `core_finish` (ns per core) and the
+    weighted-speedup metrics exist only for closed cells — asking an
+    open-loop cell for `weighted_speedup_vs` raises, because under
+    open-loop arrivals the metric is meaningless (see docs/figures.md).
+    """
     policy: str
     scenario: str
     density_gb: int
@@ -168,12 +215,15 @@ class CellResult:
     energy: float
     max_abs_lag: int
     finished: bool
+    mode: str = "open"           # 'open' | 'closed'
+    core_finish: tuple = ()      # per-core finish times (ns; closed only)
 
     def speedup_vs(self, ideal: "CellResult") -> float:
         """Makespan ratio. NOTE: under open-loop arrivals the makespan of
         an under-utilized cell converges to the arrival span for every
         policy — use `latency_speedup_vs` for refresh-degradation
-        comparisons (the figure pipelines do)."""
+        comparisons (the open-loop figure pipelines did, before the
+        closed-loop mode landed `weighted_speedup_vs`)."""
         return ideal.makespan / self.makespan
 
     def latency_speedup_vs(self, ideal: "CellResult") -> float:
@@ -183,6 +233,33 @@ class CellResult:
         if self.avg_read_latency == 0.0:
             return 1.0
         return ideal.avg_read_latency / self.avg_read_latency
+
+    def _require_closed(self, ideal: "CellResult", metric: str) -> None:
+        for cell in (self, ideal):
+            if cell.mode != "closed" or not cell.core_finish:
+                raise ValueError(
+                    f"{metric} is a closed-loop metric but the "
+                    f"({cell.policy}, {cell.scenario}, {cell.density_gb}) "
+                    f"cell was run mode={cell.mode!r}: open-loop arrivals "
+                    "fix the demand timeline, so per-core progress ratios "
+                    "are meaningless — rerun with SweepSpec(mode='closed') "
+                    "or use latency_speedup_vs (docs/figures.md)")
+
+    def per_core_slowdown_vs(self, ideal: "CellResult") -> tuple:
+        """Per-core slowdown vs the no-refresh ideal (>= 1.0 means this
+        policy finished that core later). Closed-loop cells only."""
+        self._require_closed(ideal, "per_core_slowdown")
+        return tuple(s / i if i > 0 else 1.0
+                     for s, i in zip(self.core_finish, ideal.core_finish))
+
+    def weighted_speedup_vs(self, ideal: "CellResult") -> float:
+        """The paper's metric: mean over cores of
+        finish_time(ideal) / finish_time(self). Closed-loop cells only
+        (open-loop cells raise — see `_require_closed`)."""
+        self._require_closed(ideal, "weighted_speedup")
+        ratios = [i / s for i, s in zip(ideal.core_finish, self.core_finish)
+                  if s > 0]
+        return float(np.mean(ratios)) if ratios else 1.0
 
 
 class SweepResult:
@@ -210,7 +287,7 @@ class SweepResult:
 
 
 def _scenario_name(s) -> str:
-    return s.name if isinstance(s, Trace) else s
+    return s.name if isinstance(s, (Trace, ClosedDemand)) else s
 
 
 # ------------------------------------------------------------------ grid
@@ -229,31 +306,52 @@ class _Grid:
         self.cells = spec.cells()
         G, B = len(self.cells), spec.n_banks
         self.G, self.B, self.S = G, B, spec.n_subarrays
+        self.closed = spec.mode == "closed"
 
-        traces = {}
-        for s in spec.scenarios:
-            tr = s if isinstance(s, Trace) else make_trace(
-                s, spec.n_banks, spec.n_subarrays, spec.reqs, spec.seed)
-            traces[_scenario_name(s)] = tr
-        self.traces = traces
+        split = None
+        if self.closed:
+            demands = {}
+            for s in spec.scenarios:
+                if isinstance(s, Trace):
+                    raise ValueError(
+                        f"scenario {s.name!r} is an open-loop Trace but the "
+                        "spec has mode='closed'; pass a closed scenario "
+                        "name or a ClosedDemand")
+                dem = s if isinstance(s, ClosedDemand) else \
+                    make_closed_demand(s, spec.n_banks, spec.n_subarrays,
+                                       spec.reqs, spec.seed, spec.dt_ns)
+                demands[_scenario_name(s)] = dem
+            self.demands = demands
+        else:
+            traces = {}
+            for s in spec.scenarios:
+                if isinstance(s, ClosedDemand):
+                    raise ValueError(
+                        f"scenario {s.name!r} is a closed-loop ClosedDemand "
+                        "but the spec has mode='open'; pass "
+                        "SweepSpec(mode='closed')")
+                tr = s if isinstance(s, Trace) else make_trace(
+                    s, spec.n_banks, spec.n_subarrays, spec.reqs, spec.seed)
+                traces[_scenario_name(s)] = tr
+            self.traces = traces
 
-        # per-(scenario, bank) FIFO split, padded to the global max length
-        split = {}
-        L = 1
-        for name, tr in traces.items():
-            per_bank = []
-            for b in range(B):
-                m = tr.bank == b
-                per_bank.append((tr.arrive[m], tr.row[m], tr.sub[m],
-                                 tr.is_write[m]))
-                L = max(L, int(m.sum()))
-            split[name] = per_bank
-        self.L = L
-        self.q_arrive = np.full((G, B, L), _PAD_ARRIVE, np.int32)
-        self.q_row = np.zeros((G, B, L), np.int32)
-        self.q_sub = np.zeros((G, B, L), np.int32)
-        self.q_write = np.zeros((G, B, L), bool)
-        self.n_per_bank = np.zeros((G, B), np.int32)
+            # per-(scenario, bank) FIFO split, padded to the global max len
+            split = {}
+            L = 1
+            for name, tr in traces.items():
+                per_bank = []
+                for b in range(B):
+                    m = tr.bank == b
+                    per_bank.append((tr.arrive[m], tr.row[m], tr.sub[m],
+                                     tr.is_write[m]))
+                    L = max(L, int(m.sum()))
+                split[name] = per_bank
+            self.L = L
+            self.q_arrive = np.full((G, B, L), _PAD_ARRIVE, np.int32)
+            self.q_row = np.zeros((G, B, L), np.int32)
+            self.q_sub = np.zeros((G, B, L), np.int32)
+            self.q_write = np.zeros((G, B, L), bool)
+            self.n_per_bank = np.zeros((G, B), np.int32)
 
         self.timing = {d: TickTiming.from_density(
             d, spec.dt_ns, spec.n_banks, spec.n_subarrays)
@@ -273,6 +371,21 @@ class _Grid:
         self.phase = np.zeros((G, B), np.int32)
         self.customs: list[tuple[int, object]] = []
 
+        if self.closed:
+            # stacked per-core streams, padded to the global (C, N) max
+            C = max(dem.n_cores for dem in self.demands.values())
+            N = max(int(dem.is_write.shape[1])
+                    for dem in self.demands.values())
+            self.C, self.N = C, N
+            self.K = max(dem.mlp for dem in self.demands.values())
+            self.s_write = np.zeros((G, C, N), bool)
+            self.s_bank = np.zeros((G, C, N), np.int32)
+            self.s_row = np.zeros((G, C, N), np.int32)
+            self.s_sub = np.zeros((G, C, N), np.int32)
+            self.s_think = np.zeros((G, C, N), np.int32)
+            self.n_req_c = np.zeros((G, C), np.int32)
+            self.mlp_g = np.zeros(G, np.int32)
+
         for g, (p, s, d) in enumerate(self.cells):
             tk = self.timing[d]
             pol = resolve_policy(p)
@@ -289,21 +402,41 @@ class _Grid:
             self.phase[g] = np.arange(B) * tk.REFI_PB
             if kind == KIND_CUSTOM:
                 self.customs.append((g, pol))
-            for b, (arr, row, sub, isw) in enumerate(
-                    split[_scenario_name(s)]):
-                n = len(arr)
-                self.n_per_bank[g, b] = n
-                self.q_arrive[g, b, :n] = arr
-                self.q_row[g, b, :n] = row
-                self.q_sub[g, b, :n] = sub
-                self.q_write[g, b, :n] = isw
+            if self.closed:
+                dem = self.demands[_scenario_name(s)]
+                c, n = dem.is_write.shape
+                self.s_write[g, :c, :n] = dem.is_write
+                self.s_bank[g, :c, :n] = dem.bank
+                self.s_row[g, :c, :n] = dem.row
+                self.s_sub[g, :c, :n] = dem.sub
+                self.s_think[g, :c, :n] = dem.think
+                self.n_req_c[g, :c] = n
+                self.mlp_g[g] = dem.mlp
+            else:
+                for b, (arr, row, sub, isw) in enumerate(
+                        split[_scenario_name(s)]):
+                    n = len(arr)
+                    self.n_per_bank[g, b] = n
+                    self.q_arrive[g, b, :n] = arr
+                    self.q_row[g, b, :n] = row
+                    self.q_sub[g, b, :n] = sub
+                    self.q_write[g, b, :n] = isw
 
-        self.n_tot = self.n_per_bank.sum(axis=1)
-        max_arrive = max(int(tr.arrive[-1]) for tr in traces.values())
-        auto = (max_arrive
-                + 4 * int(self.n_tot.max())
-                * int(self.MISS.max() + self.WR.max() + 2)
-                + 8 * int(self.RFC_AB.max()) + 64)
+        svc = int(self.MISS.max() + self.WR.max() + self.TURN.max() + 2)
+        if self.closed:
+            self.n_tot = self.n_req_c.sum(axis=1)
+            # ring queues: occupancy is bounded by outstanding reads
+            # (C * mlp) + buffered writes (wbuf_cap)
+            need = self.C * int(self.K) + spec.wbuf_cap + 1
+            self.LQ = 1 << max(1, (need - 1).bit_length())
+            think_span = int(self.s_think.sum(axis=2).max())
+            auto = (think_span + 4 * int(self.n_tot.max()) * svc
+                    + 8 * int(self.RFC_AB.max()) + 64)
+        else:
+            self.n_tot = self.n_per_bank.sum(axis=1)
+            max_arrive = max(int(tr.arrive[-1]) for tr in traces.values())
+            auto = (max_arrive + 4 * int(self.n_tot.max()) * svc
+                    + 8 * int(self.RFC_AB.max()) + 64)
         self.horizon = spec.horizon if spec.horizon else min(auto, 1 << 28)
 
 
@@ -316,17 +449,29 @@ def _p99_ticks(hist_row: np.ndarray, n_reads: int) -> int:
 
 
 def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
-              refab, lat_sum, hist, maxlag, last_done, finished
-              ) -> CellResult:
-    """Integer machine stats -> CellResult. Shared by every backend so the
-    derived floats are bit-identical whenever the integers are."""
+              refab, lat_sum, hist, maxlag, last_done, finished,
+              core_finish=None) -> CellResult:
+    """Integer machine stats -> CellResult. Shared by every backend (and
+    mirrored by `DramSim.run_ticks`) so the derived floats are
+    bit-identical whenever the integers are. `core_finish` (per-core
+    finish ticks) switches the cell to closed-loop accounting: makespan
+    becomes the last core's finish instead of the last data burst."""
     from repro.core.refresh.sim import energy_proxy
     p, s, d = grid.cells[g]
     spec = grid.spec
     T = timing_for_density(d, n_banks=spec.n_banks,
                            n_subarrays=spec.n_subarrays)
     dt = spec.dt_ns
-    makespan = float(last_done) * dt
+    if core_finish is None:
+        mode, cf = "open", ()
+        makespan = float(last_done) * dt
+    else:
+        mode = "closed"
+        # backends pass [grid.C] rows; keep the scenario's real cores only
+        nc = grid.demands[_scenario_name(s)].n_cores
+        cf = tuple(float(int(f)) * dt for f in list(core_finish)[:nc])
+        makespan = float(max((int(f) for f in list(core_finish)[:nc]),
+                             default=0)) * dt
     return CellResult(
         policy=p, scenario=_scenario_name(s), density_gb=d,
         makespan=makespan, reads_done=int(reads), writes_done=int(writes),
@@ -336,7 +481,8 @@ def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
         row_hits=int(hits), row_misses=int(misses),
         energy=energy_proxy(T, makespan, int(reads), int(writes),
                             int(misses), int(refpb), int(refab)),
-        max_abs_lag=int(maxlag), finished=bool(finished))
+        max_abs_lag=int(maxlag), finished=bool(finished),
+        mode=mode, core_finish=cf)
 
 
 # --------------------------------------------------------- batched backend
@@ -598,6 +744,316 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
             for g in range(grid.G)]
 
 
+# ------------------------------------------------ batched backend (closed)
+def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
+                        ) -> list[CellResult]:
+    """Closed-loop mode over the stacked state: the open-loop machine plus
+    vectorized per-core MLP windows, write-buffer backpressure, and ring
+    bank queues fed by the cores (contract in the module docstring)."""
+    spec = grid.spec
+    G, B, S = grid.G, grid.B, grid.S
+    C, N, K = grid.C, grid.N, grid.K
+    LQ = grid.LQ
+    QM = LQ - 1
+    HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
+
+    score_fn = None
+    if arbiter == "pallas":
+        from repro.kernels.sweep_arbiter import make_arbiter
+        score_fn = make_arbiter(G, B)
+    elif arbiter != "numpy":
+        raise ValueError(f"unknown arbiter {arbiter!r}")
+
+    # flat [G*C, N] stream views for single-op gathers
+    sw = grid.s_write.reshape(G * C, N)
+    sb = grid.s_bank.reshape(G * C, N)
+    sr = grid.s_row.reshape(G * C, N)
+    ssub = grid.s_sub.reshape(G * C, N)
+    sth = grid.s_think.reshape(G * C, N)
+    n_req = grid.n_req_c
+    mlp_col = grid.mlp_g[:, None]
+
+    # ring bank queues, flat [G*B, LQ]
+    qa = np.zeros((G * B, LQ), np.int32)
+    qr = np.zeros((G * B, LQ), np.int32)
+    qs = np.zeros((G * B, LQ), np.int32)
+    qw = np.zeros((G * B, LQ), bool)
+    qc = np.zeros((G * B, LQ), np.int32)
+    q_head = np.zeros((G, B), np.int32)
+    q_tail = np.zeros((G, B), np.int32)
+
+    # core state
+    next_idx = np.zeros((G, C), np.int32)
+    next_issue = np.zeros((G, C), np.int32)
+    out_reads = np.zeros((G, C), np.int32)
+    remaining = n_req.astype(np.int32).copy()
+    finish = np.where(remaining == 0, 0, -1).astype(np.int32)
+    comp_t = np.full((G, C, K), _PAD_ARRIVE, np.int32)
+
+    # machine state, stacked [G, B]
+    bank_free = np.zeros((G, B), np.int32)
+    ref_until = np.zeros((G, B), np.int32)
+    ref_sub = np.full((G, B), -1, np.int32)
+    open_row = np.full((G, B), -1, np.int32)
+    open_sub = np.full((G, B), -1, np.int32)
+    ctr = np.zeros((G, B), np.int32)
+    issued = np.zeros((G, B), np.int32)
+    rr = np.zeros(G, np.int32)
+    wpend = np.zeros(G, np.int32)
+    drain = np.zeros(G, bool)
+    last_op = np.zeros(G, bool)
+    ab_pending = np.zeros(G, np.int32)
+    rank_drain = np.zeros(G, bool)
+    active = (remaining > 0).any(axis=1)
+    kind_active = np.where(active, grid.kind, KIND_IDEAL)
+    has_ab = bool(grid.level_ab.any())
+
+    # stats
+    reads = np.zeros(G, np.int64)
+    writes = np.zeros(G, np.int64)
+    hits = np.zeros(G, np.int64)
+    misses = np.zeros(G, np.int64)
+    refpb = np.zeros(G, np.int64)
+    refab = np.zeros(G, np.int64)
+    lat_sum = np.zeros(G, np.int64)
+    hist = np.zeros((G, MAX_LAT_TICKS + 1), np.int32)
+    maxlag = np.zeros(G, np.int32)
+    last_done = np.zeros(G, np.int32)
+
+    phase, REFI_col = grid.phase, grid.REFI[:, None]
+    RFC_PB_col = grid.RFC_PB[:, None]
+    sarp_c = grid.sarp[:, None]
+    sarp_g, kind_g = grid.sarp, grid.kind
+    budget_g, wrp_g, urgent_g = grid.budget, grid.wrp, grid.urgent_at
+    level_ab = grid.level_ab
+    refi_values = sorted({int(v) for v in grid.REFI[level_ab]})
+    has_drain_block = has_ab or bool(grid.customs)
+    arG = np.arange(G)
+    arB = np.arange(B)
+    flat_gc = arG[:, None] * C + np.arange(C)[None, :]
+    flat_gb = arG[:, None] * B + arB[None, :]
+    t = 0
+    alive = int(active.sum())
+    while alive and t < grid.horizon:
+        # ---- 0: outstanding-read completions
+        exp = comp_t <= t
+        if exp.any():
+            n_exp = exp.sum(axis=2).astype(np.int32)
+            out_reads -= n_exp
+            remaining -= n_exp
+            comp_t[exp] = _PAD_ARRIVE
+
+        # ---- 1: core issue (at most one per core per tick, core order)
+        sl = np.minimum(next_idx, N - 1)
+        can = (next_idx < n_req) & (next_issue <= t)
+        if can.any():
+            head_w = sw[flat_gc, sl]
+            want_w = can & head_w
+            want_r = can & ~head_w & (out_reads < mlp_col)
+            # write-buffer backpressure, first-come in core order
+            rank_w = np.cumsum(want_w, axis=1) - want_w
+            ok_w = want_w & (rank_w < (CAP - wpend)[:, None])
+            issue = ok_w | want_r
+            if issue.any():
+                hb = sb[flat_gc, sl]
+                oh = issue[:, :, None] & (hb[:, :, None] == arB[None, None, :])
+                pref = np.cumsum(oh, axis=1) - oh
+                gi, ci = np.nonzero(issue)
+                bk = hb[gi, ci]
+                slot = (q_tail[gi, bk] + pref[gi, ci, bk]) & QM
+                gf = gi * B + bk
+                fgc = gi * C + ci
+                idx2 = sl[gi, ci]
+                qa[gf, slot] = t
+                qr[gf, slot] = sr[fgc, idx2]
+                qs[gf, slot] = ssub[fgc, idx2]
+                qw[gf, slot] = sw[fgc, idx2]
+                qc[gf, slot] = ci
+                q_tail += oh.sum(axis=1).astype(np.int32)
+                wpend += ok_w.sum(axis=1).astype(np.int32)
+                out_reads += want_r
+                remaining -= ok_w                 # writes retire at issue
+                next_issue[issue] = t + sth[fgc, idx2]
+                next_idx[issue] += 1
+
+        newly = (remaining == 0) & (finish < 0)
+        if newly.any():
+            finish[newly] = t
+            done_cells = active & ~(remaining > 0).any(axis=1)
+            if done_cells.any():
+                active &= ~done_cells
+                kind_active[done_cells] = KIND_IDEAL
+                alive = int(active.sum())
+                if not alive:
+                    break
+
+        # ---- 2: write-drain watermark
+        drain |= wpend >= HI
+
+        # ---- 3: rank refresh debt for all-bank policies
+        if has_ab and t > 0 and any(t % R == 0 for R in refi_values):
+            acc = active & level_ab & (t % grid.REFI == 0)
+            ab_pending += acc
+            rank_drain |= acc
+
+        # ---- 4: policy decisions against the stacked view
+        due = np.maximum((t - phase) // REFI_col + 1, 0)
+        lag = due - issued
+        demand = q_tail - q_head
+        ready = ref_until <= t
+        idle = bank_free <= t
+        need = could_pick(kind=kind_active, lag=lag, demand=demand,
+                          write_window=drain, budget=budget_g, wrp=wrp_g)
+        picks = None
+        if need.any():
+            picks, rr = select_batch(
+                np, kind=np.where(need, kind_active, KIND_IDEAL), lag=lag,
+                ready=ready, idle=idle, demand=demand, write_window=drain,
+                budget=budget_g, wrp=wrp_g, urgent_at=urgent_g, rr=rr,
+                gate=True)
+            if not picks.any():
+                picks = None
+
+        start_ab = None
+        if has_ab:
+            pend = active & (kind_g == KIND_AB) & (ab_pending > 0)
+            if pend.any():
+                start_ab = pend & idle.all(axis=1) & ready.all(axis=1)
+
+        for g, pol in grid.customs:          # non-vectorizable registrations
+            if not active[g]:
+                continue
+            if pol.level == "ab":
+                if ab_pending[g] <= 0:
+                    continue
+                quiet_g = bool(idle[g].all() and ready[g].all())
+                view = MaintenanceView(
+                    now=float(t), n_banks=B, budget=int(grid.budget[g]),
+                    lag=[0] * B, demand=[0] * B, ready=[True] * B,
+                    idle=[True] * B, write_window=bool(drain[g]),
+                    max_issues=1, rank_due=int(ab_pending[g]),
+                    rank_quiet=quiet_g)
+                for dec in pol.select(view):
+                    if dec.bank == ALL_BANKS:
+                        if start_ab is None:
+                            start_ab = np.zeros(G, bool)
+                        start_ab[g] = True
+            else:
+                view = MaintenanceView(
+                    now=float(t), n_banks=B, budget=int(grid.budget[g]),
+                    lag=lag[g].tolist(), demand=demand[g].tolist(),
+                    ready=ready[g].tolist(), idle=idle[g].tolist(),
+                    write_window=bool(drain[g]), max_issues=1)
+                for dec in pol.select(view):
+                    if dec.bank == ALL_BANKS:
+                        raise ValueError(
+                            f"policy {pol.name!r} returned ALL_BANKS from "
+                            f"a per-bank (level='pb') decision point")
+                    if picks is None:
+                        picks = np.zeros((G, B), bool)
+                    picks[g, dec.bank] = True
+
+        if start_ab is not None and start_ab.any():
+            m = np.broadcast_to(start_ab[:, None], (G, B))
+            new_sub = (ctr % S).astype(np.int32)
+            ref_until = np.where(m, (t + grid.RFC_AB)[:, None], ref_until)
+            ref_sub = np.where(m, np.where(sarp_c, new_sub, -1), ref_sub)
+            close = m & np.where(sarp_c, open_sub == new_sub, True)
+            open_row = np.where(close, -1, open_row)
+            ctr = ctr + (m & sarp_c)
+            ab_pending -= start_ab
+            rank_drain = np.where(start_ab, ab_pending > 0, rank_drain)
+            refab += start_ab
+            ready &= ~m                     # tRFC_ab >= 1: mid-refresh now
+
+        if picks is not None:
+            new_sub = (ctr % S).astype(np.int32)
+            ref_until = np.where(
+                picks, np.maximum(t, bank_free) + RFC_PB_col, ref_until)
+            ref_sub = np.where(picks, np.where(sarp_c, new_sub, -1),
+                               ref_sub)
+            close = picks & np.where(sarp_c, open_sub == new_sub, True)
+            open_row = np.where(close, -1, open_row)
+            ctr = ctr + picks
+            issued = issued + picks
+            refpb += picks.sum(axis=1)
+            lag_after = due - issued
+            maxlag = np.maximum(
+                maxlag, np.where(picks, np.abs(lag_after), 0).max(axis=1))
+            ready &= ~picks                 # tRFC_pb >= 1: mid-refresh now
+
+        # ---- 5: occupancy-aware arbitration — one start per cell
+        has_req = (demand > 0) & active[:, None]
+        if not has_req.any():
+            t += 1
+            continue
+        hslot = q_head & QM
+        h_arr = qa[flat_gb, hslot]
+        h_row = qr[flat_gb, hslot]
+        h_sub = qs[flat_gb, hslot]
+        h_w = qw[flat_gb, hslot]
+        if score_fn is not None:
+            score = np.asarray(score_fn(
+                t, has_req=has_req, head_row=h_row, head_sub=h_sub,
+                head_arrive=h_arr, head_is_write=h_w, bank_free=bank_free,
+                ref_until=ref_until, ref_sub=ref_sub, open_row=open_row,
+                drain=drain, sarp=sarp_g, rank_drain=rank_drain,
+                occ=demand))
+        else:
+            score = arbiter_scores_masked(
+                t, has_req=has_req, idle=idle, ready=ready, head_row=h_row,
+                head_sub=h_sub, head_arrive=h_arr, head_is_write=h_w,
+                ref_sub=ref_sub, open_row=open_row, drain=drain,
+                sarp_col=sarp_c, rank_drain=rank_drain,
+                rank_can_drain=has_drain_block, occ=demand)
+        bs_all = score.argmax(axis=1)
+        ok = score[arG, bs_all] >= 0
+
+        if ok.any():
+            gs = np.nonzero(ok)[0]
+            bs = bs_all[gs]
+            row, sub = h_row[gs, bs], h_sub[gs, bs]
+            arr, isw = h_arr[gs, bs], h_w[gs, bs]
+            core = qc[gs * B + bs, hslot[gs, bs]]
+            hit = row == open_row[gs, bs]
+            lat = np.where(hit, grid.HIT[gs], grid.MISS[gs])
+            lat = lat + np.where(grid.sarp[gs] & (ref_until[gs, bs] > t),
+                                 grid.SARP_PEN[gs], 0)
+            lat = lat + np.where(isw != last_op[gs], grid.TURN[gs], 0)
+            done = t + lat
+            bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
+            last_op[gs] = isw
+            open_row[gs, bs] = row
+            open_sub[gs, bs] = sub
+            q_head[gs, bs] += 1
+            hits[gs] += hit
+            misses[gs] += ~hit
+            writes[gs] += isw
+            reads[gs] += ~isw
+            wpend[gs] -= isw
+            drain[gs] &= ~(isw & (wpend[gs] <= LO))
+            rmask = ~isw
+            lrec = np.minimum(done - arr, MAX_LAT_TICKS)
+            lat_sum[gs] += np.where(rmask, lrec, 0)
+            np.add.at(hist, (gs[rmask], lrec[rmask]), 1)
+            last_done[gs] = np.maximum(last_done[gs], done)
+            # reads: park the data return in the core's MLP window slot
+            if rmask.any():
+                gr, cr = gs[rmask], core[rmask]
+                k = np.argmax(comp_t[gr, cr] == _PAD_ARRIVE, axis=1)
+                comp_t[gr, cr, k] = done[rmask]
+        t += 1
+
+    finished = ~active
+    fin = np.where(finish < 0, t, finish)
+    return [_finalize(grid, g, reads=reads[g], writes=writes[g],
+                      hits=hits[g], misses=misses[g], refpb=refpb[g],
+                      refab=refab[g], lat_sum=lat_sum[g], hist=hist[g],
+                      maxlag=maxlag[g], last_done=last_done[g],
+                      finished=finished[g], core_finish=fin[g])
+            for g in range(grid.G)]
+
+
 # ---------------------------------------------------------- scalar oracle
 def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
     """Plain-Python reference: one cell, real policy object, same tick
@@ -776,6 +1232,223 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                      misses=misses, refpb=refpb, refab=refab,
                      lat_sum=lat_sum, hist=hist, maxlag=maxlag,
                      last_done=last_done, finished=served >= total)
+
+
+# ------------------------------------------------- scalar oracle (closed)
+def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
+    """Plain-Python closed-loop reference: one cell, real policy object,
+    MLP-limited cores on the closed tick contract (module docstring)."""
+    spec = grid.spec
+    p, s, d = grid.cells[g]
+    tk = grid.timing[d]
+    B, S = grid.B, grid.S
+    HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
+    pol = resolve_policy(p)
+    budget = tk.budget
+    dem = grid.demands[_scenario_name(s)]
+    C, mlp = dem.n_cores, dem.mlp
+    sw = grid.s_write[g]
+    sb, sr = grid.s_bank[g], grid.s_row[g]
+    ss, sth = grid.s_sub[g], grid.s_think[g]
+    n_req = grid.n_req_c[g].tolist()
+    phase = [b * tk.REFI_PB for b in range(B)]
+
+    # per-bank FIFO of (issue_tick, row, sub, is_write, core)
+    q: list[list[tuple]] = [[] for _ in range(B)]
+    next_idx = [0] * C
+    next_issue = [0] * C
+    out_reads = [0] * C
+    remaining = list(n_req)
+    finish = [0 if remaining[c] == 0 else -1 for c in range(C)]
+    n_finished = sum(1 for c in range(C) if remaining[c] == 0)
+    comp: list[tuple[int, int]] = []      # (done_tick, core)
+
+    bank_free = [0] * B
+    ref_until = [0] * B
+    ref_sub = [-1] * B
+    open_row = [-1] * B
+    open_sub = [-1] * B
+    ctr = [0] * B
+    issued = [0] * B
+    wpend = 0
+    drain = False
+    last_op = False
+    ab_pending = 0
+    rank_drain = False
+
+    reads = writes = hits = misses = refpb = refab = 0
+    lat_sum = 0
+    hist = np.zeros(MAX_LAT_TICKS + 1, np.int32)
+    maxlag = 0
+    last_done = 0
+
+    def due(b: int, t: int) -> int:
+        return 0 if t < phase[b] else (t - phase[b]) // tk.REFI + 1
+
+    def start_pb(b: int, t: int):
+        nonlocal refpb, maxlag
+        ref_until[b] = max(t, bank_free[b]) + tk.RFC_PB
+        ns = ctr[b] % S
+        if pol.sarp:
+            ref_sub[b] = ns
+            if open_sub[b] == ns:
+                open_row[b] = -1
+        else:
+            ref_sub[b] = -1
+            open_row[b] = -1
+        ctr[b] += 1
+        issued[b] += 1
+        refpb += 1
+        maxlag = max(maxlag, abs(due(b, t) - issued[b]))
+
+    def start_ab(t: int):
+        nonlocal ab_pending, rank_drain, refab
+        end = t + tk.RFC_AB
+        for b in range(B):
+            ref_until[b] = end
+            if pol.sarp:
+                ref_sub[b] = ctr[b] % S
+                if open_sub[b] == ref_sub[b]:
+                    open_row[b] = -1
+                ctr[b] += 1
+            else:
+                ref_sub[b] = -1
+                open_row[b] = -1
+        ab_pending -= 1
+        rank_drain = ab_pending > 0
+        refab += 1
+
+    t = 0
+    while n_finished < C and t < grid.horizon:
+        # ---- 0: outstanding-read completions
+        if comp:
+            rest = []
+            for done, c in comp:
+                if done <= t:
+                    out_reads[c] -= 1
+                    remaining[c] -= 1
+                    if remaining[c] == 0:
+                        finish[c] = t
+                        n_finished += 1
+                else:
+                    rest.append((done, c))
+            comp = rest
+        # ---- 1: core issue (at most one per core per tick, core order)
+        for c in range(C):
+            i = next_idx[c]
+            if i >= n_req[c] or t < next_issue[c]:
+                continue
+            if sw[c, i]:
+                if wpend >= CAP:
+                    continue                      # buffer full: stall core
+                q[sb[c, i]].append((t, int(sr[c, i]), int(ss[c, i]),
+                                    True, c))
+                wpend += 1
+                remaining[c] -= 1                 # writes retire at issue
+                if remaining[c] == 0:
+                    finish[c] = t
+                    n_finished += 1
+            else:
+                if out_reads[c] >= mlp:
+                    continue                      # MLP window full
+                q[sb[c, i]].append((t, int(sr[c, i]), int(ss[c, i]),
+                                    False, c))
+                out_reads[c] += 1
+            next_idx[c] = i + 1
+            next_issue[c] = t + int(sth[c, i])
+        if n_finished >= C:
+            break           # cell deactivates: no maintenance/arb this tick
+        # ---- 2: write-drain watermark
+        if wpend >= HI:
+            drain = True
+        # ---- 3: rank refresh debt
+        if (not pol.ideal and pol.level == "ab" and t > 0
+                and t % tk.REFI == 0):
+            ab_pending += 1
+            rank_drain = True
+        # ---- 4: policy decision
+        if not pol.ideal:
+            if pol.level == "ab":
+                if ab_pending > 0:
+                    quiet = (all(f <= t for f in bank_free)
+                             and all(r <= t for r in ref_until))
+                    view = MaintenanceView(
+                        now=float(t), n_banks=B, budget=budget,
+                        lag=[0] * B, demand=[0] * B, ready=[True] * B,
+                        idle=[True] * B, write_window=drain, max_issues=1,
+                        rank_due=ab_pending, rank_quiet=quiet)
+                    for dec in pol.select(view):
+                        if dec.bank == ALL_BANKS:
+                            start_ab(t)
+            else:
+                view = MaintenanceView(
+                    now=float(t), n_banks=B, budget=budget,
+                    lag=[due(b, t) - issued[b] for b in range(B)],
+                    demand=[len(q[b]) for b in range(B)],
+                    ready=[ref_until[b] <= t for b in range(B)],
+                    idle=[bank_free[b] <= t for b in range(B)],
+                    write_window=drain, max_issues=1)
+                for dec in pol.select(view):
+                    if dec.bank == ALL_BANKS:
+                        raise ValueError(
+                            f"policy {pol.name!r} returned ALL_BANKS from "
+                            f"a per-bank (level='pb') decision point")
+                    start_pb(dec.bank, t)
+        # ---- 5: arbitration (occupancy-aware; one start per tick)
+        if not rank_drain:
+            best, best_score = -1, -1
+            for b in range(B):
+                if not q[b]:
+                    continue
+                arr, row, sub, isw, core = q[b][0]
+                if bank_free[b] > t:
+                    continue
+                if ref_until[b] > t and not (pol.sarp
+                                             and ref_sub[b] != sub):
+                    continue
+                sc = (W_WRITE if (drain and isw) else 0) \
+                    + W_OCC * min(len(q[b]), OCC_CAP) \
+                    + (W_HIT if row == open_row[b] else 0) \
+                    + min(t - arr, AGE_CAP)
+                if sc > best_score:
+                    best, best_score = b, sc
+            if best >= 0:
+                b = best
+                arr, row, sub, isw, core = q[b].pop(0)
+                hit = row == open_row[b]
+                lat = tk.HIT if hit else tk.MISS
+                if pol.sarp and ref_until[b] > t:
+                    lat += tk.SARP_PEN
+                if isw != last_op:
+                    lat += tk.TURN
+                done = t + lat
+                bank_free[b] = done + (tk.WR if isw else 0)
+                last_op = isw
+                open_row[b] = row
+                open_sub[b] = sub
+                if hit:
+                    hits += 1
+                else:
+                    misses += 1
+                if isw:
+                    writes += 1
+                    wpend -= 1
+                    if drain and wpend <= LO:
+                        drain = False
+                else:
+                    reads += 1
+                    lat_sum += min(done - arr, MAX_LAT_TICKS)
+                    hist[min(done - arr, MAX_LAT_TICKS)] += 1
+                    comp.append((done, core))
+                last_done = max(last_done, done)
+        t += 1
+
+    fin = [f if f >= 0 else t for f in finish]
+    return _finalize(grid, g, reads=reads, writes=writes, hits=hits,
+                     misses=misses, refpb=refpb, refab=refab,
+                     lat_sum=lat_sum, hist=hist, maxlag=maxlag,
+                     last_done=last_done, finished=n_finished >= C,
+                     core_finish=fin)
 
 
 # --------------------------------------------------------- jax fast path
@@ -1024,6 +1697,288 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             for g in range(grid.G)]
 
 
+# ------------------------------------------------- jax fast path (closed)
+def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
+    """Closed-loop mode as one jitted `lax.while_loop`: the open-loop jax
+    backend plus per-core MLP-window state and core-fed ring bank queues.
+    Same all-integer contract, bit-identical to numpy and the scalar
+    closed oracle."""
+    if grid.customs:
+        raise ValueError(
+            "backend='jax' supports only the built-in policy classes; "
+            f"custom policies {[p.name for _, p in grid.customs]!r} need "
+            "backend='batched'")
+    if int(grid.n_tot.max()) * MAX_LAT_TICKS >= 2 ** 31:
+        raise ValueError(
+            f"backend='jax' accumulates latency sums in int32; "
+            f"{int(grid.n_tot.max())} requests per cell could overflow — "
+            "use backend='batched'")
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if arbiter == "pallas":
+        from repro.kernels.sweep_arbiter import _arbiter_call
+        interp = jax.default_backend() != "tpu"
+
+        def scores(t, **kw):
+            return _arbiter_call(t, **kw, interpret=interp)
+    elif arbiter == "jnp":
+        def scores(t, **kw):
+            return arbiter_scores(jnp, t, **kw)
+    else:
+        raise ValueError(f"unknown jax arbiter {arbiter!r}")
+
+    spec = grid.spec
+    G, B, S = grid.G, grid.B, grid.S
+    C, N, K = grid.C, grid.N, grid.K
+    LQ = grid.LQ
+    QM = LQ - 1
+    HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
+    j32 = lambda x: jnp.asarray(x, jnp.int32)
+    sw = jnp.asarray(grid.s_write.reshape(G * C, N))
+    sb = j32(grid.s_bank.reshape(G * C, N))
+    sr = j32(grid.s_row.reshape(G * C, N))
+    ssub = j32(grid.s_sub.reshape(G * C, N))
+    sth = j32(grid.s_think.reshape(G * C, N))
+    n_req = j32(grid.n_req_c)
+    mlp_col = j32(grid.mlp_g)[:, None]
+    phase = j32(grid.phase)
+    kind = j32(grid.kind)
+    level_ab = jnp.asarray(grid.level_ab)
+    sarp = jnp.asarray(grid.sarp)
+    wrp = jnp.asarray(grid.wrp)
+    urgent_at = j32(grid.urgent_at)
+    budget = j32(grid.budget)
+    REFI, RFC_PB, RFC_AB = j32(grid.REFI), j32(grid.RFC_PB), j32(grid.RFC_AB)
+    HIT, MISS, WR = j32(grid.HIT), j32(grid.MISS), j32(grid.WR)
+    TURN, SARP_PEN = j32(grid.TURN), j32(grid.SARP_PEN)
+    arG = jnp.arange(G)
+    arB = jnp.arange(B)
+    arC = jnp.arange(C)
+    flat_gc = arG[:, None] * C + arC[None, :]
+    flat_gb = arG[:, None] * B + arB[None, :]
+    OOB = G * B * LQ                       # scatter target for non-issues
+
+    remaining0 = grid.n_req_c.astype(np.int32)
+    st = dict(
+        t=jnp.int32(0),
+        # ring bank queues (flat [G*B*LQ] so appends are one scatter)
+        qa=jnp.zeros(G * B * LQ, jnp.int32),
+        qr=jnp.zeros(G * B * LQ, jnp.int32),
+        qs=jnp.zeros(G * B * LQ, jnp.int32),
+        qw=jnp.zeros(G * B * LQ, bool),
+        qc=jnp.zeros(G * B * LQ, jnp.int32),
+        q_head=jnp.zeros((G, B), jnp.int32),
+        q_tail=jnp.zeros((G, B), jnp.int32),
+        # core state
+        next_idx=jnp.zeros((G, C), jnp.int32),
+        next_issue=jnp.zeros((G, C), jnp.int32),
+        out_reads=jnp.zeros((G, C), jnp.int32),
+        remaining=j32(remaining0),
+        finish=j32(np.where(remaining0 == 0, 0, -1)),
+        comp_t=jnp.full((G, C, K), _PAD_ARRIVE, jnp.int32),
+        # machine state
+        bank_free=jnp.zeros((G, B), jnp.int32),
+        ref_until=jnp.zeros((G, B), jnp.int32),
+        ref_sub=jnp.full((G, B), -1, jnp.int32),
+        open_row=jnp.full((G, B), -1, jnp.int32),
+        open_sub=jnp.full((G, B), -1, jnp.int32),
+        ctr=jnp.zeros((G, B), jnp.int32),
+        issued=jnp.zeros((G, B), jnp.int32),
+        rr=jnp.zeros(G, jnp.int32),
+        wpend=jnp.zeros(G, jnp.int32),
+        drain=jnp.zeros(G, bool),
+        last_op=jnp.zeros(G, bool),
+        ab_pending=jnp.zeros(G, jnp.int32),
+        rank_drain=jnp.zeros(G, bool),
+        # stats
+        reads=jnp.zeros(G, jnp.int32),
+        writes=jnp.zeros(G, jnp.int32),
+        hits=jnp.zeros(G, jnp.int32),
+        misses=jnp.zeros(G, jnp.int32),
+        refpb=jnp.zeros(G, jnp.int32),
+        refab=jnp.zeros(G, jnp.int32),
+        lat_sum=jnp.zeros(G, jnp.int32),
+        hist=jnp.zeros((G, MAX_LAT_TICKS + 1), jnp.int32),
+        maxlag=jnp.zeros(G, jnp.int32),
+        last_done=jnp.zeros(G, jnp.int32),
+    )
+
+    def cond(s):
+        return (s["t"] < grid.horizon) & (s["remaining"].sum() > 0)
+
+    def body(s):
+        t = s["t"]
+
+        # ---- 0: outstanding-read completions
+        exp = s["comp_t"] <= t
+        n_exp = exp.sum(axis=2).astype(jnp.int32)
+        out_reads = s["out_reads"] - n_exp
+        remaining = s["remaining"] - n_exp
+        comp_t = jnp.where(exp, _PAD_ARRIVE, s["comp_t"])
+
+        # ---- 1: core issue (at most one per core per tick, core order)
+        next_idx = s["next_idx"]
+        sl = jnp.minimum(next_idx, N - 1)
+        head_w = sw[flat_gc, sl]
+        can = (next_idx < n_req) & (s["next_issue"] <= t)
+        want_w = can & head_w
+        want_r = can & ~head_w & (out_reads < mlp_col)
+        rank_w = jnp.cumsum(want_w, axis=1) - want_w
+        ok_w = want_w & (rank_w < (CAP - s["wpend"])[:, None])
+        issue = ok_w | want_r
+        hb = sb[flat_gc, sl]
+        oh = issue[:, :, None] & (hb[:, :, None] == arB[None, None, :])
+        pref = jnp.cumsum(oh, axis=1) - oh
+        pos_in = jnp.take_along_axis(pref, hb[:, :, None], axis=2)[:, :, 0]
+        tail_b = jnp.take_along_axis(s["q_tail"], hb, axis=1)
+        slot = (tail_b + pos_in) & QM
+        tgt = jnp.where(issue, (arG[:, None] * B + hb) * LQ + slot, OOB)
+        tgtf = tgt.ravel()
+        qa = s["qa"].at[tgtf].set(jnp.full(G * C, t, jnp.int32),
+                                  mode="drop")
+        qr = s["qr"].at[tgtf].set(sr[flat_gc, sl].ravel(), mode="drop")
+        qs_ = s["qs"].at[tgtf].set(ssub[flat_gc, sl].ravel(), mode="drop")
+        qw = s["qw"].at[tgtf].set(head_w.ravel(), mode="drop")
+        qc = s["qc"].at[tgtf].set(jnp.broadcast_to(
+            arC[None, :], (G, C)).ravel(), mode="drop")
+        q_tail = s["q_tail"] + oh.sum(axis=1)
+        wpend = s["wpend"] + ok_w.sum(axis=1)
+        out_reads = out_reads + want_r
+        remaining = remaining - ok_w          # writes retire at issue
+        next_issue = jnp.where(issue, t + sth[flat_gc, sl],
+                               s["next_issue"])
+        next_idx = next_idx + issue
+        finish = jnp.where((remaining == 0) & (s["finish"] < 0), t,
+                           s["finish"])
+        active = (remaining > 0).any(axis=1)
+
+        # ---- 2: write-drain watermark
+        drain = s["drain"] | (wpend >= HI)
+
+        # ---- 3: rank refresh debt
+        acc = active & level_ab & (t > 0) & (t % REFI == 0)
+        ab_pending = s["ab_pending"] + acc
+        rank_drain = s["rank_drain"] | acc
+
+        # ---- 4: decisions
+        due = jnp.where(t >= phase, (t - phase) // REFI[:, None] + 1, 0)
+        issued = s["issued"]
+        lag = due - issued
+        bank_free, ref_until = s["bank_free"], s["ref_until"]
+        ready = ref_until <= t
+        idle = bank_free <= t
+        demand = q_tail - s["q_head"]
+        picks, rr = select_batch(
+            jnp, kind=jnp.where(active, kind, KIND_IDEAL), lag=lag,
+            ready=ready, idle=idle, demand=demand, write_window=drain,
+            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"])
+
+        quiet = idle.all(axis=1) & ready.all(axis=1)
+        start_ab = active & (kind == KIND_AB) & (ab_pending > 0) & quiet
+        ctr, ref_sub = s["ctr"], s["ref_sub"]
+        open_row, open_sub = s["open_row"], s["open_sub"]
+        sarp_c = sarp[:, None]
+
+        m = start_ab[:, None]
+        new_sub = ctr % S
+        ref_until = jnp.where(m, (t + RFC_AB)[:, None], ref_until)
+        ref_sub = jnp.where(m, jnp.where(sarp_c, new_sub, -1), ref_sub)
+        close = m & jnp.where(sarp_c, open_sub == new_sub, True)
+        open_row = jnp.where(close, -1, open_row)
+        ctr = ctr + (m & sarp_c)
+        ab_pending = ab_pending - start_ab
+        rank_drain = jnp.where(start_ab, ab_pending > 0, rank_drain)
+        refab = s["refab"] + start_ab
+
+        new_sub = ctr % S
+        ref_until = jnp.where(
+            picks, jnp.maximum(t, bank_free) + RFC_PB[:, None], ref_until)
+        ref_sub = jnp.where(picks, jnp.where(sarp_c, new_sub, -1), ref_sub)
+        close = picks & jnp.where(sarp_c, open_sub == new_sub, True)
+        open_row = jnp.where(close, -1, open_row)
+        ctr = ctr + picks
+        issued = issued + picks
+        refpb = s["refpb"] + picks.sum(axis=1)
+        maxlag = jnp.maximum(
+            s["maxlag"],
+            jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
+
+        # ---- 5: occupancy-aware arbitration + serve
+        hslot = s["q_head"] & QM
+        flat_h = flat_gb * LQ + hslot
+        h_row, h_sub = qr[flat_h], qs_[flat_h]
+        h_arr, h_w = qa[flat_h], qw[flat_h]
+        has_req = (demand > 0) & active[:, None]
+        score = scores(t, has_req=has_req, head_row=h_row, head_sub=h_sub,
+                       head_arrive=h_arr, head_is_write=h_w,
+                       bank_free=bank_free, ref_until=ref_until,
+                       ref_sub=ref_sub, open_row=open_row, drain=drain,
+                       sarp=sarp, rank_drain=rank_drain, occ=demand)
+        bs = jnp.argmax(score, axis=1)
+        ok = score[arG, bs] >= 0
+        row, sub_ = h_row[arG, bs], h_sub[arG, bs]
+        arr, isw = h_arr[arG, bs], h_w[arG, bs]
+        core = qc[flat_gb * LQ + hslot][arG, bs]
+        hit = row == open_row[arG, bs]
+        lat = (jnp.where(hit, HIT, MISS)
+               + jnp.where(sarp & (ref_until[arG, bs] > t), SARP_PEN, 0)
+               + jnp.where(isw != s["last_op"], TURN, 0))
+        done = t + lat
+        bank_free = bank_free.at[arG, bs].set(
+            jnp.where(ok, done + jnp.where(isw, WR, 0),
+                      bank_free[arG, bs]))
+        last_op = jnp.where(ok, isw, s["last_op"])
+        open_row = open_row.at[arG, bs].set(
+            jnp.where(ok, row, open_row[arG, bs]))
+        open_sub = open_sub.at[arG, bs].set(
+            jnp.where(ok, sub_, open_sub[arG, bs]))
+        q_head = s["q_head"].at[arG, bs].add(ok)
+        served_w = ok & isw
+        wpend = wpend - served_w
+        drain = drain & ~(served_w & (wpend <= LO))
+        rmask = ok & ~isw
+        lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
+        hist = s["hist"].at[arG, lrec].add(rmask)
+        # reads: park the data return in the core's MLP window slot
+        free_k = jnp.argmax(comp_t[arG, core] == _PAD_ARRIVE, axis=1)
+        comp_t = comp_t.at[arG, core, free_k].set(
+            jnp.where(rmask, done, comp_t[arG, core, free_k]))
+
+        return dict(
+            t=t + 1, qa=qa, qr=qr, qs=qs_, qw=qw, qc=qc,
+            q_head=q_head, q_tail=q_tail,
+            next_idx=next_idx, next_issue=next_issue, out_reads=out_reads,
+            remaining=remaining, finish=finish, comp_t=comp_t,
+            bank_free=bank_free, ref_until=ref_until, ref_sub=ref_sub,
+            open_row=open_row, open_sub=open_sub, ctr=ctr, issued=issued,
+            rr=rr, wpend=wpend, drain=drain, last_op=last_op,
+            ab_pending=ab_pending, rank_drain=rank_drain,
+            reads=s["reads"] + rmask, writes=s["writes"] + served_w,
+            hits=s["hits"] + (ok & hit), misses=s["misses"] + (ok & ~hit),
+            refpb=refpb, refab=refab,
+            lat_sum=s["lat_sum"] + jnp.where(rmask, lrec, 0),
+            hist=hist, maxlag=maxlag,
+            last_done=jnp.where(ok, jnp.maximum(s["last_done"], done),
+                                s["last_done"]),
+        )
+
+    run = jax.jit(lambda s0: lax.while_loop(cond, body, s0))
+    out = jax.device_get(run(st))
+    finished = (out["remaining"] <= 0).all(axis=1)
+    t_end = int(out["t"])
+    fin = np.where(out["finish"] < 0, t_end, out["finish"])
+    return [_finalize(grid, g, reads=out["reads"][g],
+                      writes=out["writes"][g], hits=out["hits"][g],
+                      misses=out["misses"][g], refpb=out["refpb"][g],
+                      refab=out["refab"][g], lat_sum=out["lat_sum"][g],
+                      hist=out["hist"][g], maxlag=out["maxlag"][g],
+                      last_done=out["last_done"][g], finished=finished[g],
+                      core_finish=fin[g])
+            for g in range(grid.G)]
+
+
 # ------------------------------------------------------------------ entry
 def sweep(spec: SweepSpec, backend: str = "batched",
           arbiter: Optional[str] = None) -> SweepResult:
@@ -1038,14 +1993,22 @@ def sweep(spec: SweepSpec, backend: str = "batched",
     `arbiter` selects the availability/arbitration step implementation:
     "numpy" (batched default), "jnp" (jax default), or "pallas" (the
     kernel in `repro.kernels.sweep_arbiter`; interpret mode off-TPU).
+
+    All three backends exist for both `spec.mode` values; closed-loop
+    cells additionally carry `core_finish`, making
+    `CellResult.weighted_speedup_vs` (the paper's metric) available.
     """
     grid = _Grid(spec)
+    closed = grid.closed
     if backend == "batched":
-        cells = _run_batched(grid, arbiter=arbiter or "numpy")
+        run = _run_batched_closed if closed else _run_batched
+        cells = run(grid, arbiter=arbiter or "numpy")
     elif backend == "jax":
-        cells = _run_jax(grid, arbiter=arbiter or "jnp")
+        run = _run_jax_closed if closed else _run_jax
+        cells = run(grid, arbiter=arbiter or "jnp")
     elif backend == "scalar":
-        cells = [_run_scalar_cell(grid, g) for g in range(grid.G)]
+        run_cell = _run_scalar_cell_closed if closed else _run_scalar_cell
+        cells = [run_cell(grid, g) for g in range(grid.G)]
     else:
         raise ValueError(f"unknown sweep backend {backend!r}")
     return SweepResult(spec, cells, backend)

@@ -31,7 +31,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.sweep.arbiter import AGE_CAP, W_HIT, W_WRITE, arbiter_scores
+from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
+                                      W_WRITE, arbiter_scores)
 
 #: cells per grid step; G is padded up to a multiple of this
 TILE_G = 256
@@ -40,7 +41,7 @@ TILE_G = 256
 def _arbiter_kernel(t_ref,                                # scalar prefetch
                     has_req_ref, head_row_ref, head_sub_ref,
                     head_arrive_ref, head_is_write_ref, bank_free_ref,
-                    ref_until_ref, ref_sub_ref, open_row_ref,
+                    ref_until_ref, ref_sub_ref, open_row_ref, occ_ref,
                     drain_ref, sarp_ref, rank_drain_ref,   # [TILE_G, 1]
                     score_ref):
     t = t_ref[0]
@@ -53,6 +54,7 @@ def _arbiter_kernel(t_ref,                                # scalar prefetch
     age = jnp.minimum(t - head_arrive_ref[...], AGE_CAP)
     wantw = (drain_ref[...] != 0) & (head_is_write_ref[...] != 0)
     score = (jnp.where(wantw, W_WRITE, 0)
+             + W_OCC * jnp.minimum(occ_ref[...], OCC_CAP)
              + jnp.where(head_row_ref[...] == open_row_ref[...], W_HIT, 0)
              + age)
     score_ref[...] = jnp.where(elig, score, -1).astype(jnp.int32)
@@ -61,8 +63,10 @@ def _arbiter_kernel(t_ref,                                # scalar prefetch
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
                   head_is_write, bank_free, ref_until, ref_sub, open_row,
-                  drain, sarp, rank_drain, *, interpret: bool):
+                  drain, sarp, rank_drain, occ=None, *, interpret: bool):
     G, B = head_row.shape
+    if occ is None:                       # open-loop: occupancy field is 0
+        occ = jnp.zeros((G, B), jnp.int32)
     tiles = -(-G // TILE_G)
     pad = tiles * TILE_G - G
 
@@ -75,7 +79,7 @@ def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(tiles,),
-        in_specs=[gb] * 9 + [g1] * 3,
+        in_specs=[gb] * 10 + [g1] * 3,
         out_specs=gb,
     )
     out = pl.pallas_call(
@@ -86,7 +90,7 @@ def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
     )(jnp.asarray([t], jnp.int32),
       prep(has_req), prep(head_row), prep(head_sub), prep(head_arrive),
       prep(head_is_write), prep(bank_free), prep(ref_until),
-      prep(ref_sub), prep(open_row),
+      prep(ref_sub), prep(open_row), prep(occ),
       prep(drain[:, None]), prep(sarp[:, None]), prep(rank_drain[:, None]))
     return out[:G]
 
@@ -100,11 +104,11 @@ def make_arbiter(G: int, B: int, interpret: bool | None = None):
 
     def score(t, *, has_req, head_row, head_sub, head_arrive,
               head_is_write, bank_free, ref_until, ref_sub, open_row,
-              drain, sarp, rank_drain):
+              drain, sarp, rank_drain, occ=None):
         out = _arbiter_call(
             int(t), has_req, head_row, head_sub, head_arrive,
             head_is_write, bank_free, ref_until, ref_sub, open_row,
-            drain, sarp, rank_drain, interpret=interpret)
+            drain, sarp, rank_drain, occ, interpret=interpret)
         return np.asarray(out)
 
     return score

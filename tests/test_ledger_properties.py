@@ -1,0 +1,148 @@
+"""Property tests (hypothesis) for the shared `MaintenanceLedger` — the
+due/issued bookkeeping every engine drives its registry policy through
+(DramSim.run_ticks, serving EngineCore, checkpoint via DarpScheduler).
+
+Invariants pinned here:
+  * budget conservation: -budget <= lag <= budget at every instant, for
+    every registered per-bank policy, under arbitrary demand / readiness /
+    write-window sequences;
+  * no bank refreshed twice in one decision point (max_issues=1, the
+    engines' hot-path configuration), and per interval window a bank's
+    issues stay within the ±budget swing bound (2*budget + 1);
+  * deadline monotonicity: `due` never decreases as time advances, `lag`
+    only decreases through `apply`, and `snapshot_age` resets on issue.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback; see _hypothesis_shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.policy import list_policies, resolve_policy
+from repro.core.policy.ledger import MaintenanceLedger
+
+#: per-bank policies only: rank-level (ab) policies answer the rank path
+#: and don't use the per-bank ledger accounting (see DramSim.run_ticks)
+PB_POLICIES = tuple(p for p in list_policies()
+                    if resolve_policy(p).level == "pb"
+                    and not resolve_policy(p).ideal)
+
+
+def _drive(policy_name, n_banks, budget, interval, seed, steps,
+           on_step=None):
+    """Random-walk one (policy, ledger) pair through `steps` decision
+    points; returns the ledger. `on_step(led, t, banks)` observes each
+    apply."""
+    rs = np.random.RandomState(seed)
+    led = MaintenanceLedger(n_banks, interval=interval, budget=budget,
+                            stagger=bool(seed % 2))
+    pol = resolve_policy(policy_name)
+    t = 0.0
+    for _ in range(steps):
+        t += float(rs.rand()) * interval
+        # ready flips randomly EXCEPT at the postpone edge: real engines
+        # guarantee a bank is refresh-ready again before its deadline
+        # (tRFC << tREFI), and no policy can hold the bound without that
+        ready = [bool(rs.rand() < 0.8) or led.lag(b, t) >= budget
+                 for b in range(n_banks)]
+        view = led.view(
+            t, demand=rs.randint(0, 3, n_banks).tolist(),
+            write_window=bool(rs.rand() < 0.4),
+            ready=ready,
+            idle=(rs.rand(n_banks) < 0.8).tolist(),
+            pressure=float(rs.rand()))
+        banks = led.apply(pol.select(view), t)
+        if on_step is not None:
+            on_step(led, t, banks)
+        led.check_invariant(t)
+    return led
+
+
+@settings(max_examples=60, deadline=None)
+@given(policy=st.sampled_from(PB_POLICIES),
+       n_banks=st.integers(2, 12),
+       budget=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_budget_conservation_under_arbitrary_views(policy, n_banks,
+                                                   budget, seed):
+    """|due - issued| <= budget at every decision point, for every
+    registered per-bank policy, under arbitrary MaintenanceView walks
+    (`check_invariant` raises inside `_drive` on violation)."""
+    _drive(policy, n_banks, budget, interval=3.0, seed=seed, steps=80)
+
+
+@settings(max_examples=40, deadline=None)
+@given(policy=st.sampled_from(PB_POLICIES),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_no_bank_refreshed_twice_in_one_window(policy, seed):
+    """max_issues=1 decision points never issue one bank twice in a single
+    apply, and within any interval window a bank's issues stay within the
+    ±budget swing bound (2*budget + 1)."""
+    budget, interval, n_banks = 4, 5.0, 6
+    window_issues = {}
+
+    def watch(led, t, banks):
+        assert len(banks) == len(set(banks)), \
+            f"bank issued twice in one decision point at t={t}: {banks}"
+        w = int(t // interval)
+        for b in banks:
+            key = (w, b)
+            window_issues[key] = window_issues.get(key, 0) + 1
+            assert window_issues[key] <= 2 * budget + 1, \
+                f"bank {b} issued {window_issues[key]}x in window {w}"
+
+    _drive(policy, n_banks, budget, interval, seed, steps=120,
+           on_step=watch)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       n_banks=st.integers(2, 10))
+def test_deadline_monotonicity(seed, n_banks):
+    """As time advances without applies: `due` never decreases, `lag`
+    never decreases, `snapshot_age` grows; an apply resets snapshot_age
+    and drops lag by exactly one."""
+    rs = np.random.RandomState(seed)
+    led = MaintenanceLedger(n_banks, interval=4.0, budget=8, stagger=True)
+    times = np.cumsum(rs.rand(40) * 3.0)
+    prev_due = [led.due(b, 0.0) for b in range(n_banks)]
+    prev_lag = [led.lag(b, 0.0) for b in range(n_banks)]
+    for t in times:
+        t = float(t)
+        for b in range(n_banks):
+            d, l = led.due(b, t), led.lag(b, t)
+            assert d >= prev_due[b], (b, t)
+            assert l >= prev_lag[b], (b, t)
+            prev_due[b], prev_lag[b] = d, l
+        if rs.rand() < 0.3:
+            b = int(rs.randint(n_banks))
+            lag_before = led.lag(b, t)
+            from repro.core.policy import Decision
+            led.apply([Decision(b)], t)
+            assert led.lag(b, t) == lag_before - 1
+            assert led.snapshot_age(b, t) == 0.0
+            prev_lag[b] = led.lag(b, t)
+        # ages are bounded by time-since-start and nonnegative
+        for b in range(n_banks):
+            age = led.snapshot_age(b, t)
+            assert 0.0 <= age <= t + 1e-9
+
+
+def test_view_passes_rank_fields_through():
+    """The tick simulators route rank refresh debt through the shared
+    view builder; the fields must round-trip."""
+    led = MaintenanceLedger(4, interval=2.0, budget=8)
+    v = led.view(1.0, demand=[0, 1, 2, 3], rank_due=3, rank_quiet=False,
+                 write_window=True, pressure=0.5)
+    assert v.rank_due == 3 and v.rank_quiet is False
+    assert v.write_window is True and v.pressure == 0.5
+    assert v.demand == [0, 1, 2, 3]
+
+
+def test_time_must_be_monotonic():
+    led = MaintenanceLedger(2, interval=1.0, budget=2)
+    led.view(5.0, demand=[0, 0])
+    with pytest.raises(AssertionError, match="monotonic"):
+        led.view(4.0, demand=[0, 0])

@@ -210,6 +210,7 @@ def test_masked_scores_match_shared():
             drain=rs.rand(G) < 0.4,
             sarp=rs.rand(G) < 0.5,
             rank_drain=rs.rand(G) < 0.1,
+            occ=rs.randint(0, 20, (G, B)).astype(np.int32),
         )
         expect = arbiter_scores(np, t, **kw)
         got = arbiter_scores_masked(
@@ -219,7 +220,7 @@ def test_masked_scores_match_shared():
             head_is_write=kw["head_is_write"], ref_sub=kw["ref_sub"],
             open_row=kw["open_row"], drain=kw["drain"],
             sarp_col=kw["sarp"][:, None], rank_drain=kw["rank_drain"],
-            rank_can_drain=True)
+            rank_can_drain=True, occ=kw["occ"])
         np.testing.assert_array_equal(np.asarray(got, np.int64),
                                       np.asarray(expect, np.int64), str(t))
 
@@ -248,6 +249,11 @@ def test_pallas_arbiter_matches_numpy_scores():
     expect = arbiter_scores(np, t, **kw)
     got = make_arbiter(G, B)(t, **kw)
     np.testing.assert_array_equal(np.asarray(got), expect)
+    # occupancy field (closed-loop mode) must match through the kernel too
+    occ = rs.randint(0, 20, (G, B)).astype(np.int32)
+    expect_occ = arbiter_scores(np, t, occ=occ, **kw)
+    got_occ = make_arbiter(G, B)(t, occ=occ, **kw)
+    np.testing.assert_array_equal(np.asarray(got_occ), expect_occ)
 
 
 def test_batched_with_pallas_arbiter_identical():
