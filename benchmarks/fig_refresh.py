@@ -189,6 +189,24 @@ def sweep_grid(fast: bool = False) -> dict:
     }
 
 
+def _cell_matches_sim(cell, sim) -> bool:
+    """Every stat a CellResult shares with a SimResult, bit-identical —
+    ONE definition for every bench's bit_identical flag (the test-side
+    twin is tests/test_conformance.py::_assert_cell_equals_sim)."""
+    return (cell.makespan == sim.makespan
+            and cell.reads_done == sim.reads_done
+            and cell.writes_done == sim.writes_done
+            and cell.avg_read_latency == sim.avg_read_latency
+            and cell.p99_read_latency == sim.p99_read_latency
+            and cell.refreshes_pb == sim.refreshes_pb
+            and cell.refreshes_ab == sim.refreshes_ab
+            and cell.row_hits == sim.row_hits
+            and cell.row_misses == sim.row_misses
+            and cell.energy == sim.energy
+            and cell.max_abs_lag == sim.max_abs_lag
+            and list(cell.core_finish) == list(sim.core_finish))
+
+
 def closed_loop(fast: bool = False) -> dict:
     """Timed closed-loop grid: the batched backend advancing every
     (policy x closed-scenario x density) cell in lock-step vs the
@@ -210,20 +228,7 @@ def closed_loop(fast: bool = False) -> dict:
     t0 = time.perf_counter()
     for p, s, d in spec.cells():
         sim = DramSim(timing_for_density(d), wls[s], p).run_ticks()
-        cell = batched.get(p, s, d)
-        identical &= (
-            cell.makespan == sim.makespan
-            and cell.reads_done == sim.reads_done
-            and cell.writes_done == sim.writes_done
-            and cell.avg_read_latency == sim.avg_read_latency
-            and cell.p99_read_latency == sim.p99_read_latency
-            and cell.refreshes_pb == sim.refreshes_pb
-            and cell.refreshes_ab == sim.refreshes_ab
-            and cell.row_hits == sim.row_hits
-            and cell.row_misses == sim.row_misses
-            and cell.energy == sim.energy
-            and cell.max_abs_lag == sim.max_abs_lag
-            and list(cell.core_finish) == list(sim.core_finish))
+        identical &= _cell_matches_sim(batched.get(p, s, d), sim)
     t_ticks_loop = time.perf_counter() - t0
 
     return {
@@ -236,3 +241,53 @@ def closed_loop(fast: bool = False) -> dict:
         "speedup_vs_dramsim_ticks": round(t_ticks_loop / t_batched, 2),
         "bit_identical": identical,
     }
+
+
+#: policy axis for the multirank hierarchy sweep: the flat baselines,
+#: the paper's mechanism, and the two hierarchy-only registry policies
+MULTIRANK_POLICIES = ("ideal", "ref_ab", "ref_pb", "darp", "dsarp",
+                      "staggered_ab", "rank_aware_darp")
+
+
+def sweep_multirank(fast: bool = False) -> dict:
+    """The [channel, rank, bank] hierarchy sweep: the closed_multirank
+    grid at n_ranks in {1, 2, 4} through the batched backend, each rank
+    count cross-checked bit-identically against looping
+    `DramSim.run_ticks` per cell (the conformance surface of
+    tests/test_multirank.py), plus per-rank-count weighted speedup vs
+    ideal — how much of each policy's refresh cost rank-level
+    parallelism absorbs."""
+    reqs = 120 if fast else 400
+    seed = 0
+    scen = "closed_multirank"
+    wl = make_closed_workload(scen, reqs, seed)
+    out = {"grid": {"policies": len(MULTIRANK_POLICIES), "scenario": scen,
+                    "densities": list(DENSITIES), "reqs_per_cell": reqs},
+           "per_rank_count": {}}
+    identical = True
+    for n_ranks in (1, 2, 4):
+        spec = SweepSpec(policies=MULTIRANK_POLICIES, scenarios=(scen,),
+                         densities=DENSITIES, reqs=reqs, seed=seed,
+                         mode="closed", n_ranks=n_ranks)
+        t0 = time.perf_counter()
+        res = sweep(spec, backend="batched")
+        t_batched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for p, s, d in spec.cells():
+            sim = DramSim(timing_for_density(d, n_ranks=n_ranks), wl,
+                          p).run_ticks()
+            identical &= _cell_matches_sim(res.get(p, s, d), sim)
+        t_loop = time.perf_counter() - t0
+        ws = {}
+        for p in MULTIRANK_POLICIES:
+            if p == "ideal":
+                continue
+            ws[p] = {d: round(res.get(p, scen, d).weighted_speedup_vs(
+                res.get("ideal", scen, d)), 4) for d in DENSITIES}
+        out["per_rank_count"][n_ranks] = {
+            "batched_s": round(t_batched, 3),
+            "dramsim_ticks_loop_s": round(t_loop, 3),
+            "weighted_speedup_vs_ideal": ws,
+        }
+    out["bit_identical"] = identical
+    return out

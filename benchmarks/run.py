@@ -12,6 +12,9 @@ dicts go to results/bench/*.json.
                  DramSim loop
   sweep_closed_loop   closed-loop grid vs looping DramSim.run_ticks per
                  cell, with the bit_identical conformance flag
+  sweep_multirank     the [channel, rank, bank] hierarchy: closed grid
+                 at n_ranks in {1,2,4}, bit_identical per rank count,
+                 per-rank-count weighted speedup vs ideal
   darp_ckpt      framework DARP: checkpoint flush scheduling overhead
   serving        framework DARP: serving maintenance policies (legacy shim)
   serving_lifecycle   EngineCore request lifecycle: TTFT/TPOT percentiles
@@ -81,6 +84,14 @@ def main() -> None:
     _emit("sweep_closed_loop", (time.perf_counter() - t0) * 1e6,
           f"vs_dramsim_ticks={cl['speedup_vs_dramsim_ticks']}x;"
           f"bit_identical={cl['bit_identical']}", cl)
+
+    t0 = time.perf_counter()
+    mr = FR.sweep_multirank(fast=fast)
+    ws2 = mr["per_rank_count"][2]["weighted_speedup_vs_ideal"]
+    _emit("sweep_multirank", (time.perf_counter() - t0) * 1e6,
+          f"bit_identical={mr['bit_identical']};"
+          f"dsarp_ws_2rank_32gb={ws2['dsarp'][32]};"
+          f"refab_ws_2rank_32gb={ws2['ref_ab'][32]}", mr)
 
     t0 = time.perf_counter()
     ck = BF.bench_darp_ckpt(steps=20 if fast else 40)

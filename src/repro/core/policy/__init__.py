@@ -6,20 +6,24 @@ first-class API).
   pol.select(view)                 # -> [Decision(bank=...), ...]
 
 Importing this package registers the built-in policies (paper family +
-the elastic/hira extras)."""
-from repro.core.policy.base import (ALL_BANKS, Decision, MaintenanceView,
-                                    PolicyBase, RefreshPolicy)
+the elastic/hira extras + the multirank pair)."""
+from repro.core.policy.base import (ALL_BANKS, ANY_RANK, Decision,
+                                    MaintenanceView, PolicyBase,
+                                    RefreshPolicy)
 from repro.core.policy.ledger import BankLedgerState, MaintenanceLedger
 from repro.core.policy.registry import (get_policy, list_policies,
                                         register_policy, resolve_policy)
 from repro.core.policy.paper import (AllBankPolicy, DarpPolicy, IdealPolicy,
                                      RoundRobinPolicy)
 from repro.core.policy.extras import ElasticPolicy, HiraPolicy
+from repro.core.policy.multirank import (RankAwareDarpPolicy,
+                                         StaggeredAllBankPolicy)
 
 __all__ = [
-    "ALL_BANKS", "Decision", "MaintenanceView", "PolicyBase",
+    "ALL_BANKS", "ANY_RANK", "Decision", "MaintenanceView", "PolicyBase",
     "RefreshPolicy", "BankLedgerState", "MaintenanceLedger",
     "get_policy", "list_policies", "register_policy",
     "resolve_policy", "AllBankPolicy", "DarpPolicy", "IdealPolicy",
     "RoundRobinPolicy", "ElasticPolicy", "HiraPolicy",
+    "RankAwareDarpPolicy", "StaggeredAllBankPolicy",
 ]

@@ -29,13 +29,25 @@ from typing import Protocol, Sequence, runtime_checkable
 #: `Decision.bank` value for a rank-level (all-bank) refresh.
 ALL_BANKS = -1
 
+#: `Decision.rank` value meaning "every rank with pending all-bank debt"
+#: (the legacy single-rank spelling: with one rank it IS rank 0).
+ANY_RANK = -1
+
 
 @dataclass(frozen=True)
 class Decision:
-    """One maintenance command: refresh `bank` (or the whole rank)."""
+    """One maintenance command: refresh `bank` (or a whole rank).
+
+    `rank` only matters when `bank == ALL_BANKS`: it names the global
+    rank (channel * n_ranks + rank) whose banks the all-bank refresh
+    covers. The default `ANY_RANK` keeps legacy single-rank policies
+    working — engines expand it to every rank with pending debt, which
+    with one rank is exactly the old behavior.
+    """
     bank: int                    # bank index, or ALL_BANKS
     forced: bool = False         # postpone budget exhausted
     reason: str = ""             # optional trace label
+    rank: int = ANY_RANK         # global rank for ALL_BANKS decisions
 
 
 @dataclass
@@ -58,13 +70,52 @@ class MaintenanceView:
     idle: Sequence[bool]
     write_window: bool = False   # write-drain / write-phase in progress
     max_issues: int = 1          # non-forced issues allowed this call
-    rank_due: int = 0            # pending all-bank refreshes (sim only)
+    rank_due: int = 0            # pending all-bank refreshes (sim only;
+    #   TOTAL across ranks when the hierarchy fields below are set)
     rank_quiet: bool = True      # every bank drained; REF_ab may start
     pressure: float = 0.0        # write-buffer fill fraction in [0, 1]:
     #   DRAM sim = write-buffer occupancy; serving EngineCore = KV staging
     #   pressure (1.0 means the forced red-line is imminent). Policies may
     #   use it to modulate how aggressively they repay lag; engines that
     #   have no buffer analogue leave it 0.
+
+    # ---- hierarchy (channel, rank, bank) — tick engines only ----------
+    # Generic engines (serving, checkpoint) leave the defaults, which
+    # describe a flat single-rank single-channel view. `n_banks` is
+    # always the TOTAL bank count; `rank_of[b]`/`channel_of[b]` map a
+    # global bank index to its global rank (channel * n_ranks + rank)
+    # and channel. `ranks_due[gr]` is the per-rank all-bank refresh debt
+    # — non-empty iff the engine tracks the hierarchy, so policies can
+    # key multi-rank behavior on `bool(view.ranks_due)`.
+    n_ranks: int = 1             # ranks per channel
+    n_channels: int = 1
+    rank_of: Sequence[int] = ()      # [n_banks] global rank per bank
+    channel_of: Sequence[int] = ()   # [n_banks] channel per bank
+    ranks_due: Sequence[int] = ()    # [n_ranks_total] per-rank ab debt
+
+    @property
+    def n_ranks_total(self) -> int:
+        return self.n_ranks * self.n_channels
+
+    def rank_banks(self, gr: int) -> list:
+        """Global bank indices of global rank `gr`."""
+        if not self.rank_of:
+            return list(range(self.n_banks))
+        return [b for b in range(self.n_banks) if self.rank_of[b] == gr]
+
+    def rank_is_quiet(self, gr: int) -> bool:
+        """Every bank of rank `gr` is refresh-ready and demand-idle (the
+        per-rank generalization of the legacy `rank_quiet`)."""
+        return all(self.ready[b] and self.idle[b]
+                   for b in self.rank_banks(gr))
+
+    def channel_is_clear(self, ch: int) -> bool:
+        """No bank on channel `ch` is mid-refresh — an all-bank refresh
+        started now would not overlap another on the same channel."""
+        if not self.channel_of:
+            return all(self.ready)
+        return all(self.ready[b] for b in range(self.n_banks)
+                   if self.channel_of[b] == ch)
 
 
 @runtime_checkable

@@ -71,7 +71,10 @@ class MaintenanceLedger:
              ready: Optional[Sequence[bool]] = None,
              idle: Optional[Sequence[bool]] = None,
              pressure: float = 0.0, rank_due: int = 0,
-             rank_quiet: bool = True) -> MaintenanceView:
+             rank_quiet: bool = True, n_ranks: int = 1,
+             n_channels: int = 1, rank_of: Sequence[int] = (),
+             channel_of: Sequence[int] = (),
+             ranks_due: Sequence[int] = ()) -> MaintenanceView:
         """Build the read-only snapshot a policy decides against.
 
         demand[b]: pending demand work on bank b. `ready`/`idle` default
@@ -79,7 +82,9 @@ class MaintenanceLedger:
         `pressure` is the engine's write-buffer/staging fill fraction.
         `rank_due`/`rank_quiet` only matter to rank-level (all-bank)
         policies — engines that track rank refresh debt themselves (the
-        tick simulators) pass them through here.
+        tick simulators) pass them through here, along with the
+        [channel, rank, bank] hierarchy fields (`rank_of`/`channel_of`/
+        `ranks_due`; see docs/tick-contract.md).
         """
         assert len(demand) == self.n_banks
         assert now >= self._last_now, "time must be monotonic"
@@ -92,7 +97,9 @@ class MaintenanceLedger:
             idle=list(idle) if idle is not None else [True] * self.n_banks,
             write_window=write_window, max_issues=max_issues,
             pressure=float(pressure), rank_due=int(rank_due),
-            rank_quiet=bool(rank_quiet))
+            rank_quiet=bool(rank_quiet), n_ranks=int(n_ranks),
+            n_channels=int(n_channels), rank_of=tuple(rank_of),
+            channel_of=tuple(channel_of), ranks_due=tuple(ranks_due))
 
     def apply(self, decisions: Sequence[Decision], now: float) -> list[int]:
         """Record the policy's decisions as issued; returns the flat bank

@@ -47,10 +47,14 @@ class AllBankPolicy(PolicyBase):
     refresh baseline; registered as "ref_ab"/"all_bank", and "sarp_ab"
     for the §5 SARP-on-REF_ab variant).
 
-    Timing simulator (`view.rank_due` set): the rank drains, then one
-    tRFC_ab-long refresh covers every bank. Generic engines (rank_due==0):
-    when anything is owed, sweep EVERY owed bank in one call — max_issues
-    deliberately does not apply; that is the point of REF_ab.
+    Timing simulator (`view.ranks_due` / `view.rank_due` set): each due
+    rank drains, then one tRFC_ab-long refresh covers every bank of that
+    rank. Hierarchy-aware engines set `ranks_due` per global rank and get
+    one `Decision(ALL_BANKS, rank=gr)` for every rank that is due and
+    quiet — with one rank this is exactly the legacy single-rank
+    stop-the-world behavior. Generic engines (rank_due==0): when anything
+    is owed, sweep EVERY owed bank in one call — max_issues deliberately
+    does not apply; that is the point of REF_ab.
 
     Traits: level='ab' (rank-level) · sarp per registration (False for
     "ref_ab"/"all_bank", True for "sarp_ab") · write-drain: ignored.
@@ -62,7 +66,11 @@ class AllBankPolicy(PolicyBase):
         self.sarp = sarp
 
     def select(self, view: MaintenanceView) -> list[Decision]:
-        if view.rank_due > 0:
+        if view.ranks_due:               # hierarchy-aware tick engines
+            return [Decision(ALL_BANKS, rank=gr, reason="rank refresh")
+                    for gr in range(view.n_ranks_total)
+                    if view.ranks_due[gr] > 0 and view.rank_is_quiet(gr)]
+        if view.rank_due > 0:            # legacy single-rank spelling
             if view.rank_quiet:
                 return [Decision(ALL_BANKS, reason="rank refresh")]
             return []

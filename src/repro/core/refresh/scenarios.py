@@ -433,3 +433,16 @@ register_closed_scenario("closed_write_heavy",
                          _closed_preset("write_heavy", 4))
 register_closed_scenario("closed_low_mlp", _closed_preset("low_mlp", 4))
 register_closed_scenario("closed_streaming", _closed_preset("streaming", 4))
+
+
+@register_closed_scenario("closed_multirank")
+def closed_multirank(reqs: int, seed: int) -> Workload:
+    """Eight cores, medium MLP, low think time: enough concurrent demand
+    that every rank of a multi-rank hierarchy sees traffic while one rank
+    drains for REF_ab — the scenario the [channel, rank, bank] sweeps
+    (`SweepSpec(n_ranks=...)`) use to show cross-rank refresh staggering.
+    Bank indices are drawn over the GLOBAL bank space at generation time,
+    so the same scenario scales with the configured hierarchy."""
+    return Workload(name="multirank", n_cores=8, mlp=4, think_ns=10.0,
+                    row_hit_rate=0.50, write_ratio=0.25,
+                    reqs_per_core=max(1, reqs // 8), seed=seed)

@@ -1,9 +1,17 @@
 """Discrete-event DRAM-subsystem simulator (the paper's evaluation vehicle).
 
-Models one rank: N banks x M subarrays, shared data bus with turnaround
-penalties, FR-FCFS-style scheduling, a write buffer with high/low watermark
+Models a [channel, rank, bank] hierarchy: `DramTiming.n_channels` data
+buses, `n_ranks` ranks per channel, N banks x M subarrays per rank —
+per-channel buses with read/write AND rank-to-rank turnaround penalties,
+FR-FCFS-style scheduling, a shared write buffer with high/low watermark
 drain ("writeback mode"), and a closed-loop MLP-limited multi-core
-front-end.
+front-end. Bank state is indexed by GLOBAL bank
+``gb = (channel * n_ranks + rank) * n_banks + bank``; all-bank refresh
+debt and the activate-drain it forces are tracked per global rank, so one
+rank's REF_ab never stalls its siblings (the cross-rank staggering that
+makes all-bank refresh tolerable in commodity controllers). The default
+single-rank single-channel configuration reproduces the legacy flat model
+bit-for-bit; `docs/tick-contract.md` is the normative spec.
 
 Refresh decisions are NOT made here: every policy (the paper's REF_ab /
 REF_pb / DARP / SARP / DSARP family plus registry extras like "elastic"
@@ -108,11 +116,13 @@ class BankState:
 
 
 class BusState:
-    """Shared data bus: serialization point + read/write turnaround."""
+    """One channel's data bus: serialization point + read/write
+    turnaround + rank-to-rank (ODT swap) turnaround."""
 
     def __init__(self):
         self.free = 0.0
         self.last_op_write = False
+        self.last_rank = -1          # global rank of the last burst
 
 
 class WriteBuffer:
@@ -148,18 +158,20 @@ class WriteBuffer:
 
 
 class RefreshLedger:
-    """Refresh due/issued accounting: the per-bank postpone/pull-in ledger
-    plus the rank-level (all-bank) pending counter."""
+    """Refresh due/issued accounting: the per-(global-)bank postpone/
+    pull-in ledger plus the PER-RANK all-bank pending counters (one
+    rank's REF_ab debt/drain never touches its siblings)."""
 
     def __init__(self, timing: DramTiming):
-        nb = timing.n_banks
+        nb = timing.n_banks_total
+        R = timing.n_ranks_total
         self.tREFI = timing.tREFI
         self.issued = np.zeros(nb, dtype=int)
         self.phase = np.arange(nb) * timing.tREFI_pb   # staggered schedule
         self.ref_sub_counter = np.zeros(nb, dtype=int)
         self.max_abs_lag = 0
-        self.ab_pending = 0          # due-but-not-started all-bank refs
-        self.rank_drain = False      # REF_ab: stop new activates
+        self.ab_pending = np.zeros(R, dtype=int)   # due-but-unstarted REFab
+        self.rank_drain = np.zeros(R, dtype=bool)  # REF_ab: stop activates
 
     def due(self, b: int, t: float) -> int:
         if t < self.phase[b]:
@@ -185,8 +197,12 @@ def energy_proxy(T: DramTiming, makespan_ns: float, reads: int, writes: int,
     (arbitrary units; relative comparisons only). Coefficients chosen so
     refresh is ~8-15% of total at 32 Gb and background dominates —
     matching DRAM power breakdowns; the paper's energy win comes from the
-    shorter runtime (background term)."""
-    return (0.5 * makespan_ns                    # background + periphery
+    shorter runtime (background term). Every rank burns background/standby
+    power for the whole run, so that term scales with `n_ranks_total`;
+    `ref_ab` counts per-rank REF_ab starts (each covers one rank's
+    `n_banks`). Assumptions + deliberate deviations from the paper's
+    power model are documented in docs/figures.md."""
+    return (0.5 * makespan_ns * T.n_ranks_total  # background + periphery
             + 12.0 * misses                      # activates + precharges
             + 6.0 * (reads + writes)
             + 0.15 * T.tRFC_pb * ref_pb          # refresh energy ~ latency
@@ -211,7 +227,13 @@ class DramSim:
         self._policy_spec = policy
         self.policy: RefreshPolicy = resolve_policy(policy)
         self.wbuf_cap, self.wbuf_hi, self.wbuf_lo = wbuf_cap, wbuf_hi, wbuf_lo
-        self.streams = workload.generate(timing.n_banks, timing.n_subarrays)
+        # demand spans every bank of the hierarchy (global bank indices)
+        self.streams = workload.generate(timing.n_banks_total,
+                                         timing.n_subarrays)
+        bt = timing.n_banks_total
+        self._rank_of = tuple(b // timing.n_banks for b in range(bt))
+        self._chan_of = tuple(b // (timing.n_ranks * timing.n_banks)
+                              for b in range(bt))
 
     # --------------------------------------------------------- event heap
     def _push(self, t: float, kind: str, data=None) -> None:
@@ -234,10 +256,11 @@ class DramSim:
         self.stats["ref_pb"] += 1
         self._push(banks.ref_until[b], "sched")
 
-    def _start_ab_refresh(self, t: float) -> None:
+    def _start_ab_refresh(self, gr: int, t: float) -> None:
+        """All-bank refresh on global rank `gr` (its n_banks banks)."""
         T, banks, led = self.T, self.banks, self.ledger
         end = t + T.tRFC_ab
-        for b in range(T.n_banks):
+        for b in range(gr * T.n_banks, (gr + 1) * T.n_banks):
             banks.ref_until[b] = end
             if self.policy.sarp:
                 banks.ref_sub[b] = led.ref_sub_counter[b] % T.n_subarrays
@@ -247,10 +270,21 @@ class DramSim:
             else:
                 banks.ref_sub[b] = -1
                 banks.open_row[b] = -1
-        led.ab_pending -= 1
-        led.rank_drain = led.ab_pending > 0
+        led.ab_pending[gr] -= 1
+        led.rank_drain[gr] = led.ab_pending[gr] > 0
         self.stats["ref_ab"] += 1
         self._push(end, "sched")
+
+    def _ab_targets(self, rank: int) -> tuple:
+        """Ranks an `ALL_BANKS` decision covers: an explicit rank (only
+        while it actually has pending debt — a debt-free rank is skipped
+        so a buggy policy cannot drive `ab_pending` negative), or — for
+        the legacy `ANY_RANK` spelling — every rank with pending debt
+        (exactly the old single-rank behavior at one rank)."""
+        led = self.ledger
+        if rank >= 0:
+            return (rank,) if led.ab_pending[rank] > 0 else ()
+        return tuple(int(r) for r in np.nonzero(led.ab_pending > 0)[0])
 
     def _bank_available(self, b: int, sub: int, t: float) -> bool:
         """Can a demand access to (b, sub) start at t?"""
@@ -262,46 +296,55 @@ class DramSim:
                 return False
             if banks.ref_sub[b] == sub:
                 return False            # same subarray as the refresh
-        if self.ledger.rank_drain:
+        if self.ledger.rank_drain[self._rank_of[b]]:
             return False
         return True
 
     def _refresh_step(self, t: float) -> None:
         """The whole policy adapter: snapshot state into a MaintenanceView,
         apply whatever the registered policy decides."""
-        pol, led, banks, nb = self.policy, self.ledger, self.banks, self.T.n_banks
+        pol, led, banks = self.policy, self.ledger, self.banks
+        T = self.T
+        nb = T.n_banks_total
         if pol.ideal:
             return
         if pol.level == "ab":
-            if led.ab_pending <= 0:
+            if led.ab_pending.sum() <= 0:
                 return
             view = MaintenanceView(
-                now=t, n_banks=nb, budget=self.T.refresh_budget,
+                now=t, n_banks=nb, budget=T.refresh_budget,
                 lag=[0] * nb, demand=[0] * nb,
-                ready=[True] * nb, idle=[True] * nb,
+                ready=(banks.ref_until <= t).tolist(),
+                idle=(banks.free <= t).tolist(),
                 write_window=self.wbuf.drain, max_issues=1,
-                rank_due=led.ab_pending,
+                rank_due=int(led.ab_pending.sum()),
                 rank_quiet=bool((banks.free <= t).all()
-                                and (banks.ref_until <= t).all()))
+                                and (banks.ref_until <= t).all()),
+                n_ranks=T.n_ranks, n_channels=T.n_channels,
+                rank_of=self._rank_of, channel_of=self._chan_of,
+                ranks_due=tuple(int(x) for x in led.ab_pending))
             for d in pol.select(view):
                 if d.bank == ALL_BANKS:
-                    self._start_ab_refresh(t)
+                    for gr in self._ab_targets(d.rank):
+                        self._start_ab_refresh(gr, t)
             return
         # ---- per-bank policies
         wb = self.wbuf.per_bank
         view = MaintenanceView(
-            now=t, n_banks=nb, budget=self.T.refresh_budget,
+            now=t, n_banks=nb, budget=T.refresh_budget,
             lag=led.lag_all(t),
             demand=[len(self.read_q[b]) + int(wb[b]) for b in range(nb)],
             ready=(banks.ref_until <= t).tolist(),
             idle=(banks.free <= t).tolist(),
-            write_window=self.wbuf.drain, max_issues=1)
+            write_window=self.wbuf.drain, max_issues=1,
+            n_ranks=T.n_ranks, n_channels=T.n_channels,
+            rank_of=self._rank_of, channel_of=self._chan_of)
         for d in pol.select(view):
             self._start_pb_refresh(d.bank, t)
 
     # --------------------------------------------------- demand service
     def _pick_and_start(self, t: float) -> bool:
-        T, banks, bus, wbuf = self.T, self.banks, self.bus, self.wbuf
+        T, banks, wbuf = self.T, self.banks, self.wbuf
         started = False
         order = np.argsort(banks.free)   # favor longest-idle banks
         for b in order:
@@ -324,10 +367,14 @@ class DramSim:
             lat = T.row_hit if is_hit else T.row_miss
             if self.policy.sarp and t < banks.ref_until[b]:
                 lat += T.sarp_penalty    # peripheral sharing penalty
-            # bus serialization + turnaround
+            # the bank's channel bus: serialization + turnaround
+            bus = self.buses[self._chan_of[b]]
+            gr = self._rank_of[b]
             turn = 0.0
             if r.is_write != bus.last_op_write:
                 turn = T.tRTW if r.is_write else T.tWTR
+            if 0 <= bus.last_rank != gr:
+                turn += T.tRTR           # rank-to-rank bus handoff
             data_start = max(t + lat - T.tBL, bus.free + turn)
             done = data_start + T.tBL
             banks.free[b] = done + (T.tWR if r.is_write else 0.0)
@@ -335,6 +382,7 @@ class DramSim:
                 self._push(banks.free[b], "sched")  # wake at tWR end
             bus.free = done
             bus.last_op_write = r.is_write
+            bus.last_rank = gr
             banks.open_row[b] = r.row
             banks.open_sub[b] = r.sub
             self.stats["hits" if is_hit else "misses"] += 1
@@ -412,7 +460,9 @@ class DramSim:
 
         pol = resolve_policy(self._policy_spec)
         T = self.T
-        B, S = T.n_banks, T.n_subarrays
+        B, S = T.n_banks_total, T.n_subarrays
+        NB, R, NC = T.n_banks, T.n_ranks_total, T.n_channels
+        RB = T.n_ranks * NB              # banks per channel
 
         def tkq(ns: float) -> int:        # same quantization as TickTiming
             return max(1, int(ns / dt_ns + 0.5))
@@ -422,8 +472,10 @@ class DramSim:
         RFC_PB, RFC_AB = tkq(T.tRFC_pb), tkq(T.tRFC_ab)
         HIT, MISS = tkq(T.row_hit), tkq(T.row_miss)
         WR, TURN = tkq(T.tWR), tkq(T.tWTR)
+        RTR = tkq(T.tRTR)
         SARP_PEN = tkq(T.sarp_penalty)
         budget = T.refresh_budget
+        rank_phase = [gr * (REFI // R) for gr in range(R)]
 
         streams = quantize_streams(self.streams, dt_ns)
         C, mlp = len(streams), self.wl.mlp
@@ -458,9 +510,10 @@ class DramSim:
         ctr = [0] * B
         wpend = 0
         drain = False
-        last_op = False
-        ab_pending = 0
-        rank_drain = False
+        last_op = [False] * NC           # per-channel bus turnaround state
+        last_rank = [-1] * NC            # per-channel last-served rank
+        ab_pending = [0] * R             # per-rank all-bank refresh debt
+        rank_drain = [False] * R
         maxlag = 0
 
         reads = writes = hits = misses = refpb = refab = 0
@@ -483,10 +536,10 @@ class DramSim:
             refpb += 1
             maxlag = max(maxlag, abs(led.lag(b, float(t))))
 
-        def start_ab(t: int):
-            nonlocal ab_pending, rank_drain, refab
+        def start_ab(gr: int, t: int):
+            nonlocal refab
             end = t + RFC_AB
-            for b in range(B):
+            for b in range(gr * NB, (gr + 1) * NB):
                 ref_until[b] = end
                 if pol.sarp:
                     ref_sub[b] = ctr[b] % S
@@ -496,8 +549,8 @@ class DramSim:
                 else:
                     ref_sub[b] = -1
                     open_row[b] = -1
-            ab_pending -= 1
-            rank_drain = ab_pending > 0
+            ab_pending[gr] -= 1
+            rank_drain[gr] = ab_pending[gr] > 0
             refab += 1
 
         t = 0
@@ -546,33 +599,51 @@ class DramSim:
             # 2: write-drain watermark
             if wpend >= HI:
                 drain = True
-            # 3: rank refresh debt
-            if (not pol.ideal and pol.level == "ab" and t > 0
-                    and t % REFI == 0):
-                ab_pending += 1
-                rank_drain = True
+            # 3: rank refresh debt (per-rank, staggered tREFI/R apart)
+            if not pol.ideal and pol.level == "ab":
+                for gr in range(R):
+                    if (t > rank_phase[gr]
+                            and (t - rank_phase[gr]) % REFI == 0):
+                        ab_pending[gr] += 1
+                        rank_drain[gr] = True
             # 4: policy decision (pb lag accounting via the shared ledger)
             if not pol.ideal:
                 if pol.level == "ab":
-                    if ab_pending > 0:
+                    if sum(ab_pending) > 0:
                         quiet = (all(f <= t for f in bank_free)
                                  and all(r <= t for r in ref_until))
                         view = MaintenanceView(
                             now=float(t), n_banks=B, budget=budget,
-                            lag=[0] * B, demand=[0] * B, ready=[True] * B,
-                            idle=[True] * B, write_window=drain,
-                            max_issues=1, rank_due=ab_pending,
-                            rank_quiet=quiet)
+                            lag=[0] * B, demand=[0] * B,
+                            ready=[ref_until[b] <= t for b in range(B)],
+                            idle=[bank_free[b] <= t for b in range(B)],
+                            write_window=drain,
+                            max_issues=1, rank_due=sum(ab_pending),
+                            rank_quiet=quiet,
+                            n_ranks=T.n_ranks, n_channels=NC,
+                            rank_of=self._rank_of,
+                            channel_of=self._chan_of,
+                            ranks_due=tuple(ab_pending))
                         for dec in pol.select(view):
                             if dec.bank == ALL_BANKS:
-                                start_ab(t)
+                                if dec.rank >= 0:
+                                    # debt-free ranks are skipped so a
+                                    # buggy policy can't go negative
+                                    if ab_pending[dec.rank] > 0:
+                                        start_ab(dec.rank, t)
+                                else:
+                                    for gr in range(R):
+                                        if ab_pending[gr] > 0:
+                                            start_ab(gr, t)
                 else:
                     view = led.view(
                         float(t),
                         demand=[len(q[b]) for b in range(B)],
                         write_window=drain,
                         ready=[ref_until[b] <= t for b in range(B)],
-                        idle=[bank_free[b] <= t for b in range(B)])
+                        idle=[bank_free[b] <= t for b in range(B)],
+                        n_ranks=T.n_ranks, n_channels=NC,
+                        rank_of=self._rank_of, channel_of=self._chan_of)
                     decs = pol.select(view)
                     for dec in decs:
                         if dec.bank == ALL_BANKS:
@@ -582,11 +653,15 @@ class DramSim:
                                 "point")
                     for b in led.apply(decs, float(t)):
                         start_pb(b, t)
-            # 5: occupancy-aware arbitration (one start per tick)
-            if not rank_drain:
+            # 5: occupancy-aware arbitration (one start per CHANNEL per
+            # tick; scores snapshot `drain` before any serve this tick)
+            drain_arb = drain
+            for ch in range(NC):
                 best, best_score = -1, -1
-                for b in range(B):
+                for b in range(ch * RB, (ch + 1) * RB):
                     if not q[b]:
+                        continue
+                    if rank_drain[b // NB]:
                         continue
                     arr, row, sub, isw, core = q[b][0]
                     if bank_free[b] > t:
@@ -594,7 +669,7 @@ class DramSim:
                     if ref_until[b] > t and not (pol.sarp
                                                  and ref_sub[b] != sub):
                         continue
-                    sc = (W_WRITE if (drain and isw) else 0) \
+                    sc = (W_WRITE if (drain_arb and isw) else 0) \
                         + W_OCC * min(len(q[b]), OCC_CAP) \
                         + (W_HIT if row == open_row[b] else 0) \
                         + min(t - arr, AGE_CAP)
@@ -602,16 +677,20 @@ class DramSim:
                         best, best_score = b, sc
                 if best >= 0:
                     b = best
+                    gr = b // NB
                     arr, row, sub, isw, core = q[b].pop(0)
                     hit = row == open_row[b]
                     lat = HIT if hit else MISS
                     if pol.sarp and ref_until[b] > t:
                         lat += SARP_PEN
-                    if isw != last_op:
+                    if isw != last_op[ch]:
                         lat += TURN
+                    if 0 <= last_rank[ch] != gr:
+                        lat += RTR       # rank-to-rank bus handoff
                     done = t + lat
                     bank_free[b] = done + (WR if isw else 0)
-                    last_op = isw
+                    last_op[ch] = isw
+                    last_rank[ch] = gr
                     open_row[b] = row
                     open_sub[b] = sub
                     if hit:
@@ -648,13 +727,14 @@ class DramSim:
     def run(self) -> SimResult:
         self.policy = resolve_policy(self._policy_spec)
         T, pol = self.T, self.policy
-        nb, ncore = T.n_banks, self.wl.n_cores
+        nb, ncore = T.n_banks_total, self.wl.n_cores
+        R = T.n_ranks_total
 
         # ---- machine state
         self._heap: list = []
         self._seq = 0
         self.banks = BankState(nb)
-        self.bus = BusState()
+        self.buses = [BusState() for _ in range(T.n_channels)]
         self.wbuf = WriteBuffer(nb, self.wbuf_cap, self.wbuf_hi, self.wbuf_lo)
         self.ledger = RefreshLedger(T)
         self.read_q: list[list[_Req]] = [[] for _ in range(nb)]
@@ -676,7 +756,9 @@ class DramSim:
             self._push(0.0, "core", c)
         if not pol.ideal:
             if pol.level == "ab":
-                self._push(T.tREFI, "ab_due")
+                # per-rank debt, staggered tREFI/R apart across ranks
+                for gr in range(R):
+                    self._push(T.tREFI + gr * T.tREFI / R, "ab_due", gr)
             # pb due times are computed analytically via the ledger; the
             # periodic tick only guarantees postponed refreshes get retried
             self._push(T.tREFI_pb, "tick")
@@ -689,9 +771,9 @@ class DramSim:
             if guard > 20_000_000:
                 raise RuntimeError("simulator runaway")
             if kind == "ab_due":
-                self.ledger.ab_pending += 1
-                self.ledger.rank_drain = True
-                self._push(t + T.tREFI, "ab_due")
+                self.ledger.ab_pending[data] += 1
+                self.ledger.rank_drain[data] = True
+                self._push(t + T.tREFI, "ab_due", data)
             elif kind == "tick":
                 self._push(t + T.tREFI_pb, "tick")
             elif kind == "done":

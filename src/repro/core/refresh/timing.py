@@ -11,8 +11,10 @@ from dataclasses import dataclass, field
 @dataclass(frozen=True)
 class DramTiming:
     density_gb: int = 8
-    n_banks: int = 8
+    n_banks: int = 8              # banks PER RANK
     n_subarrays: int = 8          # subarrays exposed for SARP
+    n_ranks: int = 1              # ranks per channel
+    n_channels: int = 1           # channels (one data bus each)
 
     # core timings (ns)
     tRCD: float = 13.75           # activate -> column
@@ -22,6 +24,7 @@ class DramTiming:
     tWR: float = 15.0             # write recovery
     tWTR: float = 7.5             # write->read turnaround
     tRTW: float = 7.5             # read->write turnaround
+    tRTR: float = 3.0             # rank-to-rank bus turnaround (ODT swap)
 
     # refresh
     tREFI: float = 7812.5         # per-rank refresh interval
@@ -35,8 +38,29 @@ class DramTiming:
     sarp_penalty: float = 4.5
 
     @property
+    def n_ranks_total(self) -> int:
+        """Global rank count: every (channel, rank) pair. Global rank
+        index gr = channel * n_ranks + rank; global bank index
+        gb = gr * n_banks + bank."""
+        return self.n_channels * self.n_ranks
+
+    @property
+    def n_banks_total(self) -> int:
+        return self.n_ranks_total * self.n_banks
+
+    @property
     def tREFI_pb(self) -> float:
-        return self.tREFI / self.n_banks
+        """Per-bank refresh cadence: tREFI spread uniformly over every
+        bank in the hierarchy (reduces to tREFI / n_banks at one rank)."""
+        return self.tREFI / self.n_banks_total
+
+    def rank_of(self, gb: int) -> int:
+        """Global rank index of global bank `gb`."""
+        return gb // self.n_banks
+
+    def channel_of(self, gb: int) -> int:
+        """Channel index of global bank `gb`."""
+        return gb // (self.n_ranks * self.n_banks)
 
     @property
     def row_hit(self) -> float:

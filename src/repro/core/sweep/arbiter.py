@@ -24,7 +24,9 @@ bit 25 — max score < 2**26.
 Eligibility mirrors `DramSim._bank_available`: the bank is not busy with a
 demand access, not mid-refresh (unless the policy has the SARP trait and
 the request targets a different subarray than the one refreshing), and the
-rank is not draining for an all-bank refresh.
+bank's OWN rank is not draining for an all-bank refresh — `rank_drain` is
+a per-bank [G, B] plane (each bank carries its global rank's drain flag),
+so with multiple ranks one draining rank masks only its own banks.
 """
 from __future__ import annotations
 
@@ -45,14 +47,15 @@ def arbiter_scores(xp, t, *, has_req, head_row, head_sub, head_arrive,
 
     [G, B] int32: head_row, head_sub, head_arrive, bank_free, ref_until,
                   ref_sub, open_row (+ occ when given: queue depth)
-    [G, B] bool : has_req, head_is_write
-    [G] bool    : drain, sarp, rank_drain
+    [G, B] bool : has_req, head_is_write, rank_drain (per-bank plane:
+                  each bank carries its global rank's drain flag)
+    [G] bool    : drain, sarp
     t           : scalar tick
     """
     mid_ref = ref_until > t
     avail = ((bank_free <= t)
              & (~mid_ref | (sarp[:, None] & (ref_sub != head_sub))))
-    elig = has_req & avail & ~rank_drain[:, None]
+    elig = has_req & avail & ~rank_drain
     age = xp.minimum(t - head_arrive, AGE_CAP)
     score = (xp.where(drain[:, None] & head_is_write, W_WRITE, 0)
              + xp.where(head_row == open_row, W_HIT, 0) + age)
@@ -68,7 +71,8 @@ def arbiter_scores_masked(t, *, has_req, idle, ready, head_row, head_sub,
     """`arbiter_scores`, restated over precomputed availability masks —
     the batched numpy backend's per-tick fast path (``idle`` must equal
     ``bank_free <= t`` and ``ready`` must equal ``ref_until <= t`` at the
-    same instant; ``sarp_col`` is the [G, 1] SARP trait column and
+    same instant; ``sarp_col`` is the [G, 1] SARP trait column,
+    ``rank_drain`` the per-bank [G, B] drain plane, and
     ``rank_can_drain`` statically disables the rank-drain gate for grids
     without rank-level policies). Kept in this module, next to the shared
     definition, so the two formulations are edited in lock-step;
@@ -76,7 +80,7 @@ def arbiter_scores_masked(t, *, has_req, idle, ready, head_row, head_sub,
     bit-identical."""
     elig = has_req & idle & (ready | (sarp_col & (ref_sub != head_sub)))
     if rank_can_drain:
-        elig &= ~rank_drain[:, None]
+        elig &= ~rank_drain
     base = np.minimum(t - head_arrive, AGE_CAP) \
         + np.where(head_row == open_row, W_HIT, 0)
     if occ is not None:

@@ -12,26 +12,41 @@ time with vectorized numpy (policy decisions included — see
 `sweep.policies`); the availability/arbitration inner step also has a
 jax/pallas kernel (`repro.kernels.sweep_arbiter`) for accelerator runs.
 
-Tick semantics (the contract every backend implements identically):
+State is stacked over GLOBAL banks: every cell carries a full
+[channel, rank, bank] hierarchy (`SweepSpec.n_channels` x `n_ranks` x
+`n_banks`), flattened to ``gb = (channel * n_ranks + rank) * n_banks +
+bank`` so the state arrays are ``[G, n_banks_total]`` with rank/channel
+id planes (`_Grid.rank_of_b` / `chan_of_b`). The default 1x1 hierarchy
+reproduces the historical flat single-rank engine bit-for-bit.
+
+Tick semantics (the contract every backend implements identically;
+`docs/tick-contract.md` is the normative spec):
 
   * Time is an integer tick counter; one tick = `dt_ns` (default 6 ns =
-    tBL, so the shared data bus serializes to at most one request START
-    per cell per tick). All derived timings quantize via
-    ``max(1, round(ns / dt_ns))`` — all-integer state means the scalar
-    oracle, the batched numpy backend, and the jax/pallas arbiter are
-    **bit-identical**, not merely close.
+    tBL, so each channel's data bus serializes to at most one request
+    START per cell per channel per tick). All derived timings quantize
+    via ``max(1, round(ns / dt_ns))`` — all-integer state means the
+    scalar oracle, the batched numpy backend, and the jax/pallas arbiter
+    are **bit-identical**, not merely close.
   * Each tick, per active cell, in order:
       A. arrivals join their bank FIFO; pending-write count may trip the
          write-drain high watermark,
-      B. rank-level (all-bank) refresh debt accrues every tREFI for
-         level='ab' policies,
+      B. all-bank refresh debt accrues every tREFI PER GLOBAL RANK for
+         level='ab' policies, rank r's accrual staggered r * tREFI/R
+         after rank 0's,
       C. the cell's policy decides maintenance against a MaintenanceView
          built from the stacked state (vectorized for the built-in policy
          classes, real `select()` for custom registrations), and the
          decisions are applied exactly like `DramSim`'s adapter
-         (`_start_pb_refresh` / `_start_ab_refresh`),
+         (`_start_pb_refresh` / `_start_ab_refresh`); an all-bank start
+         covers ONE rank and drains only that rank's banks,
       D. arbitration starts at most one eligible head-of-queue request
-         (drain-writes > row hits > oldest; see `sweep.arbiter`),
+         PER CHANNEL, channels in ascending index order (drain-writes >
+         occupancy > row hits > oldest; see `sweep.arbiter`). Scores are
+         computed once per tick (the write-drain flag is snapshotted
+         before any serve); each channel tracks its own read/write
+         turnaround state, and switching ranks within a channel adds the
+         tRTR rank-to-rank penalty,
       E. a cell deactivates once every request has been issued; its
          makespan is the completion tick of the last data burst.
   * Differences vs `DramSim`'s event-driven float mode, accepted for
@@ -105,7 +120,8 @@ from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
                                       W_WRITE, arbiter_scores,
                                       arbiter_scores_masked)
 from repro.core.sweep.policies import (KIND_AB, KIND_CUSTOM, KIND_IDEAL,
-                                       classify, could_pick, select_batch)
+                                       KIND_STAG, classify, could_pick,
+                                       select_batch)
 
 #: read-latency histogram width (ticks); larger waits clip into the top bin
 MAX_LAT_TICKS = 4095
@@ -115,7 +131,11 @@ _PAD_ARRIVE = np.int32(1 << 30)       # queue padding: never arrives
 # ------------------------------------------------------------------ spec
 @dataclass(frozen=True)
 class TickTiming:
-    """A `DramTiming` quantized to integer ticks of `dt_ns`."""
+    """A `DramTiming` quantized to integer ticks of `dt_ns`.
+
+    `REFI_PB` spreads tREFI uniformly over every bank in the hierarchy
+    (n_channels x n_ranks x n_banks), so per-bank refresh phases — and
+    hence whole ranks' refresh windows — stagger across ranks."""
     density_gb: int
     dt_ns: float
     REFI: int
@@ -126,24 +146,29 @@ class TickTiming:
     MISS: int
     WR: int
     TURN: int
+    RTR: int                     # rank-to-rank bus turnaround
     SARP_PEN: int
     budget: int
 
     @classmethod
     def from_density(cls, density_gb: int, dt_ns: float = 6.0,
-                     n_banks: int = 8, n_subarrays: int = 8) -> "TickTiming":
+                     n_banks: int = 8, n_subarrays: int = 8,
+                     n_ranks: int = 1, n_channels: int = 1) -> "TickTiming":
         T = timing_for_density(density_gb, n_banks=n_banks,
-                               n_subarrays=n_subarrays)
+                               n_subarrays=n_subarrays, n_ranks=n_ranks,
+                               n_channels=n_channels)
 
         def tk(ns: float) -> int:
             return max(1, int(ns / dt_ns + 0.5))
 
         refi = tk(T.tREFI)
         return cls(density_gb=density_gb, dt_ns=dt_ns, REFI=refi,
-                   REFI_PB=max(1, refi // n_banks), RFC_PB=tk(T.tRFC_pb),
+                   REFI_PB=max(1, refi // T.n_banks_total),
+                   RFC_PB=tk(T.tRFC_pb),
                    RFC_AB=tk(T.tRFC_ab), HIT=tk(T.row_hit),
                    MISS=tk(T.row_miss), WR=tk(T.tWR), TURN=tk(T.tWTR),
-                   SARP_PEN=tk(T.sarp_penalty), budget=T.refresh_budget)
+                   RTR=tk(T.tRTR), SARP_PEN=tk(T.sarp_penalty),
+                   budget=T.refresh_budget)
 
 
 @dataclass(frozen=True)
@@ -157,6 +182,15 @@ class SweepSpec:
     consumes closed-loop scenarios (`ClosedDemand` / names registered via
     `register_closed_scenario`) and runs the MLP-limited front-end — the
     configuration whose `weighted_speedup` matches the paper's metric.
+
+    Pass policies as REGISTRY NAMES: every backend then resolves a fresh
+    instance per cell, which is what keeps stateful policies (round-robin
+    pointers in `ref_pb`/`staggered_ab`) bit-identical across backends.
+    A policy INSTANCE on the axis is resolved as-is — its mutable state
+    is shared across the scalar backend's cells (and across repeated
+    sweeps), which the vectorized backends cannot mirror; instances are
+    only safe on single-cell specs ("one policy instance drives exactly
+    one engine run", `RefreshPolicy.select`).
     """
     policies: Sequence[str]
     scenarios: Sequence[Union[str, Trace, ClosedDemand]]
@@ -164,8 +198,10 @@ class SweepSpec:
     reqs: int = 800
     seed: int = 0
     dt_ns: float = 6.0
-    n_banks: int = 8
+    n_banks: int = 8             # banks PER RANK
     n_subarrays: int = 8
+    n_ranks: int = 1             # ranks per channel
+    n_channels: int = 1          # independent data buses
     wbuf_hi: int = 48            # pending-write drain high watermark
     wbuf_lo: int = 16            # drain low watermark
     wbuf_cap: int = 64           # write-buffer capacity (closed-loop issue
@@ -179,6 +215,14 @@ class SweepSpec:
         object.__setattr__(self, "densities", tuple(self.densities))
         if self.mode not in ("open", "closed"):
             raise ValueError(f"unknown sweep mode {self.mode!r}")
+
+    @property
+    def n_ranks_total(self) -> int:
+        return self.n_ranks * self.n_channels
+
+    @property
+    def n_banks_total(self) -> int:
+        return self.n_ranks_total * self.n_banks
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -304,8 +348,15 @@ class _Grid:
                 "share one axis with another tool cannot be swept itself")
         self.spec = spec
         self.cells = spec.cells()
-        G, B = len(self.cells), spec.n_banks
+        G, B = len(self.cells), spec.n_banks_total
         self.G, self.B, self.S = G, B, spec.n_subarrays
+        # hierarchy planes: global bank gb -> global rank / channel
+        self.NB, self.NR, self.NC = spec.n_banks, spec.n_ranks, spec.n_channels
+        self.R = spec.n_ranks_total
+        self.rank_of_b = (np.arange(B) // self.NB).astype(np.int32)
+        self.chan_of_b = (np.arange(B) // (self.NR * self.NB)).astype(np.int32)
+        self.rank_of_t = tuple(int(x) for x in self.rank_of_b)
+        self.chan_of_t = tuple(int(x) for x in self.chan_of_b)
         self.closed = spec.mode == "closed"
 
         split = None
@@ -318,7 +369,7 @@ class _Grid:
                         "spec has mode='closed'; pass a closed scenario "
                         "name or a ClosedDemand")
                 dem = s if isinstance(s, ClosedDemand) else \
-                    make_closed_demand(s, spec.n_banks, spec.n_subarrays,
+                    make_closed_demand(s, B, spec.n_subarrays,
                                        spec.reqs, spec.seed, spec.dt_ns)
                 demands[_scenario_name(s)] = dem
             self.demands = demands
@@ -331,7 +382,7 @@ class _Grid:
                         "but the spec has mode='open'; pass "
                         "SweepSpec(mode='closed')")
                 tr = s if isinstance(s, Trace) else make_trace(
-                    s, spec.n_banks, spec.n_subarrays, spec.reqs, spec.seed)
+                    s, B, spec.n_subarrays, spec.reqs, spec.seed)
                 traces[_scenario_name(s)] = tr
             self.traces = traces
 
@@ -354,7 +405,8 @@ class _Grid:
             self.n_per_bank = np.zeros((G, B), np.int32)
 
         self.timing = {d: TickTiming.from_density(
-            d, spec.dt_ns, spec.n_banks, spec.n_subarrays)
+            d, spec.dt_ns, spec.n_banks, spec.n_subarrays, spec.n_ranks,
+            spec.n_channels)
             for d in spec.densities}
 
         # per-cell constants
@@ -366,9 +418,12 @@ class _Grid:
         self.urgent_at = np.ones(G, np.int32)
         self.budget = ints()
         for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR", "TURN",
-                  "SARP_PEN"):
+                  "RTR", "SARP_PEN"):
             setattr(self, f, ints())
         self.phase = np.zeros((G, B), np.int32)
+        # per-(cell, global rank) all-bank debt accrual phase: rank r's
+        # debt lands r * tREFI/R after rank 0's (cross-rank staggering)
+        self.rank_phase = np.zeros((G, self.R), np.int32)
         self.customs: list[tuple[int, object]] = []
 
         if self.closed:
@@ -397,9 +452,10 @@ class _Grid:
             self.urgent_at[g] = params.get("urgent_at", 1)
             self.budget[g] = tk.budget
             for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR",
-                      "TURN", "SARP_PEN"):
+                      "TURN", "RTR", "SARP_PEN"):
                 getattr(self, f)[g] = getattr(tk, f)
             self.phase[g] = np.arange(B) * tk.REFI_PB
+            self.rank_phase[g] = np.arange(self.R) * (tk.REFI // self.R)
             if kind == KIND_CUSTOM:
                 self.customs.append((g, pol))
             if self.closed:
@@ -421,6 +477,8 @@ class _Grid:
                     self.q_row[g, b, :n] = row
                     self.q_sub[g, b, :n] = sub
                     self.q_write[g, b, :n] = isw
+
+        self.has_stag = bool((self.kind == KIND_STAG).any())
 
         svc = int(self.MISS.max() + self.WR.max() + self.TURN.max() + 2)
         if self.closed:
@@ -460,7 +518,8 @@ def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
     p, s, d = grid.cells[g]
     spec = grid.spec
     T = timing_for_density(d, n_banks=spec.n_banks,
-                           n_subarrays=spec.n_subarrays)
+                           n_subarrays=spec.n_subarrays,
+                           n_ranks=spec.n_ranks, n_channels=spec.n_channels)
     dt = spec.dt_ns
     if core_finish is None:
         mode, cf = "open", ()
@@ -489,6 +548,8 @@ def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
 def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
     spec = grid.spec
     G, B, L, S = grid.G, grid.B, grid.L, grid.S
+    NB, R, NC = grid.NB, grid.R, grid.NC
+    RBC = grid.NR * NB               # banks per channel
     HI, LO = spec.wbuf_hi, spec.wbuf_lo
 
     score_fn = None
@@ -516,11 +577,13 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
     n_arrived = np.zeros((G, B), np.int32)
     n_served = np.zeros((G, B), np.int32)
     rr = np.zeros(G, np.int32)
+    ab_rr = np.zeros(G, np.int32)          # staggered_ab rank pointer
     wpend = np.zeros(G, np.int32)
     drain = np.zeros(G, bool)
-    last_op = np.zeros(G, bool)
-    ab_pending = np.zeros(G, np.int32)
-    rank_drain = np.zeros(G, bool)
+    last_op = np.zeros((G, NC), bool)      # per-channel bus turnaround
+    last_rank = np.full((G, NC), -1, np.int32)
+    ab_pending = np.zeros((G, R), np.int32)
+    rank_drain = np.zeros((G, R), bool)
     active = grid.n_tot > 0
     n_left = grid.n_tot.astype(np.int64).copy()
     kind_active = np.where(active, grid.kind, KIND_IDEAL)
@@ -552,7 +615,11 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
     sarp_g, kind_g = grid.sarp, grid.kind
     budget_g, wrp_g, urgent_g = grid.budget, grid.wrp, grid.urgent_at
     level_ab = grid.level_ab
-    refi_values = sorted({int(v) for v in grid.REFI[level_ab]})
+    rank_phase_g = grid.rank_phase          # [G, R] accrual stagger
+    #: ticks where SOME ab cell's rank accrues debt: (REFI, phase) pairs
+    accrual_keys = sorted({(int(grid.REFI[g]), int(p))
+                           for g in np.nonzero(level_ab)[0]
+                           for p in grid.rank_phase[g]})
     has_drain_block = has_ab or bool(grid.customs)
     nav = next_arrive.ravel()
     nwv = next_w.ravel()
@@ -575,9 +642,13 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
             nwv[gf] = qw[gf, sl]
         drain |= wpend >= HI
 
-        # ---- B: rank refresh debt for all-bank policies
-        if has_ab and t > 0 and any(t % R == 0 for R in refi_values):
-            acc = active & level_ab & (t % grid.REFI == 0)
+        # ---- B: per-rank refresh debt for all-bank policies (rank r
+        # accrues r * tREFI/R after rank 0 — cross-rank staggering)
+        if has_ab and any(t > p and (t - p) % rv == 0
+                          for rv, p in accrual_keys):
+            acc = ((active & level_ab)[:, None]
+                   & (t > rank_phase_g)
+                   & ((t - rank_phase_g) % REFI_col == 0))
             ab_pending += acc
             rank_drain |= acc
 
@@ -597,40 +668,65 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
                 np, kind=np.where(need, kind_active, KIND_IDEAL), lag=lag,
                 ready=ready, idle=idle, demand=demand, write_window=drain,
                 budget=budget_g, wrp=wrp_g, urgent_at=urgent_g, rr=rr,
-                gate=True)
+                gate=True, nb=NB)
             if not picks.any():
                 picks = None
 
-        start_ab = None
+        start_ab_r = None
         if has_ab:
-            pend = active & (kind_g == KIND_AB) & (ab_pending > 0)
+            quiet_r = (idle.reshape(G, R, NB).all(axis=2)
+                       & ready.reshape(G, R, NB).all(axis=2))
+            pend = (active & (kind_g == KIND_AB))[:, None] & (ab_pending > 0)
             if pend.any():
-                start_ab = pend & idle.all(axis=1) & ready.all(axis=1)
+                start_ab_r = pend & quiet_r
+            if grid.has_stag:       # staggered_ab: rank round-robin
+                is_st = active & (kind_g == KIND_STAG)
+                idx = ab_rr % R
+                chan_ready = ready.reshape(G, NC, RBC).all(axis=2)
+                elig = (is_st & (ab_pending[arG, idx] > 0)
+                        & quiet_r[arG, idx]
+                        & chan_ready[arG, idx // grid.NR])
+                if elig.any():
+                    if start_ab_r is None:
+                        start_ab_r = np.zeros((G, R), bool)
+                    start_ab_r[arG[elig], idx[elig]] = True
+                ab_rr = ab_rr + elig
 
         for g, pol in grid.customs:          # non-vectorizable registrations
             if not active[g]:
                 continue
             if pol.level == "ab":
-                if ab_pending[g] <= 0:
+                if ab_pending[g].sum() <= 0:
                     continue
                 quiet_g = bool(idle[g].all() and ready[g].all())
                 view = MaintenanceView(
                     now=float(t), n_banks=B, budget=int(grid.budget[g]),
-                    lag=[0] * B, demand=[0] * B, ready=[True] * B,
-                    idle=[True] * B, write_window=bool(drain[g]),
-                    max_issues=1, rank_due=int(ab_pending[g]),
-                    rank_quiet=quiet_g)
+                    lag=[0] * B, demand=[0] * B,
+                    ready=ready[g].tolist(), idle=idle[g].tolist(),
+                    write_window=bool(drain[g]),
+                    max_issues=1, rank_due=int(ab_pending[g].sum()),
+                    rank_quiet=quiet_g,
+                    n_ranks=grid.NR, n_channels=NC,
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+                    ranks_due=tuple(int(x) for x in ab_pending[g]))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
-                        if start_ab is None:
-                            start_ab = np.zeros(G, bool)
-                        start_ab[g] = True
+                        if start_ab_r is None:
+                            start_ab_r = np.zeros((G, R), bool)
+                        if dec.rank >= 0:
+                            # debt-free ranks skipped (no negative debt)
+                            if ab_pending[g, dec.rank] > 0:
+                                start_ab_r[g, dec.rank] = True
+                        else:
+                            start_ab_r[g] |= ab_pending[g] > 0
             else:
                 view = MaintenanceView(
                     now=float(t), n_banks=B, budget=int(grid.budget[g]),
                     lag=lag[g].tolist(), demand=demand[g].tolist(),
                     ready=ready[g].tolist(), idle=idle[g].tolist(),
-                    write_window=bool(drain[g]), max_issues=1)
+                    write_window=bool(drain[g]), max_issues=1,
+                    n_ranks=grid.NR, n_channels=NC,
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
@@ -640,17 +736,17 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
                         picks = np.zeros((G, B), bool)
                     picks[g, dec.bank] = True
 
-        if start_ab is not None and start_ab.any():
-            m = np.broadcast_to(start_ab[:, None], (G, B))
+        if start_ab_r is not None and start_ab_r.any():
+            m = np.repeat(start_ab_r, NB, axis=1)
             new_sub = (ctr % S).astype(np.int32)
             ref_until = np.where(m, (t + grid.RFC_AB)[:, None], ref_until)
             ref_sub = np.where(m, np.where(sarp_c, new_sub, -1), ref_sub)
             close = m & np.where(sarp_c, open_sub == new_sub, True)
             open_row = np.where(close, -1, open_row)
             ctr = ctr + (m & sarp_c)
-            ab_pending -= start_ab
-            rank_drain = np.where(start_ab, ab_pending > 0, rank_drain)
-            refab += start_ab
+            ab_pending -= start_ab_r
+            rank_drain = np.where(start_ab_r, ab_pending > 0, rank_drain)
+            refab += start_ab_r.sum(axis=1)
             ready &= ~m                     # tRFC_ab >= 1: mid-refresh now
 
         if picks is not None:
@@ -669,42 +765,50 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
                 maxlag, np.where(picks, np.abs(lag_after), 0).max(axis=1))
             ready &= ~picks                 # tRFC_pb >= 1: mid-refresh now
 
-        # ---- D: arbitration — at most one request start per cell
+        # ---- D: arbitration — at most one request start per channel
         # (`ready`/`idle` mirror ref_until/bank_free vs t after the refresh
-        # applications above, so the shared scoring reduces to these masks)
+        # applications above, so the shared scoring reduces to these masks;
+        # scores — incl. the drain flag — are snapshotted before any serve)
         has_req = demand > 0
         if not has_req.any():
             t += 1
             continue
+        rank_drain_b = np.repeat(rank_drain, NB, axis=1)
         if score_fn is not None:
             score = np.asarray(score_fn(
                 t, has_req=has_req, head_row=h_row, head_sub=h_sub,
                 head_arrive=h_arr, head_is_write=h_w, bank_free=bank_free,
                 ref_until=ref_until, ref_sub=ref_sub, open_row=open_row,
-                drain=drain, sarp=sarp_g, rank_drain=rank_drain))
+                drain=drain, sarp=sarp_g, rank_drain=rank_drain_b))
         else:
             score = arbiter_scores_masked(
                 t, has_req=has_req, idle=idle, ready=ready, head_row=h_row,
                 head_sub=h_sub, head_arrive=h_arr, head_is_write=h_w,
                 ref_sub=ref_sub, open_row=open_row, drain=drain,
-                sarp_col=sarp_c, rank_drain=rank_drain,
+                sarp_col=sarp_c, rank_drain=rank_drain_b,
                 rank_can_drain=has_drain_block)
-        bs_all = score.argmax(axis=1)
-        ok = score[arG, bs_all] >= 0
-
-        if ok.any():
+        for ch in range(NC):
+            sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
+            bs_loc = sc_ch.argmax(axis=1)
+            ok = sc_ch[arG, bs_loc] >= 0
+            if not ok.any():
+                continue
             gs = np.nonzero(ok)[0]
-            bs = bs_all[gs]
+            bs = bs_loc[gs] + ch * RBC
             row, sub = h_row[gs, bs], h_sub[gs, bs]
             arr, isw = h_arr[gs, bs], h_w[gs, bs]
             hit = row == open_row[gs, bs]
             lat = np.where(hit, grid.HIT[gs], grid.MISS[gs])
             lat = lat + np.where(grid.sarp[gs] & (ref_until[gs, bs] > t),
                                  grid.SARP_PEN[gs], 0)
-            lat = lat + np.where(isw != last_op[gs], grid.TURN[gs], 0)
+            lat = lat + np.where(isw != last_op[gs, ch], grid.TURN[gs], 0)
+            gr_b = bs // NB
+            lr = last_rank[gs, ch]
+            lat = lat + np.where((lr >= 0) & (lr != gr_b), grid.RTR[gs], 0)
             done = t + lat
             bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
-            last_op[gs] = isw
+            last_op[gs, ch] = isw
+            last_rank[gs, ch] = gr_b
             open_row[gs, bs] = row
             open_sub[gs, bs] = sub
             n_served[gs, bs] += 1
@@ -752,6 +856,8 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
     bank queues fed by the cores (contract in the module docstring)."""
     spec = grid.spec
     G, B, S = grid.G, grid.B, grid.S
+    NB, R, NC = grid.NB, grid.R, grid.NC
+    RBC = grid.NR * NB               # banks per channel
     C, N, K = grid.C, grid.N, grid.K
     LQ = grid.LQ
     QM = LQ - 1
@@ -799,11 +905,13 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
     ctr = np.zeros((G, B), np.int32)
     issued = np.zeros((G, B), np.int32)
     rr = np.zeros(G, np.int32)
+    ab_rr = np.zeros(G, np.int32)          # staggered_ab rank pointer
     wpend = np.zeros(G, np.int32)
     drain = np.zeros(G, bool)
-    last_op = np.zeros(G, bool)
-    ab_pending = np.zeros(G, np.int32)
-    rank_drain = np.zeros(G, bool)
+    last_op = np.zeros((G, NC), bool)      # per-channel bus turnaround
+    last_rank = np.full((G, NC), -1, np.int32)
+    ab_pending = np.zeros((G, R), np.int32)
+    rank_drain = np.zeros((G, R), bool)
     active = (remaining > 0).any(axis=1)
     kind_active = np.where(active, grid.kind, KIND_IDEAL)
     has_ab = bool(grid.level_ab.any())
@@ -826,7 +934,11 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
     sarp_g, kind_g = grid.sarp, grid.kind
     budget_g, wrp_g, urgent_g = grid.budget, grid.wrp, grid.urgent_at
     level_ab = grid.level_ab
-    refi_values = sorted({int(v) for v in grid.REFI[level_ab]})
+    rank_phase_g = grid.rank_phase          # [G, R] accrual stagger
+    #: ticks where SOME ab cell's rank accrues debt: (REFI, phase) pairs
+    accrual_keys = sorted({(int(grid.REFI[g]), int(p))
+                           for g in np.nonzero(level_ab)[0]
+                           for p in grid.rank_phase[g]})
     has_drain_block = has_ab or bool(grid.customs)
     arG = np.arange(G)
     arB = np.arange(B)
@@ -890,9 +1002,13 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
         # ---- 2: write-drain watermark
         drain |= wpend >= HI
 
-        # ---- 3: rank refresh debt for all-bank policies
-        if has_ab and t > 0 and any(t % R == 0 for R in refi_values):
-            acc = active & level_ab & (t % grid.REFI == 0)
+        # ---- 3: per-rank refresh debt for all-bank policies (rank r
+        # accrues r * tREFI/R after rank 0 — cross-rank staggering)
+        if has_ab and any(t > p and (t - p) % rv == 0
+                          for rv, p in accrual_keys):
+            acc = ((active & level_ab)[:, None]
+                   & (t > rank_phase_g)
+                   & ((t - rank_phase_g) % REFI_col == 0))
             ab_pending += acc
             rank_drain |= acc
 
@@ -910,40 +1026,65 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
                 np, kind=np.where(need, kind_active, KIND_IDEAL), lag=lag,
                 ready=ready, idle=idle, demand=demand, write_window=drain,
                 budget=budget_g, wrp=wrp_g, urgent_at=urgent_g, rr=rr,
-                gate=True)
+                gate=True, nb=NB)
             if not picks.any():
                 picks = None
 
-        start_ab = None
+        start_ab_r = None
         if has_ab:
-            pend = active & (kind_g == KIND_AB) & (ab_pending > 0)
+            quiet_r = (idle.reshape(G, R, NB).all(axis=2)
+                       & ready.reshape(G, R, NB).all(axis=2))
+            pend = (active & (kind_g == KIND_AB))[:, None] & (ab_pending > 0)
             if pend.any():
-                start_ab = pend & idle.all(axis=1) & ready.all(axis=1)
+                start_ab_r = pend & quiet_r
+            if grid.has_stag:       # staggered_ab: rank round-robin
+                is_st = active & (kind_g == KIND_STAG)
+                idx = ab_rr % R
+                chan_ready = ready.reshape(G, NC, RBC).all(axis=2)
+                elig = (is_st & (ab_pending[arG, idx] > 0)
+                        & quiet_r[arG, idx]
+                        & chan_ready[arG, idx // grid.NR])
+                if elig.any():
+                    if start_ab_r is None:
+                        start_ab_r = np.zeros((G, R), bool)
+                    start_ab_r[arG[elig], idx[elig]] = True
+                ab_rr = ab_rr + elig
 
         for g, pol in grid.customs:          # non-vectorizable registrations
             if not active[g]:
                 continue
             if pol.level == "ab":
-                if ab_pending[g] <= 0:
+                if ab_pending[g].sum() <= 0:
                     continue
                 quiet_g = bool(idle[g].all() and ready[g].all())
                 view = MaintenanceView(
                     now=float(t), n_banks=B, budget=int(grid.budget[g]),
-                    lag=[0] * B, demand=[0] * B, ready=[True] * B,
-                    idle=[True] * B, write_window=bool(drain[g]),
-                    max_issues=1, rank_due=int(ab_pending[g]),
-                    rank_quiet=quiet_g)
+                    lag=[0] * B, demand=[0] * B,
+                    ready=ready[g].tolist(), idle=idle[g].tolist(),
+                    write_window=bool(drain[g]),
+                    max_issues=1, rank_due=int(ab_pending[g].sum()),
+                    rank_quiet=quiet_g,
+                    n_ranks=grid.NR, n_channels=NC,
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+                    ranks_due=tuple(int(x) for x in ab_pending[g]))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
-                        if start_ab is None:
-                            start_ab = np.zeros(G, bool)
-                        start_ab[g] = True
+                        if start_ab_r is None:
+                            start_ab_r = np.zeros((G, R), bool)
+                        if dec.rank >= 0:
+                            # debt-free ranks skipped (no negative debt)
+                            if ab_pending[g, dec.rank] > 0:
+                                start_ab_r[g, dec.rank] = True
+                        else:
+                            start_ab_r[g] |= ab_pending[g] > 0
             else:
                 view = MaintenanceView(
                     now=float(t), n_banks=B, budget=int(grid.budget[g]),
                     lag=lag[g].tolist(), demand=demand[g].tolist(),
                     ready=ready[g].tolist(), idle=idle[g].tolist(),
-                    write_window=bool(drain[g]), max_issues=1)
+                    write_window=bool(drain[g]), max_issues=1,
+                    n_ranks=grid.NR, n_channels=NC,
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
@@ -953,17 +1094,17 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
                         picks = np.zeros((G, B), bool)
                     picks[g, dec.bank] = True
 
-        if start_ab is not None and start_ab.any():
-            m = np.broadcast_to(start_ab[:, None], (G, B))
+        if start_ab_r is not None and start_ab_r.any():
+            m = np.repeat(start_ab_r, NB, axis=1)
             new_sub = (ctr % S).astype(np.int32)
             ref_until = np.where(m, (t + grid.RFC_AB)[:, None], ref_until)
             ref_sub = np.where(m, np.where(sarp_c, new_sub, -1), ref_sub)
             close = m & np.where(sarp_c, open_sub == new_sub, True)
             open_row = np.where(close, -1, open_row)
             ctr = ctr + (m & sarp_c)
-            ab_pending -= start_ab
-            rank_drain = np.where(start_ab, ab_pending > 0, rank_drain)
-            refab += start_ab
+            ab_pending -= start_ab_r
+            rank_drain = np.where(start_ab_r, ab_pending > 0, rank_drain)
+            refab += start_ab_r.sum(axis=1)
             ready &= ~m                     # tRFC_ab >= 1: mid-refresh now
 
         if picks is not None:
@@ -982,7 +1123,8 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
                 maxlag, np.where(picks, np.abs(lag_after), 0).max(axis=1))
             ready &= ~picks                 # tRFC_pb >= 1: mid-refresh now
 
-        # ---- 5: occupancy-aware arbitration — one start per cell
+        # ---- 5: occupancy-aware arbitration — one start per channel
+        # (scores — incl. the drain flag — snapshotted before any serve)
         has_req = (demand > 0) & active[:, None]
         if not has_req.any():
             t += 1
@@ -992,26 +1134,29 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
         h_row = qr[flat_gb, hslot]
         h_sub = qs[flat_gb, hslot]
         h_w = qw[flat_gb, hslot]
+        rank_drain_b = np.repeat(rank_drain, NB, axis=1)
         if score_fn is not None:
             score = np.asarray(score_fn(
                 t, has_req=has_req, head_row=h_row, head_sub=h_sub,
                 head_arrive=h_arr, head_is_write=h_w, bank_free=bank_free,
                 ref_until=ref_until, ref_sub=ref_sub, open_row=open_row,
-                drain=drain, sarp=sarp_g, rank_drain=rank_drain,
+                drain=drain, sarp=sarp_g, rank_drain=rank_drain_b,
                 occ=demand))
         else:
             score = arbiter_scores_masked(
                 t, has_req=has_req, idle=idle, ready=ready, head_row=h_row,
                 head_sub=h_sub, head_arrive=h_arr, head_is_write=h_w,
                 ref_sub=ref_sub, open_row=open_row, drain=drain,
-                sarp_col=sarp_c, rank_drain=rank_drain,
+                sarp_col=sarp_c, rank_drain=rank_drain_b,
                 rank_can_drain=has_drain_block, occ=demand)
-        bs_all = score.argmax(axis=1)
-        ok = score[arG, bs_all] >= 0
-
-        if ok.any():
+        for ch in range(NC):
+            sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
+            bs_loc = sc_ch.argmax(axis=1)
+            ok = sc_ch[arG, bs_loc] >= 0
+            if not ok.any():
+                continue
             gs = np.nonzero(ok)[0]
-            bs = bs_all[gs]
+            bs = bs_loc[gs] + ch * RBC
             row, sub = h_row[gs, bs], h_sub[gs, bs]
             arr, isw = h_arr[gs, bs], h_w[gs, bs]
             core = qc[gs * B + bs, hslot[gs, bs]]
@@ -1019,10 +1164,14 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
             lat = np.where(hit, grid.HIT[gs], grid.MISS[gs])
             lat = lat + np.where(grid.sarp[gs] & (ref_until[gs, bs] > t),
                                  grid.SARP_PEN[gs], 0)
-            lat = lat + np.where(isw != last_op[gs], grid.TURN[gs], 0)
+            lat = lat + np.where(isw != last_op[gs, ch], grid.TURN[gs], 0)
+            gr_b = bs // NB
+            lr = last_rank[gs, ch]
+            lat = lat + np.where((lr >= 0) & (lr != gr_b), grid.RTR[gs], 0)
             done = t + lat
             bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
-            last_op[gs] = isw
+            last_op[gs, ch] = isw
+            last_rank[gs, ch] = gr_b
             open_row[gs, bs] = row
             open_sub[gs, bs] = sub
             q_head[gs, bs] += 1
@@ -1062,6 +1211,8 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
     p, s, d = grid.cells[g]
     tk = grid.timing[d]
     B, S = grid.B, grid.S
+    NB, R, NC = grid.NB, grid.R, grid.NC
+    RBC = grid.NR * NB               # banks per channel
     HI, LO = spec.wbuf_hi, spec.wbuf_lo
     pol = resolve_policy(p)
     budget = tk.budget
@@ -1075,6 +1226,7 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                           grid.q_write[g, b, :n].tolist())))
     total = sum(len(x) for x in q)
     phase = [b * tk.REFI_PB for b in range(B)]
+    rank_phase = [gr * (tk.REFI // R) for gr in range(R)]
 
     bank_free = [0] * B
     ref_until = [0] * B
@@ -1087,9 +1239,10 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
     n_served = [0] * B
     wpend = 0
     drain = False
-    last_op = False
-    ab_pending = 0
-    rank_drain = False
+    last_op = [False] * NC
+    last_rank = [-1] * NC
+    ab_pending = [0] * R
+    rank_drain = [False] * R
     served = 0
 
     reads = writes = hits = misses = refpb = refab = 0
@@ -1117,10 +1270,10 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
         refpb += 1
         maxlag = max(maxlag, abs(due(b, t) - issued[b]))
 
-    def start_ab(t: int):
-        nonlocal ab_pending, rank_drain, refab
+    def start_ab(gr: int, t: int):
+        nonlocal refab
         end = t + tk.RFC_AB
-        for b in range(B):
+        for b in range(gr * NB, (gr + 1) * NB):
             ref_until[b] = end
             if pol.sarp:
                 ref_sub[b] = ctr[b] % S
@@ -1130,9 +1283,36 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
             else:
                 ref_sub[b] = -1
                 open_row[b] = -1
-        ab_pending -= 1
-        rank_drain = ab_pending > 0
+        ab_pending[gr] -= 1
+        rank_drain[gr] = ab_pending[gr] > 0
         refab += 1
+
+    def apply_ab_decisions(decs, t: int):
+        for dec in decs:
+            if dec.bank == ALL_BANKS:
+                if dec.rank >= 0:
+                    # debt-free ranks skipped: a buggy policy must not
+                    # drive ab_pending negative
+                    if ab_pending[dec.rank] > 0:
+                        start_ab(dec.rank, t)
+                else:
+                    for gr in range(R):
+                        if ab_pending[gr] > 0:
+                            start_ab(gr, t)
+
+    def ab_view(t: int) -> MaintenanceView:
+        return MaintenanceView(
+            now=float(t), n_banks=B, budget=budget,
+            lag=[0] * B, demand=[0] * B,
+            ready=[ref_until[b] <= t for b in range(B)],
+            idle=[bank_free[b] <= t for b in range(B)],
+            write_window=drain, max_issues=1,
+            rank_due=sum(ab_pending),
+            rank_quiet=(all(f <= t for f in bank_free)
+                        and all(r_ <= t for r_ in ref_until)),
+            n_ranks=grid.NR, n_channels=NC,
+            rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+            ranks_due=tuple(ab_pending))
 
     t = 0
     while served < total and t < grid.horizon:
@@ -1146,25 +1326,18 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
             n_arrived[b] = nb
         if wpend >= HI:
             drain = True
-        # B: rank debt
-        if (not pol.ideal and pol.level == "ab" and t > 0
-                and t % tk.REFI == 0):
-            ab_pending += 1
-            rank_drain = True
+        # B: per-rank refresh debt (staggered tREFI/R apart)
+        if not pol.ideal and pol.level == "ab":
+            for gr in range(R):
+                if (t > rank_phase[gr]
+                        and (t - rank_phase[gr]) % tk.REFI == 0):
+                    ab_pending[gr] += 1
+                    rank_drain[gr] = True
         # C: decision
         if not pol.ideal:
             if pol.level == "ab":
-                if ab_pending > 0:
-                    quiet = (all(f <= t for f in bank_free)
-                             and all(r <= t for r in ref_until))
-                    view = MaintenanceView(
-                        now=float(t), n_banks=B, budget=budget,
-                        lag=[0] * B, demand=[0] * B, ready=[True] * B,
-                        idle=[True] * B, write_window=drain, max_issues=1,
-                        rank_due=ab_pending, rank_quiet=quiet)
-                    for dec in pol.select(view):
-                        if dec.bank == ALL_BANKS:
-                            start_ab(t)
+                if sum(ab_pending) > 0:
+                    apply_ab_decisions(pol.select(ab_view(t)), t)
             else:
                 view = MaintenanceView(
                     now=float(t), n_banks=B, budget=budget,
@@ -1172,18 +1345,23 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                     demand=[n_arrived[b] - n_served[b] for b in range(B)],
                     ready=[ref_until[b] <= t for b in range(B)],
                     idle=[bank_free[b] <= t for b in range(B)],
-                    write_window=drain, max_issues=1)
+                    write_window=drain, max_issues=1,
+                    n_ranks=grid.NR, n_channels=NC,
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
                             f"policy {pol.name!r} returned ALL_BANKS from "
                             f"a per-bank (level='pb') decision point")
                     start_pb(dec.bank, t)
-        # D: arbitration
-        if not rank_drain:
+        # D: arbitration (one start per channel; drain snapshotted)
+        drain_arb = drain
+        for ch in range(NC):
             best, best_score = -1, -1
-            for b in range(B):
+            for b in range(ch * RBC, (ch + 1) * RBC):
                 if n_arrived[b] - n_served[b] <= 0:
+                    continue
+                if rank_drain[b // NB]:
                     continue
                 arr, row, sub, isw = q[b][n_served[b]]
                 if bank_free[b] > t:
@@ -1191,23 +1369,27 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                 if ref_until[b] > t and not (pol.sarp
                                              and ref_sub[b] != sub):
                     continue
-                sc = (W_WRITE if (drain and isw) else 0) \
+                sc = (W_WRITE if (drain_arb and isw) else 0) \
                     + (W_HIT if row == open_row[b] else 0) \
                     + min(t - arr, AGE_CAP)
                 if sc > best_score:
                     best, best_score = b, sc
             if best >= 0:
                 b = best
+                gr = b // NB
                 arr, row, sub, isw = q[b][n_served[b]]
                 hit = row == open_row[b]
                 lat = tk.HIT if hit else tk.MISS
                 if pol.sarp and ref_until[b] > t:
                     lat += tk.SARP_PEN
-                if isw != last_op:
+                if isw != last_op[ch]:
                     lat += tk.TURN
+                if 0 <= last_rank[ch] != gr:
+                    lat += tk.RTR
                 done = t + lat
                 bank_free[b] = done + (tk.WR if isw else 0)
-                last_op = isw
+                last_op[ch] = isw
+                last_rank[ch] = gr
                 open_row[b] = row
                 open_sub[b] = sub
                 n_served[b] += 1
@@ -1242,6 +1424,8 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
     p, s, d = grid.cells[g]
     tk = grid.timing[d]
     B, S = grid.B, grid.S
+    NB, R, NC = grid.NB, grid.R, grid.NC
+    RBC = grid.NR * NB               # banks per channel
     HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
     pol = resolve_policy(p)
     budget = tk.budget
@@ -1252,6 +1436,7 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
     ss, sth = grid.s_sub[g], grid.s_think[g]
     n_req = grid.n_req_c[g].tolist()
     phase = [b * tk.REFI_PB for b in range(B)]
+    rank_phase = [gr * (tk.REFI // R) for gr in range(R)]
 
     # per-bank FIFO of (issue_tick, row, sub, is_write, core)
     q: list[list[tuple]] = [[] for _ in range(B)]
@@ -1272,9 +1457,10 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
     issued = [0] * B
     wpend = 0
     drain = False
-    last_op = False
-    ab_pending = 0
-    rank_drain = False
+    last_op = [False] * NC
+    last_rank = [-1] * NC
+    ab_pending = [0] * R
+    rank_drain = [False] * R
 
     reads = writes = hits = misses = refpb = refab = 0
     lat_sum = 0
@@ -1301,10 +1487,10 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
         refpb += 1
         maxlag = max(maxlag, abs(due(b, t) - issued[b]))
 
-    def start_ab(t: int):
-        nonlocal ab_pending, rank_drain, refab
+    def start_ab(gr: int, t: int):
+        nonlocal refab
         end = t + tk.RFC_AB
-        for b in range(B):
+        for b in range(gr * NB, (gr + 1) * NB):
             ref_until[b] = end
             if pol.sarp:
                 ref_sub[b] = ctr[b] % S
@@ -1314,9 +1500,36 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
             else:
                 ref_sub[b] = -1
                 open_row[b] = -1
-        ab_pending -= 1
-        rank_drain = ab_pending > 0
+        ab_pending[gr] -= 1
+        rank_drain[gr] = ab_pending[gr] > 0
         refab += 1
+
+    def apply_ab_decisions(decs, t: int):
+        for dec in decs:
+            if dec.bank == ALL_BANKS:
+                if dec.rank >= 0:
+                    # debt-free ranks skipped: a buggy policy must not
+                    # drive ab_pending negative
+                    if ab_pending[dec.rank] > 0:
+                        start_ab(dec.rank, t)
+                else:
+                    for gr in range(R):
+                        if ab_pending[gr] > 0:
+                            start_ab(gr, t)
+
+    def ab_view(t: int) -> MaintenanceView:
+        return MaintenanceView(
+            now=float(t), n_banks=B, budget=budget,
+            lag=[0] * B, demand=[0] * B,
+            ready=[ref_until[b] <= t for b in range(B)],
+            idle=[bank_free[b] <= t for b in range(B)],
+            write_window=drain, max_issues=1,
+            rank_due=sum(ab_pending),
+            rank_quiet=(all(f <= t for f in bank_free)
+                        and all(r_ <= t for r_ in ref_until)),
+            n_ranks=grid.NR, n_channels=NC,
+            rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+            ranks_due=tuple(ab_pending))
 
     t = 0
     while n_finished < C and t < grid.horizon:
@@ -1361,25 +1574,18 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
         # ---- 2: write-drain watermark
         if wpend >= HI:
             drain = True
-        # ---- 3: rank refresh debt
-        if (not pol.ideal and pol.level == "ab" and t > 0
-                and t % tk.REFI == 0):
-            ab_pending += 1
-            rank_drain = True
+        # ---- 3: per-rank refresh debt (staggered tREFI/R apart)
+        if not pol.ideal and pol.level == "ab":
+            for gr in range(R):
+                if (t > rank_phase[gr]
+                        and (t - rank_phase[gr]) % tk.REFI == 0):
+                    ab_pending[gr] += 1
+                    rank_drain[gr] = True
         # ---- 4: policy decision
         if not pol.ideal:
             if pol.level == "ab":
-                if ab_pending > 0:
-                    quiet = (all(f <= t for f in bank_free)
-                             and all(r <= t for r in ref_until))
-                    view = MaintenanceView(
-                        now=float(t), n_banks=B, budget=budget,
-                        lag=[0] * B, demand=[0] * B, ready=[True] * B,
-                        idle=[True] * B, write_window=drain, max_issues=1,
-                        rank_due=ab_pending, rank_quiet=quiet)
-                    for dec in pol.select(view):
-                        if dec.bank == ALL_BANKS:
-                            start_ab(t)
+                if sum(ab_pending) > 0:
+                    apply_ab_decisions(pol.select(ab_view(t)), t)
             else:
                 view = MaintenanceView(
                     now=float(t), n_banks=B, budget=budget,
@@ -1387,18 +1593,24 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                     demand=[len(q[b]) for b in range(B)],
                     ready=[ref_until[b] <= t for b in range(B)],
                     idle=[bank_free[b] <= t for b in range(B)],
-                    write_window=drain, max_issues=1)
+                    write_window=drain, max_issues=1,
+                    n_ranks=grid.NR, n_channels=NC,
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
                             f"policy {pol.name!r} returned ALL_BANKS from "
                             f"a per-bank (level='pb') decision point")
                     start_pb(dec.bank, t)
-        # ---- 5: arbitration (occupancy-aware; one start per tick)
-        if not rank_drain:
+        # ---- 5: arbitration (occupancy-aware; one start per channel;
+        # drain snapshotted before any serve this tick)
+        drain_arb = drain
+        for ch in range(NC):
             best, best_score = -1, -1
-            for b in range(B):
+            for b in range(ch * RBC, (ch + 1) * RBC):
                 if not q[b]:
+                    continue
+                if rank_drain[b // NB]:
                     continue
                 arr, row, sub, isw, core = q[b][0]
                 if bank_free[b] > t:
@@ -1406,7 +1618,7 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                 if ref_until[b] > t and not (pol.sarp
                                              and ref_sub[b] != sub):
                     continue
-                sc = (W_WRITE if (drain and isw) else 0) \
+                sc = (W_WRITE if (drain_arb and isw) else 0) \
                     + W_OCC * min(len(q[b]), OCC_CAP) \
                     + (W_HIT if row == open_row[b] else 0) \
                     + min(t - arr, AGE_CAP)
@@ -1414,16 +1626,20 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                     best, best_score = b, sc
             if best >= 0:
                 b = best
+                gr = b // NB
                 arr, row, sub, isw, core = q[b].pop(0)
                 hit = row == open_row[b]
                 lat = tk.HIT if hit else tk.MISS
                 if pol.sarp and ref_until[b] > t:
                     lat += tk.SARP_PEN
-                if isw != last_op:
+                if isw != last_op[ch]:
                     lat += tk.TURN
+                if 0 <= last_rank[ch] != gr:
+                    lat += tk.RTR
                 done = t + lat
                 bank_free[b] = done + (tk.WR if isw else 0)
-                last_op = isw
+                last_op[ch] = isw
+                last_rank[ch] = gr
                 open_row[b] = row
                 open_sub[b] = sub
                 if hit:
@@ -1489,6 +1705,8 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
 
     spec = grid.spec
     G, B, L, S = grid.G, grid.B, grid.L, grid.S
+    NB, R, NC = grid.NB, grid.R, grid.NC
+    RBC = grid.NR * NB               # banks per channel
     HI, LO = spec.wbuf_hi, spec.wbuf_lo
     j32 = lambda x: jnp.asarray(x, jnp.int32)
     qa = j32(grid.q_arrive.reshape(G * B, L))
@@ -1499,6 +1717,7 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     n_tot = j32(grid.n_tot)
     total_all = int(grid.n_tot.sum())
     phase = j32(grid.phase)
+    rank_phase = j32(grid.rank_phase)
     kind = j32(grid.kind)
     level_ab = jnp.asarray(grid.level_ab)
     sarp = jnp.asarray(grid.sarp)
@@ -1507,7 +1726,7 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     budget = j32(grid.budget)
     REFI, RFC_PB, RFC_AB = j32(grid.REFI), j32(grid.RFC_PB), j32(grid.RFC_AB)
     HIT, MISS, WR = j32(grid.HIT), j32(grid.MISS), j32(grid.WR)
-    TURN, SARP_PEN = j32(grid.TURN), j32(grid.SARP_PEN)
+    TURN, RTR, SARP_PEN = j32(grid.TURN), j32(grid.RTR), j32(grid.SARP_PEN)
     arG = jnp.arange(G)
     flat_gb = (arG[:, None] * B + jnp.arange(B)[None, :])
 
@@ -1523,11 +1742,13 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         n_arrived=jnp.zeros((G, B), jnp.int32),
         n_served=jnp.zeros((G, B), jnp.int32),
         rr=jnp.zeros(G, jnp.int32),
+        ab_rr=jnp.zeros(G, jnp.int32),
         wpend=jnp.zeros(G, jnp.int32),
         drain=jnp.zeros(G, bool),
-        last_op=jnp.zeros(G, bool),
-        ab_pending=jnp.zeros(G, jnp.int32),
-        rank_drain=jnp.zeros(G, bool),
+        last_op=jnp.zeros((G, NC), bool),
+        last_rank=jnp.full((G, NC), -1, jnp.int32),
+        ab_pending=jnp.zeros((G, R), jnp.int32),
+        rank_drain=jnp.zeros((G, R), bool),
         next_arrive=j32(grid.q_arrive[:, :, 0]),
         next_w=jnp.asarray(grid.q_write[:, :, 0]),
         h_arr=j32(grid.q_arrive[:, :, 0]),
@@ -1579,8 +1800,9 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         n_served = s["n_served"]
         active = n_served.sum(axis=1) < n_tot
 
-        # ---- B: rank refresh debt
-        acc = active & level_ab & (t > 0) & (t % REFI == 0)
+        # ---- B: per-rank refresh debt (staggered tREFI/R apart)
+        acc = ((active & level_ab)[:, None] & (t > rank_phase)
+               & ((t - rank_phase) % REFI[:, None] == 0))
         ab_pending = s["ab_pending"] + acc
         rank_drain = s["rank_drain"] | acc
 
@@ -1595,24 +1817,41 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         picks, rr = select_batch(
             jnp, kind=jnp.where(active, kind, KIND_IDEAL), lag=lag,
             ready=ready, idle=idle, demand=demand, write_window=drain,
-            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"])
+            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"],
+            nb=NB)
 
-        quiet = idle.all(axis=1) & ready.all(axis=1)
-        start_ab = active & (kind == KIND_AB) & (ab_pending > 0) & quiet
+        quiet_r = (idle.reshape(G, R, NB).all(axis=2)
+                   & ready.reshape(G, R, NB).all(axis=2))
+        start_ab_r = ((active & (kind == KIND_AB))[:, None]
+                      & (ab_pending > 0) & quiet_r)
+        # staggered_ab: strict rank round-robin, channel-overlap-free
+        # (grid.has_stag is static at trace time — grids without the
+        # policy keep this block out of the jitted graph entirely)
+        if grid.has_stag:
+            idx = s["ab_rr"] % R
+            chan_ready = ready.reshape(G, NC, RBC).all(axis=2)
+            st_elig = (active & (kind == KIND_STAG)
+                       & (ab_pending[arG, idx] > 0) & quiet_r[arG, idx]
+                       & chan_ready[arG, idx // grid.NR])
+            start_ab_r = start_ab_r.at[arG, idx].set(
+                start_ab_r[arG, idx] | st_elig)
+            ab_rr = s["ab_rr"] + st_elig
+        else:
+            ab_rr = s["ab_rr"]
         ctr, ref_sub = s["ctr"], s["ref_sub"]
         open_row, open_sub = s["open_row"], s["open_sub"]
         sarp_c = sarp[:, None]
 
-        m = start_ab[:, None]
+        m = jnp.repeat(start_ab_r, NB, axis=1)
         new_sub = ctr % S
         ref_until = jnp.where(m, (t + RFC_AB)[:, None], ref_until)
         ref_sub = jnp.where(m, jnp.where(sarp_c, new_sub, -1), ref_sub)
         close = m & jnp.where(sarp_c, open_sub == new_sub, True)
         open_row = jnp.where(close, -1, open_row)
         ctr = ctr + (m & sarp_c)
-        ab_pending = ab_pending - start_ab
-        rank_drain = jnp.where(start_ab, ab_pending > 0, rank_drain)
-        refab = s["refab"] + start_ab
+        ab_pending = ab_pending - start_ab_r
+        rank_drain = jnp.where(start_ab_r, ab_pending > 0, rank_drain)
+        refab = s["refab"] + start_ab_r.sum(axis=1)
 
         new_sub = ctr % S
         ref_until = jnp.where(
@@ -1627,62 +1866,87 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             s["maxlag"],
             jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
 
-        # ---- D: arbitration + serve
+        # ---- D: arbitration + serve, one start per channel (scores —
+        # incl. the drain flag — snapshotted before any serve)
         score = scores(t, has_req=demand > 0, head_row=s["h_row"],
                        head_sub=s["h_sub"], head_arrive=s["h_arr"],
                        head_is_write=s["h_w"], bank_free=bank_free,
                        ref_until=ref_until, ref_sub=ref_sub,
                        open_row=open_row, drain=drain, sarp=sarp,
-                       rank_drain=rank_drain)
-        bs = jnp.argmax(score, axis=1)
-        ok = score[arG, bs] >= 0
-        row, sub_ = s["h_row"][arG, bs], s["h_sub"][arG, bs]
-        arr, isw = s["h_arr"][arG, bs], s["h_w"][arG, bs]
-        hit = row == open_row[arG, bs]
-        lat = (jnp.where(hit, HIT, MISS)
-               + jnp.where(sarp & (ref_until[arG, bs] > t), SARP_PEN, 0)
-               + jnp.where(isw != s["last_op"], TURN, 0))
-        done = t + lat
-        bank_free = bank_free.at[arG, bs].set(
-            jnp.where(ok, done + jnp.where(isw, WR, 0),
-                      bank_free[arG, bs]))
-        last_op = jnp.where(ok, isw, s["last_op"])
-        open_row = open_row.at[arG, bs].set(
-            jnp.where(ok, row, open_row[arG, bs]))
-        open_sub = open_sub.at[arG, bs].set(
-            jnp.where(ok, sub_, open_sub[arG, bs]))
-        n_served = n_served.at[arG, bs].add(ok)
-        served_w = ok & isw
-        wpend = wpend - served_w
-        drain = drain & ~(served_w & (wpend <= LO))
-        rmask = ok & ~isw
-        lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
-        hist = s["hist"].at[arG, lrec].add(rmask)
-        flat = arG * B + bs
-        sl = jnp.minimum(n_served[arG, bs], L - 1)
+                       rank_drain=jnp.repeat(rank_drain, NB, axis=1))
+        h_arr_s, h_row_s = s["h_arr"], s["h_row"]
+        h_sub_s, h_w_s = s["h_sub"], s["h_w"]
+        last_op, last_rank = s["last_op"], s["last_rank"]
+        reads, writes = s["reads"], s["writes"]
+        hits_s, misses_s = s["hits"], s["misses"]
+        lat_sum, hist = s["lat_sum"], s["hist"]
+        last_done = s["last_done"]
+        for ch in range(NC):
+            sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
+            bs = jnp.argmax(sc_ch, axis=1) + ch * RBC
+            ok = score[arG, bs] >= 0
+            row, sub_ = h_row_s[arG, bs], h_sub_s[arG, bs]
+            arr, isw = h_arr_s[arG, bs], h_w_s[arG, bs]
+            hit = row == open_row[arG, bs]
+            gr_b = bs // NB
+            lr = last_rank[:, ch]
+            lat = (jnp.where(hit, HIT, MISS)
+                   + jnp.where(sarp & (ref_until[arG, bs] > t),
+                               SARP_PEN, 0)
+                   + jnp.where(isw != last_op[:, ch], TURN, 0)
+                   + jnp.where((lr >= 0) & (lr != gr_b), RTR, 0))
+            done = t + lat
+            bank_free = bank_free.at[arG, bs].set(
+                jnp.where(ok, done + jnp.where(isw, WR, 0),
+                          bank_free[arG, bs]))
+            last_op = last_op.at[:, ch].set(
+                jnp.where(ok, isw, last_op[:, ch]))
+            last_rank = last_rank.at[:, ch].set(
+                jnp.where(ok, gr_b, last_rank[:, ch]))
+            open_row = open_row.at[arG, bs].set(
+                jnp.where(ok, row, open_row[arG, bs]))
+            open_sub = open_sub.at[arG, bs].set(
+                jnp.where(ok, sub_, open_sub[arG, bs]))
+            n_served = n_served.at[arG, bs].add(ok)
+            served_w = ok & isw
+            wpend = wpend - served_w
+            drain = drain & ~(served_w & (wpend <= LO))
+            rmask = ok & ~isw
+            lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
+            hist = hist.at[arG, lrec].add(rmask)
+            lat_sum = lat_sum + jnp.where(rmask, lrec, 0)
+            reads = reads + rmask
+            writes = writes + served_w
+            hits_s = hits_s + (ok & hit)
+            misses_s = misses_s + (ok & ~hit)
+            last_done = jnp.where(ok, jnp.maximum(last_done, done),
+                                  last_done)
+            flat = arG * B + bs
+            sl = jnp.minimum(n_served[arG, bs], L - 1)
+            h_arr_s = h_arr_s.at[arG, bs].set(
+                jnp.where(ok, qa[flat, sl], h_arr_s[arG, bs]))
+            h_row_s = h_row_s.at[arG, bs].set(
+                jnp.where(ok, qr[flat, sl], h_row_s[arG, bs]))
+            h_sub_s = h_sub_s.at[arG, bs].set(
+                jnp.where(ok, qs[flat, sl], h_sub_s[arG, bs]))
+            h_w_s = h_w_s.at[arG, bs].set(
+                jnp.where(ok, qw[flat, sl], h_w_s[arG, bs]))
 
         return dict(
             t=t + 1, bank_free=bank_free, ref_until=ref_until,
             ref_sub=ref_sub, open_row=open_row, open_sub=open_sub,
             ctr=ctr, issued=issued, n_arrived=n_arrived,
-            n_served=n_served, rr=rr, wpend=wpend, drain=drain,
-            last_op=last_op, ab_pending=ab_pending, rank_drain=rank_drain,
+            n_served=n_served, rr=rr, ab_rr=ab_rr, wpend=wpend,
+            drain=drain, last_op=last_op, last_rank=last_rank,
+            ab_pending=ab_pending, rank_drain=rank_drain,
             next_arrive=sub["next_arrive"], next_w=sub["next_w"],
-            h_arr=s["h_arr"].at[arG, bs].set(
-                jnp.where(ok, qa[flat, sl], s["h_arr"][arG, bs])),
-            h_row=s["h_row"].at[arG, bs].set(
-                jnp.where(ok, qr[flat, sl], s["h_row"][arG, bs])),
-            h_sub=s["h_sub"].at[arG, bs].set(
-                jnp.where(ok, qs[flat, sl], s["h_sub"][arG, bs])),
-            h_w=s["h_w"].at[arG, bs].set(
-                jnp.where(ok, qw[flat, sl], s["h_w"][arG, bs])),
-            reads=s["reads"] + rmask, writes=s["writes"] + served_w,
-            hits=s["hits"] + (ok & hit), misses=s["misses"] + (ok & ~hit),
+            h_arr=h_arr_s, h_row=h_row_s, h_sub=h_sub_s, h_w=h_w_s,
+            reads=reads, writes=writes,
+            hits=hits_s, misses=misses_s,
             refpb=refpb, refab=refab,
-            lat_sum=s["lat_sum"] + jnp.where(rmask, lrec, 0),
+            lat_sum=lat_sum,
             hist=hist, maxlag=maxlag,
-            last_done=jnp.where(ok, jnp.maximum(s["last_done"], done),
-                                s["last_done"]),
+            last_done=last_done,
         )
 
     run = jax.jit(lambda s0: lax.while_loop(cond, body, s0))
@@ -1731,6 +1995,8 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
 
     spec = grid.spec
     G, B, S = grid.G, grid.B, grid.S
+    NB, R, NC = grid.NB, grid.R, grid.NC
+    RBC = grid.NR * NB               # banks per channel
     C, N, K = grid.C, grid.N, grid.K
     LQ = grid.LQ
     QM = LQ - 1
@@ -1744,6 +2010,7 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     n_req = j32(grid.n_req_c)
     mlp_col = j32(grid.mlp_g)[:, None]
     phase = j32(grid.phase)
+    rank_phase = j32(grid.rank_phase)
     kind = j32(grid.kind)
     level_ab = jnp.asarray(grid.level_ab)
     sarp = jnp.asarray(grid.sarp)
@@ -1752,7 +2019,7 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     budget = j32(grid.budget)
     REFI, RFC_PB, RFC_AB = j32(grid.REFI), j32(grid.RFC_PB), j32(grid.RFC_AB)
     HIT, MISS, WR = j32(grid.HIT), j32(grid.MISS), j32(grid.WR)
-    TURN, SARP_PEN = j32(grid.TURN), j32(grid.SARP_PEN)
+    TURN, RTR, SARP_PEN = j32(grid.TURN), j32(grid.RTR), j32(grid.SARP_PEN)
     arG = jnp.arange(G)
     arB = jnp.arange(B)
     arC = jnp.arange(C)
@@ -1787,11 +2054,13 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         ctr=jnp.zeros((G, B), jnp.int32),
         issued=jnp.zeros((G, B), jnp.int32),
         rr=jnp.zeros(G, jnp.int32),
+        ab_rr=jnp.zeros(G, jnp.int32),
         wpend=jnp.zeros(G, jnp.int32),
         drain=jnp.zeros(G, bool),
-        last_op=jnp.zeros(G, bool),
-        ab_pending=jnp.zeros(G, jnp.int32),
-        rank_drain=jnp.zeros(G, bool),
+        last_op=jnp.zeros((G, NC), bool),
+        last_rank=jnp.full((G, NC), -1, jnp.int32),
+        ab_pending=jnp.zeros((G, R), jnp.int32),
+        rank_drain=jnp.zeros((G, R), bool),
         # stats
         reads=jnp.zeros(G, jnp.int32),
         writes=jnp.zeros(G, jnp.int32),
@@ -1857,8 +2126,9 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         # ---- 2: write-drain watermark
         drain = s["drain"] | (wpend >= HI)
 
-        # ---- 3: rank refresh debt
-        acc = active & level_ab & (t > 0) & (t % REFI == 0)
+        # ---- 3: per-rank refresh debt (staggered tREFI/R apart)
+        acc = ((active & level_ab)[:, None] & (t > rank_phase)
+               & ((t - rank_phase) % REFI[:, None] == 0))
         ab_pending = s["ab_pending"] + acc
         rank_drain = s["rank_drain"] | acc
 
@@ -1873,24 +2143,41 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         picks, rr = select_batch(
             jnp, kind=jnp.where(active, kind, KIND_IDEAL), lag=lag,
             ready=ready, idle=idle, demand=demand, write_window=drain,
-            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"])
+            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"],
+            nb=NB)
 
-        quiet = idle.all(axis=1) & ready.all(axis=1)
-        start_ab = active & (kind == KIND_AB) & (ab_pending > 0) & quiet
+        quiet_r = (idle.reshape(G, R, NB).all(axis=2)
+                   & ready.reshape(G, R, NB).all(axis=2))
+        start_ab_r = ((active & (kind == KIND_AB))[:, None]
+                      & (ab_pending > 0) & quiet_r)
+        # staggered_ab: strict rank round-robin, channel-overlap-free
+        # (grid.has_stag is static at trace time — grids without the
+        # policy keep this block out of the jitted graph entirely)
+        if grid.has_stag:
+            idx = s["ab_rr"] % R
+            chan_ready = ready.reshape(G, NC, RBC).all(axis=2)
+            st_elig = (active & (kind == KIND_STAG)
+                       & (ab_pending[arG, idx] > 0) & quiet_r[arG, idx]
+                       & chan_ready[arG, idx // grid.NR])
+            start_ab_r = start_ab_r.at[arG, idx].set(
+                start_ab_r[arG, idx] | st_elig)
+            ab_rr = s["ab_rr"] + st_elig
+        else:
+            ab_rr = s["ab_rr"]
         ctr, ref_sub = s["ctr"], s["ref_sub"]
         open_row, open_sub = s["open_row"], s["open_sub"]
         sarp_c = sarp[:, None]
 
-        m = start_ab[:, None]
+        m = jnp.repeat(start_ab_r, NB, axis=1)
         new_sub = ctr % S
         ref_until = jnp.where(m, (t + RFC_AB)[:, None], ref_until)
         ref_sub = jnp.where(m, jnp.where(sarp_c, new_sub, -1), ref_sub)
         close = m & jnp.where(sarp_c, open_sub == new_sub, True)
         open_row = jnp.where(close, -1, open_row)
         ctr = ctr + (m & sarp_c)
-        ab_pending = ab_pending - start_ab
-        rank_drain = jnp.where(start_ab, ab_pending > 0, rank_drain)
-        refab = s["refab"] + start_ab
+        ab_pending = ab_pending - start_ab_r
+        rank_drain = jnp.where(start_ab_r, ab_pending > 0, rank_drain)
+        refab = s["refab"] + start_ab_r.sum(axis=1)
 
         new_sub = ctr % S
         ref_until = jnp.where(
@@ -1905,7 +2192,8 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             s["maxlag"],
             jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
 
-        # ---- 5: occupancy-aware arbitration + serve
+        # ---- 5: occupancy-aware arbitration + serve, one start per
+        # channel (scores — incl. drain — snapshotted before any serve)
         hslot = s["q_head"] & QM
         flat_h = flat_gb * LQ + hslot
         h_row, h_sub = qr[flat_h], qs_[flat_h]
@@ -1915,36 +2203,59 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
                        head_arrive=h_arr, head_is_write=h_w,
                        bank_free=bank_free, ref_until=ref_until,
                        ref_sub=ref_sub, open_row=open_row, drain=drain,
-                       sarp=sarp, rank_drain=rank_drain, occ=demand)
-        bs = jnp.argmax(score, axis=1)
-        ok = score[arG, bs] >= 0
-        row, sub_ = h_row[arG, bs], h_sub[arG, bs]
-        arr, isw = h_arr[arG, bs], h_w[arG, bs]
-        core = qc[flat_gb * LQ + hslot][arG, bs]
-        hit = row == open_row[arG, bs]
-        lat = (jnp.where(hit, HIT, MISS)
-               + jnp.where(sarp & (ref_until[arG, bs] > t), SARP_PEN, 0)
-               + jnp.where(isw != s["last_op"], TURN, 0))
-        done = t + lat
-        bank_free = bank_free.at[arG, bs].set(
-            jnp.where(ok, done + jnp.where(isw, WR, 0),
-                      bank_free[arG, bs]))
-        last_op = jnp.where(ok, isw, s["last_op"])
-        open_row = open_row.at[arG, bs].set(
-            jnp.where(ok, row, open_row[arG, bs]))
-        open_sub = open_sub.at[arG, bs].set(
-            jnp.where(ok, sub_, open_sub[arG, bs]))
-        q_head = s["q_head"].at[arG, bs].add(ok)
-        served_w = ok & isw
-        wpend = wpend - served_w
-        drain = drain & ~(served_w & (wpend <= LO))
-        rmask = ok & ~isw
-        lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
-        hist = s["hist"].at[arG, lrec].add(rmask)
-        # reads: park the data return in the core's MLP window slot
-        free_k = jnp.argmax(comp_t[arG, core] == _PAD_ARRIVE, axis=1)
-        comp_t = comp_t.at[arG, core, free_k].set(
-            jnp.where(rmask, done, comp_t[arG, core, free_k]))
+                       sarp=sarp, occ=demand,
+                       rank_drain=jnp.repeat(rank_drain, NB, axis=1))
+        last_op, last_rank = s["last_op"], s["last_rank"]
+        q_head = s["q_head"]
+        reads, writes = s["reads"], s["writes"]
+        hits_s, misses_s = s["hits"], s["misses"]
+        lat_sum, hist = s["lat_sum"], s["hist"]
+        last_done = s["last_done"]
+        for ch in range(NC):
+            sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
+            bs = jnp.argmax(sc_ch, axis=1) + ch * RBC
+            ok = score[arG, bs] >= 0
+            row, sub_ = h_row[arG, bs], h_sub[arG, bs]
+            arr, isw = h_arr[arG, bs], h_w[arG, bs]
+            core = qc[flat_gb * LQ + hslot][arG, bs]
+            hit = row == open_row[arG, bs]
+            gr_b = bs // NB
+            lr = last_rank[:, ch]
+            lat = (jnp.where(hit, HIT, MISS)
+                   + jnp.where(sarp & (ref_until[arG, bs] > t),
+                               SARP_PEN, 0)
+                   + jnp.where(isw != last_op[:, ch], TURN, 0)
+                   + jnp.where((lr >= 0) & (lr != gr_b), RTR, 0))
+            done = t + lat
+            bank_free = bank_free.at[arG, bs].set(
+                jnp.where(ok, done + jnp.where(isw, WR, 0),
+                          bank_free[arG, bs]))
+            last_op = last_op.at[:, ch].set(
+                jnp.where(ok, isw, last_op[:, ch]))
+            last_rank = last_rank.at[:, ch].set(
+                jnp.where(ok, gr_b, last_rank[:, ch]))
+            open_row = open_row.at[arG, bs].set(
+                jnp.where(ok, row, open_row[arG, bs]))
+            open_sub = open_sub.at[arG, bs].set(
+                jnp.where(ok, sub_, open_sub[arG, bs]))
+            q_head = q_head.at[arG, bs].add(ok)
+            served_w = ok & isw
+            wpend = wpend - served_w
+            drain = drain & ~(served_w & (wpend <= LO))
+            rmask = ok & ~isw
+            lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
+            hist = hist.at[arG, lrec].add(rmask)
+            lat_sum = lat_sum + jnp.where(rmask, lrec, 0)
+            reads = reads + rmask
+            writes = writes + served_w
+            hits_s = hits_s + (ok & hit)
+            misses_s = misses_s + (ok & ~hit)
+            last_done = jnp.where(ok, jnp.maximum(last_done, done),
+                                  last_done)
+            # reads: park the data return in the core's MLP window slot
+            free_k = jnp.argmax(comp_t[arG, core] == _PAD_ARRIVE, axis=1)
+            comp_t = comp_t.at[arG, core, free_k].set(
+                jnp.where(rmask, done, comp_t[arG, core, free_k]))
 
         return dict(
             t=t + 1, qa=qa, qr=qr, qs=qs_, qw=qw, qc=qc,
@@ -1953,15 +2264,15 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             remaining=remaining, finish=finish, comp_t=comp_t,
             bank_free=bank_free, ref_until=ref_until, ref_sub=ref_sub,
             open_row=open_row, open_sub=open_sub, ctr=ctr, issued=issued,
-            rr=rr, wpend=wpend, drain=drain, last_op=last_op,
+            rr=rr, ab_rr=ab_rr, wpend=wpend, drain=drain, last_op=last_op,
+            last_rank=last_rank,
             ab_pending=ab_pending, rank_drain=rank_drain,
-            reads=s["reads"] + rmask, writes=s["writes"] + served_w,
-            hits=s["hits"] + (ok & hit), misses=s["misses"] + (ok & ~hit),
+            reads=reads, writes=writes,
+            hits=hits_s, misses=misses_s,
             refpb=refpb, refab=refab,
-            lat_sum=s["lat_sum"] + jnp.where(rmask, lrec, 0),
+            lat_sum=lat_sum,
             hist=hist, maxlag=maxlag,
-            last_done=jnp.where(ok, jnp.maximum(s["last_done"], done),
-                                s["last_done"]),
+            last_done=last_done,
         )
 
     run = jax.jit(lambda s0: lax.while_loop(cond, body, s0))

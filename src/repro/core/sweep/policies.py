@@ -30,19 +30,24 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.policy.extras import ElasticPolicy, HiraPolicy
+from repro.core.policy.multirank import (RankAwareDarpPolicy,
+                                         StaggeredAllBankPolicy)
 from repro.core.policy.paper import (AllBankPolicy, DarpPolicy,
                                      RoundRobinPolicy)
 
-# Policy kinds the batched engine dispatches on. IDEAL and AB are decided
-# by *flag/trait*, matching the engine adapters (DramSim._refresh_step
-# skips select() entirely for ideal policies and runs the rank-level path
-# for level=='ab'); the pb kinds require an exact class match.
-(KIND_IDEAL, KIND_AB, KIND_RR, KIND_DARP, KIND_ELASTIC, KIND_HIRA,
- KIND_CUSTOM) = range(7)
+# Policy kinds the batched engine dispatches on. IDEAL and the AB pair
+# are decided by *flag/trait*, matching the engine adapters
+# (DramSim._refresh_step skips select() entirely for ideal policies and
+# runs the rank-level path for level=='ab'); the pb kinds require an
+# exact class match. Ordering contract: the vectorized per-bank families
+# occupy the contiguous range [KIND_RR, KIND_CUSTOM).
+(KIND_IDEAL, KIND_AB, KIND_STAG, KIND_RR, KIND_DARP, KIND_RDARP,
+ KIND_ELASTIC, KIND_HIRA, KIND_CUSTOM) = range(9)
 
 _NEG = -(10 ** 9)
 #: hira's lexicographic (-demand, -lag) key: demand * _KD + (lag + budget).
 #: Valid while lag + budget < _KD, i.e. budget <= 31 (JEDEC budget is 8).
+#: rank_aware_darp's (rank-idle, lag) key reuses the same bound.
 _KD = 64
 
 
@@ -53,10 +58,14 @@ def classify(pol, budget: int) -> tuple[int, dict]:
         return KIND_IDEAL, {}
     if type(pol) is AllBankPolicy:
         return KIND_AB, {"sarp": pol.sarp}
+    if type(pol) is StaggeredAllBankPolicy:
+        return KIND_STAG, {"sarp": pol.sarp}
     if type(pol) is RoundRobinPolicy:
         return KIND_RR, {"sarp": pol.sarp}
     if type(pol) is DarpPolicy:
         return KIND_DARP, {"sarp": pol.sarp, "wrp": pol.wrp}
+    if type(pol) is RankAwareDarpPolicy:
+        return KIND_RDARP, {"sarp": pol.sarp, "wrp": pol.wrp}
     if type(pol) is ElasticPolicy:
         return KIND_ELASTIC, {"sarp": pol.sarp,
                               "urgent_at": max(1, int(pol.urgency * budget))}
@@ -71,8 +80,8 @@ def could_pick(*, kind, lag, demand, write_window, budget, wrp) -> np.ndarray:
     so the numpy engine may skip masked-out rows without changing results:
 
       * every family needs some lag > 0 for its forced/regular paths,
-      * DarpPolicy(wrp) and HiraPolicy additionally pull in (lag > -budget)
-        during a write window,
+      * DarpPolicy / RankAwareDarpPolicy (wrp) and HiraPolicy additionally
+        pull in (lag > -budget) during a write window,
       * ElasticPolicy additionally pulls in when total pressure is zero.
     """
     bud = budget[:, None]
@@ -82,7 +91,8 @@ def could_pick(*, kind, lag, demand, write_window, budget, wrp) -> np.ndarray:
     return (owed
             | ((kind == KIND_ELASTIC) & quiet_cell & pullable)
             | (write_window & pullable
-               & (((kind == KIND_DARP) & wrp) | (kind == KIND_HIRA))))
+               & ((((kind == KIND_DARP) | (kind == KIND_RDARP)) & wrp)
+                  | (kind == KIND_HIRA))))
 
 
 def _pick_one(xp, cand, key, allow):
@@ -97,11 +107,15 @@ def _pick_one(xp, cand, key, allow):
 
 
 def select_batch(xp, *, kind, lag, ready, idle, demand, write_window,
-                 budget, wrp, urgent_at, rr, gate: bool = False):
+                 budget, wrp, urgent_at, rr, gate: bool = False,
+                 nb: int = 0):
     """Vectorized per-bank select across the grid.
 
     kind, budget, urgent_at, rr, write_window, wrp : [G] arrays
     lag, ready, idle, demand                       : [G, B] arrays
+    nb : banks per rank (static; 0 or B means a flat single-rank grid).
+         Only the rank-aware families consume it — B is always the TOTAL
+         bank count across channels and ranks.
 
     Returns (picks [G, B] bool, rr_new [G]). Rows whose kind is not a
     vectorized pb family come back all-False (ideal/ab/custom cells are
@@ -110,6 +124,8 @@ def select_batch(xp, *, kind, lag, ready, idle, demand, write_window,
     branch unconditionally, as required under `jax.jit` tracing.
     """
     G, B = lag.shape
+    if not nb:
+        nb = B
     vec = (kind >= KIND_RR) & (kind < KIND_CUSTOM)
     bud = budget[:, None]
 
@@ -139,6 +155,20 @@ def select_batch(xp, *, kind, lag, ready, idle, demand, write_window,
         cand = (ready & idle & (demand == 0)
                 & xp.where(ww_branch[:, None], lag2 > -bud, lag2 > 0))
         picks = picks | _pick_one(xp, cand, lag2, is_darp)
+
+    # ---- RankAwareDarpPolicy: darp candidates, rank-idle-first ordering
+    is_rdarp = can & (kind == KIND_RDARP)
+    if not gate or is_rdarp.any():
+        ww_branch = write_window & wrp
+        cand = (ready & idle & (demand == 0)
+                & xp.where(ww_branch[:, None], lag2 > -bud, lag2 > 0))
+        # lexicographic (rank-has-no-demand, lag) max-key; ties -> lowest
+        # bank, matching the stable sort in RankAwareDarpPolicy.select
+        rank_idle = (demand.reshape(G, B // nb, nb).sum(axis=2)
+                     == 0)                                    # [G, R]
+        rank_idle_b = xp.repeat(rank_idle, nb, axis=1)        # [G, B]
+        key = rank_idle_b * _KD + (lag2 + bud)
+        picks = picks | _pick_one(xp, cand, key, is_rdarp)
 
     # ---- ElasticPolicy: three pressure regimes
     is_el = can & (kind == KIND_ELASTIC)

@@ -42,13 +42,16 @@ def _arbiter_kernel(t_ref,                                # scalar prefetch
                     has_req_ref, head_row_ref, head_sub_ref,
                     head_arrive_ref, head_is_write_ref, bank_free_ref,
                     ref_until_ref, ref_sub_ref, open_row_ref, occ_ref,
-                    drain_ref, sarp_ref, rank_drain_ref,   # [TILE_G, 1]
+                    rank_drain_ref,                        # [TILE_G, B]
+                    drain_ref, sarp_ref,                   # [TILE_G, 1]
                     score_ref):
     t = t_ref[0]
     sarp = sarp_ref[...] != 0
     mid_ref = ref_until_ref[...] > t
     other_sub = sarp & (ref_sub_ref[...] != head_sub_ref[...])
     avail = (bank_free_ref[...] <= t) & (~mid_ref | other_sub)
+    # rank-conflict masking: each bank carries its global rank's all-bank
+    # drain flag, so one draining rank masks only its own banks
     elig = ((has_req_ref[...] != 0) & avail
             & (rank_drain_ref[...] == 0))
     age = jnp.minimum(t - head_arrive_ref[...], AGE_CAP)
@@ -79,7 +82,7 @@ def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(tiles,),
-        in_specs=[gb] * 10 + [g1] * 3,
+        in_specs=[gb] * 11 + [g1] * 2,
         out_specs=gb,
     )
     out = pl.pallas_call(
@@ -90,8 +93,8 @@ def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
     )(jnp.asarray([t], jnp.int32),
       prep(has_req), prep(head_row), prep(head_sub), prep(head_arrive),
       prep(head_is_write), prep(bank_free), prep(ref_until),
-      prep(ref_sub), prep(open_row), prep(occ),
-      prep(drain[:, None]), prep(sarp[:, None]), prep(rank_drain[:, None]))
+      prep(ref_sub), prep(open_row), prep(occ), prep(rank_drain),
+      prep(drain[:, None]), prep(sarp[:, None]))
     return out[:G]
 
 

@@ -14,6 +14,14 @@ The one legitimate divergence — the event-heap float mode `DramSim.run()`
 vs the tick contract (bus serialization point, FR-FCFS reordering within
 a bank, asymmetric turnaround, quantization) — is *named and asserted* in
 `test_event_mode_diverges_from_tick_contract_by_design`.
+
+The normative statement of the contract both implementations follow —
+state planes, issue order, refresh-debt accounting, and the
+[channel, rank, bank] hierarchy — is docs/tick-contract.md. This module
+pins the flat (single-rank) grid; `tests/test_multirank.py` runs the
+same differential harness at n_ranks in {2, 4} and n_channels=2, and
+`test_multirank_smoke_two_ranks` below keeps a compact rank-2 cross-check
+inside the CI conformance job.
 """
 import numpy as np
 import pytest
@@ -158,6 +166,29 @@ def test_random_seeds_stay_bit_identical(seed, scenario, density):
         _assert_cell_equals_sim(res.get(p, scenario, density),
                                 _sim_ticks(p, scenario, density, reqs,
                                            seed))
+
+
+# ------------------------------------------------------- multirank smoke
+def test_multirank_smoke_two_ranks():
+    """Compact rank-2 conformance: all three backends + the Pallas-scored
+    batched path bit-identical to `DramSim.run_ticks` on the
+    closed_multirank scenario (the full rank/channel matrix lives in
+    tests/test_multirank.py)."""
+    pols = ("ideal", "ref_ab", "dsarp", "staggered_ab", "rank_aware_darp")
+    spec = SweepSpec(policies=pols, scenarios=("closed_multirank",),
+                     densities=(32,), reqs=GRID_REQS, seed=GRID_SEED,
+                     mode="closed", n_ranks=2)
+    batched = sweep(spec, "batched")
+    _cells_equal(sweep(spec, "scalar"), batched, "scalar/batched R=2")
+    _cells_equal(sweep(spec, "jax"), batched, "jax/batched R=2")
+    _cells_equal(sweep(spec, "batched", arbiter="pallas"), batched,
+                 "pallas/batched R=2")
+    wl = make_closed_workload("closed_multirank", GRID_REQS, GRID_SEED)
+    T = timing_for_density(32, n_ranks=2)
+    for p in pols:
+        cell = batched.get(p, "closed_multirank", 32)
+        assert cell.finished, p
+        _assert_cell_equals_sim(cell, DramSim(T, wl, p).run_ticks())
 
 
 # ------------------------------------------------ named, asserted gaps

@@ -141,6 +141,44 @@ def test_view_passes_rank_fields_through():
     assert v.demand == [0, 1, 2, 3]
 
 
+def test_view_passes_hierarchy_fields_through():
+    """The [channel, rank, bank] fields (tick-contract.md §2) round-trip
+    through the shared view builder, and the view helpers answer against
+    them; generic engines that omit them get the flat defaults."""
+    led = MaintenanceLedger(4, interval=2.0, budget=8)
+    v = led.view(1.0, demand=[0, 0, 2, 0],
+                 ready=[True, True, False, True],
+                 idle=[True, True, True, False],
+                 n_ranks=2, n_channels=1, rank_of=(0, 0, 1, 1),
+                 channel_of=(0, 0, 0, 0), ranks_due=(1, 0))
+    assert v.n_ranks_total == 2 and v.ranks_due == (1, 0)
+    assert v.rank_banks(1) == [2, 3]
+    assert v.rank_is_quiet(0) and not v.rank_is_quiet(1)
+    assert not v.channel_is_clear(0)          # bank 2 mid-refresh
+    flat = led.view(2.0, demand=[0] * 4)
+    assert flat.ranks_due == () and flat.n_ranks_total == 1
+    assert flat.rank_banks(0) == [0, 1, 2, 3]
+
+
+def test_per_rank_budget_conservation_under_random_walks():
+    """Per-rank extension of the budget invariant: grouping the ledger's
+    banks into ranks, no rank's aggregate due/issued balance ever drifts
+    past n_banks_in_rank * budget for any per-bank policy (conservation
+    never leaks across ranks). The deeper multirank ledger properties
+    live in tests/test_multirank.py."""
+    nb_per_rank, n_ranks, budget = 3, 2, 4
+    n_banks = nb_per_rank * n_ranks
+    rank_of = tuple(b // nb_per_rank for b in range(n_banks))
+    for policy in PB_POLICIES:
+        led = _drive(policy, n_banks, budget, interval=3.0, seed=17,
+                     steps=80)
+        t = led._last_now
+        for gr in range(n_ranks):
+            banks = [b for b in range(n_banks) if rank_of[b] == gr]
+            rank_lag = sum(led.lag(b, t) for b in banks)
+            assert abs(rank_lag) <= nb_per_rank * budget, (policy, gr)
+
+
 def test_time_must_be_monotonic():
     led = MaintenanceLedger(2, interval=1.0, budget=2)
     led.view(5.0, demand=[0, 0])

@@ -18,7 +18,8 @@ PAPER = ("ideal", "ref_ab", "ref_pb", "darp_ooo", "darp",
 # ------------------------------------------------------------- registry
 def test_list_policies_covers_paper_family_and_aliases():
     names = list_policies()
-    for p in PAPER + ("all_bank", "round_robin", "elastic", "hira"):
+    for p in PAPER + ("all_bank", "round_robin", "elastic", "hira",
+                      "staggered_ab", "rank_aware_darp"):
         assert p in names, p
 
 
@@ -127,7 +128,7 @@ def test_darp_identical_banks_via_sim_and_scheduler_wrapper():
 
 
 # ------------------------------------------------- new-policy invariants
-@pytest.mark.parametrize("name", ["elastic", "hira"])
+@pytest.mark.parametrize("name", ["elastic", "hira", "rank_aware_darp"])
 def test_new_policies_run_sweep_with_budget_invariant(name):
     budget = timing_for_density(32).refresh_budget
     for d in (8, 32):
@@ -157,7 +158,8 @@ def test_rank_level_decision_expands_to_every_bank_in_scheduler():
         del _REGISTRY["_test_rank"]
 
 
-@pytest.mark.parametrize("name", ["elastic", "hira"])
+@pytest.mark.parametrize("name", ["elastic", "hira", "rank_aware_darp",
+                                  "staggered_ab"])
 def test_new_policies_hold_budget_in_generic_scheduler(name):
     rs = np.random.RandomState(3)
     sched = DarpScheduler(6, interval=2.0, budget=4, policy=name)

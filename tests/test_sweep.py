@@ -209,7 +209,8 @@ def test_masked_scores_match_shared():
             open_row=rs.randint(-1, 4096, (G, B)).astype(np.int32),
             drain=rs.rand(G) < 0.4,
             sarp=rs.rand(G) < 0.5,
-            rank_drain=rs.rand(G) < 0.1,
+            # per-bank rank-drain plane (each bank carries its rank's flag)
+            rank_drain=np.repeat(rs.rand(G, 2) < 0.1, B // 2, axis=1),
             occ=rs.randint(0, 20, (G, B)).astype(np.int32),
         )
         expect = arbiter_scores(np, t, **kw)
@@ -219,7 +220,8 @@ def test_masked_scores_match_shared():
             head_sub=kw["head_sub"], head_arrive=kw["head_arrive"],
             head_is_write=kw["head_is_write"], ref_sub=kw["ref_sub"],
             open_row=kw["open_row"], drain=kw["drain"],
-            sarp_col=kw["sarp"][:, None], rank_drain=kw["rank_drain"],
+            sarp_col=kw["sarp"][:, None],
+            rank_drain=np.asarray(kw["rank_drain"]),
             rank_can_drain=True, occ=kw["occ"])
         np.testing.assert_array_equal(np.asarray(got, np.int64),
                                       np.asarray(expect, np.int64), str(t))
@@ -243,7 +245,8 @@ def test_pallas_arbiter_matches_numpy_scores():
         open_row=rs.randint(-1, 4096, (G, B)).astype(np.int32),
         drain=rs.rand(G) < 0.4,
         sarp=rs.rand(G) < 0.5,
-        rank_drain=rs.rand(G) < 0.1,
+        # per-bank rank-drain plane (each bank carries its rank's flag)
+        rank_drain=np.repeat(rs.rand(G, 2) < 0.1, B // 2, axis=1),
     )
     t = 512
     expect = arbiter_scores(np, t, **kw)

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Doc-tested code blocks: extract and EXECUTE the fenced ```python
+blocks in the docs, so worked examples can never silently rot (the docs
+analogue of tools/check_links.py; both run in the CI docs job).
+
+    PYTHONPATH=src python tools/run_doc_snippets.py [files...]
+
+Default files: docs/policy-cookbook.md and docs/tick-contract.md — the
+two documents whose examples are normative (the policy recipe and the
+tick-contract spec).
+
+Execution contract:
+  * Blocks of one file run IN ORDER in ONE shared namespace, like a
+    doctest session — later blocks may use names defined by earlier ones
+    (the cookbook's `GreedyPolicy` flows from registration to sweep).
+  * A block whose fence info string contains ``no-run`` (i.e.
+    ```python no-run) is syntax-checked with compile() but not executed
+    — for fragments that illustrate an API against objects the doc
+    never constructs (e.g. a live serving engine).
+  * After a file's blocks finish, any zero-argument ``test_*`` callables
+    the blocks defined are invoked — doc examples that look like tests
+    are run as tests.
+  * Failures report the file, the block's line number, and the
+    traceback, and the tool exits non-zero.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import re
+import sys
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ["docs/policy-cookbook.md", "docs/tick-contract.md"]
+
+#: fenced block: ```python[ info...] ... ``` (captures info + body)
+_FENCE = re.compile(r"^```python([^\n]*)\n(.*?)^```\s*$",
+                    re.S | re.M)
+#: indented python fences are NOT matched above — fail loudly instead of
+#: silently skipping them (rot-proofing is the whole point of this tool)
+_INDENTED_FENCE = re.compile(r"^[ \t]+```python", re.M)
+
+
+def blocks(md_path: str):
+    """Yield (line_number, info, source) per ```python block. Raises on
+    indented ```python fences, which the executor cannot see."""
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    m = _INDENTED_FENCE.search(text)
+    if m:
+        line = text[:m.start()].count("\n") + 1
+        raise ValueError(
+            f"{md_path}:{line}: indented ```python fence would be "
+            "silently skipped — outdent it to column 0 (or use a "
+            "non-python info string for illustrative fragments)")
+    for m in _FENCE.finditer(text):
+        line = text[:m.start()].count("\n") + 2   # first line of the body
+        yield line, m.group(1).strip(), m.group(2)
+
+
+def run_file(path: str) -> int:
+    """Execute one document's blocks; returns the number of failures."""
+    rel = os.path.relpath(path, REPO)
+    ns: dict = {"__name__": f"docsnippet:{rel}"}
+    failures = 0
+    n_run = n_skipped = 0
+    try:
+        found = list(blocks(path))
+    except ValueError as e:
+        print(f"FAIL {e}")
+        return 1
+    for line, info, src in found:
+        label = f"{rel}:{line}"
+        try:
+            code = compile(src, label, "exec")
+        except SyntaxError:
+            print(f"FAIL {label} (syntax)")
+            traceback.print_exc()
+            failures += 1
+            continue
+        if "no-run" in info:
+            n_skipped += 1
+            continue
+        try:
+            exec(code, ns)
+            n_run += 1
+        except Exception:
+            print(f"FAIL {label}")
+            traceback.print_exc()
+            failures += 1
+    # doc examples that look like tests are run as tests
+    for name, fn in sorted(ns.items()):
+        if not name.startswith("test_") or not callable(fn):
+            continue
+        try:
+            if inspect.signature(fn).parameters:
+                continue                      # parametrized: defined only
+        except (TypeError, ValueError):
+            continue
+        try:
+            fn()
+            n_run += 1
+        except Exception:
+            print(f"FAIL {rel}::{name}()")
+            traceback.print_exc()
+            failures += 1
+    status = "ok" if not failures else f"{failures} FAILED"
+    print(f"{rel}: {n_run} executed, {n_skipped} syntax-only ({status})")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    files = argv or DEFAULT_FILES
+    failures = 0
+    for f in files:
+        path = f if os.path.isabs(f) else os.path.join(REPO, f)
+        if not os.path.exists(path):
+            print(f"MISSING {f}")
+            failures += 1
+            continue
+        failures += run_file(path)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    sys.exit(main(sys.argv[1:]))
