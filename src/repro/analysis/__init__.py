@@ -1,0 +1,23 @@
+"""Contract-aware static analysis for the refresh-parallelization repo.
+
+The invariants that make the three sweep backends bit-identical — the
+packed int32 score layout, strict int32 closure of the stacked state,
+policy logic confined to `repro/core/policy`, registry/test-matrix
+coverage, and Pallas kernel constraints — are enforced here statically,
+so breaking one is a CI failure rather than a conformance-test
+scavenger hunt. See `docs/analysis.md` for the pass catalog, rule ids,
+and the suppression-pragma syntax.
+
+Entry points: `tools/check_contract.py` (CLI) or::
+
+    from repro.analysis import RepoContext, run_passes
+    result = run_passes(RepoContext("."))
+
+Stdlib-only: importing this package never pulls in numpy or jax.
+"""
+from repro.analysis.core import (Finding, Pragma, RepoContext,  # noqa: F401
+                                 RunResult, get_pass, list_passes,
+                                 register_pass, run_passes)
+
+__all__ = ["Finding", "Pragma", "RepoContext", "RunResult", "get_pass",
+           "list_passes", "register_pass", "run_passes"]

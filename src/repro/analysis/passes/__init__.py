@@ -1,0 +1,3 @@
+"""Built-in analysis passes; importing this package registers them all."""
+from repro.analysis.passes import (bitfield, dtype, pallas_lint,  # noqa: F401
+                                   purity, registry_coverage)

@@ -1,0 +1,252 @@
+"""pallas-lint pass — kernel constraints the TPU backend enforces late.
+
+Pallas failures surface at trace/compile time (or only on real TPUs when
+CI runs interpret mode), so the cheap structural mistakes are worth
+catching statically:
+
+* Python ``if``/``while`` on traced values inside a kernel body — refs
+  and ``pl.program_id`` results are tracers; data-dependent Python
+  control flow must go through ``pl.when``/``lax.cond``. Static config
+  branches (keyword-only params bound via ``functools.partial``, e.g.
+  ``if causal:``) are fine and not flagged.
+* Grid sizes computed with a plain floor division and no guard — a
+  non-divisible size silently drops the tail. Ceil-div (``-(-a // b)``
+  or ``pl.cdiv``) or a matching ``assert x % b == 0`` in the same
+  function makes the intent explicit.
+* ``pl.pallas_call`` without an ``interpret=`` argument (or with it
+  hardcoded ``False``) — every kernel must keep the off-TPU interpret
+  fallback reachable, per the `make_arbiter`/`ops._default_interpret`
+  idiom.
+
+Rules
+  PL501  Python control flow on a traced value inside a kernel
+  PL502  grid size floor-divided without a ceil idiom or divisibility
+         guard
+  PL503  pallas_call without a reachable interpret fallback
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import attr_chain, names_in
+from repro.analysis.core import Finding, RepoContext, register_pass
+
+RULES = (
+    ("PL501", "data-dependent Python control flow in kernel"),
+    ("PL502", "grid floor-division without ceil or divisibility guard"),
+    ("PL503", "pallas_call without interpret fallback"),
+)
+
+_KERNEL_SUFFIX = "_kernel"
+
+
+def _tainted_names(fn: ast.FunctionDef) -> set[str]:
+    """Names carrying traced values inside a kernel body.
+
+    Seeds: positional params (the refs; keyword-only params are static
+    config bound at partial time) and ``pl.program_id`` results. Then
+    propagates through simple assignments to a fixpoint.
+    """
+    tainted = {a.arg for a in fn.args.args + fn.args.posonlyargs}
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            rhs_names = names_in(node.value)
+            is_pid = any(
+                isinstance(c, ast.Call)
+                and attr_chain(c.func) in (["pl", "program_id"],
+                                           ["pltpu", "program_id"])
+                for c in ast.walk(node.value) if isinstance(c, ast.Call))
+            if not (rhs_names & tainted or is_pid):
+                continue
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id not in tainted:
+                    tainted.add(tgt.id)
+                    changed = True
+    return tainted
+
+
+def check_kernel_control_flow(tree: ast.Module, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for fn in ast.walk(tree):
+        if (not isinstance(fn, ast.FunctionDef)
+                or not fn.name.endswith(_KERNEL_SUFFIX)):
+            continue
+        tainted = _tainted_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            used = names_in(node.test) & tainted
+            if used:
+                kind = "while" if isinstance(node, ast.While) else "if"
+                out.append(Finding(
+                    path, node.lineno, "PL501",
+                    f"Python `{kind}` on traced value(s) "
+                    f"{sorted(used)} inside kernel '{fn.name}' — use "
+                    "pl.when / lax.cond for data-dependent branches"))
+    return out
+
+
+def _is_ceil_div(node: ast.expr) -> bool:
+    """``-(-a // b)`` or ``pl.cdiv(a, b)``."""
+    if (isinstance(node, ast.Call)
+            and attr_chain(node.func) == ["pl", "cdiv"]):
+        return True
+    return (isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub)
+            and isinstance(node.operand, ast.BinOp)
+            and isinstance(node.operand.op, ast.FloorDiv)
+            and isinstance(node.operand.left, ast.UnaryOp)
+            and isinstance(node.operand.left.op, ast.USub))
+
+
+def _divisibility_guards(fn: ast.FunctionDef) -> set[tuple[str, str]]:
+    """(numerator, divisor) name pairs asserted divisible in ``fn``
+    (``assert a % b == 0`` — also inside chained/bool-op asserts)."""
+    guards: set[tuple[str, str]] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assert):
+            continue
+        for cmp_ in ast.walk(node.test):
+            if not isinstance(cmp_, ast.Compare):
+                continue
+            left = cmp_.left
+            if (isinstance(left, ast.BinOp)
+                    and isinstance(left.op, ast.Mod)
+                    and any(isinstance(c, ast.Constant) and c.value == 0
+                            for c in cmp_.comparators)):
+                num = left.left.id if isinstance(left.left, ast.Name) else ""
+                div = (left.right.id
+                       if isinstance(left.right, ast.Name) else "")
+                guards.add((num, div))
+    return guards
+
+
+def _local_ceil_names(fn: ast.FunctionDef) -> set[str]:
+    """Names assigned from a ceil-div expression inside ``fn``."""
+    names: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _is_ceil_div(node.value):
+            names.update(t.id for t in node.targets
+                         if isinstance(t, ast.Name))
+    return names
+
+
+def _grid_elements(call: ast.Call, fn: ast.FunctionDef) -> list[ast.expr]:
+    """Expressions making up the grid of a pallas_call, resolving a
+    ``grid_spec=Name`` through a local ``PrefetchScalarGridSpec`` (or any
+    ``*GridSpec``) assignment."""
+    elems: list[ast.expr] = []
+
+    def from_grid_kw(c: ast.Call):
+        for kw in c.keywords:
+            if kw.arg == "grid":
+                v = kw.value
+                elems.extend(v.elts if isinstance(v, ast.Tuple) else [v])
+
+    from_grid_kw(call)
+    for kw in call.keywords:
+        if kw.arg != "grid_spec":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Call):
+            from_grid_kw(v)
+        elif isinstance(v, ast.Name):
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and any(isinstance(t, ast.Name) and t.id == v.id
+                                for t in node.targets)
+                        and isinstance(node.value, ast.Call)):
+                    from_grid_kw(node.value)
+    return elems
+
+
+def _floor_div_ok(expr: ast.expr, fn: ast.FunctionDef) -> bool:
+    if _is_ceil_div(expr):
+        return True
+    if isinstance(expr, ast.Name):
+        if expr.id in _local_ceil_names(fn):
+            return True
+        # resolve one level: name assigned from a floor-div expression,
+        # including tuple unpacks like `nq, nk = sq // qb, skv // kb`
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == expr.id:
+                    return _floor_div_ok(node.value, fn)
+                if (isinstance(t, ast.Tuple)
+                        and isinstance(node.value, ast.Tuple)):
+                    for sub_t, sub_v in zip(t.elts, node.value.elts):
+                        if (isinstance(sub_t, ast.Name)
+                                and sub_t.id == expr.id):
+                            return _floor_div_ok(sub_v, fn)
+        return True  # opaque name (e.g. a parameter): not a floor-div
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.FloorDiv):
+        guards = _divisibility_guards(fn)
+        num = expr.left.id if isinstance(expr.left, ast.Name) else ""
+        div = expr.right.id if isinstance(expr.right, ast.Name) else ""
+        return (num, div) in guards
+    return True  # constants, products, etc.
+
+
+def check_grids(tree: ast.Module, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and attr_chain(node.func) == ["pl", "pallas_call"]):
+                continue
+            for elem in _grid_elements(node, fn):
+                if not _floor_div_ok(elem, fn):
+                    out.append(Finding(
+                        path, elem.lineno, "PL502",
+                        "grid size uses a plain floor division with no "
+                        "ceil idiom (-(-a // b) / pl.cdiv) and no "
+                        "`assert a % b == 0` guard — a non-divisible "
+                        "size silently drops the tail tile"))
+    return out
+
+
+def check_interpret(tree: ast.Module, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and attr_chain(node.func) == ["pl", "pallas_call"]):
+            continue
+        kw = next((k for k in node.keywords if k.arg == "interpret"), None)
+        if kw is None:
+            out.append(Finding(
+                path, node.lineno, "PL503",
+                "pallas_call without interpret= — off-TPU CI cannot run "
+                "this kernel; thread an interpret flag through "
+                "(auto-select with jax.default_backend() != 'tpu')"))
+        elif (isinstance(kw.value, ast.Constant)
+              and kw.value.value is False):
+            out.append(Finding(
+                path, kw.value.lineno, "PL503",
+                "interpret=False is hardcoded at the call site — the "
+                "off-TPU fallback is unreachable"))
+    return out
+
+
+@register_pass("pallas-lint", rules=RULES)
+def run(ctx: RepoContext) -> list[Finding]:
+    """Lint every Pallas kernel module for traced control flow, grid
+    divisibility, and the interpret-mode fallback."""
+    out: list[Finding] = []
+    for rel in ctx.py_files(ctx.KERNELS_DIR):
+        text = ctx.text(rel)
+        if text is None or "pallas" not in text:
+            continue
+        tree = ctx.tree(rel)
+        if tree is None:
+            continue
+        out.extend(check_kernel_control_flow(tree, rel))
+        out.extend(check_grids(tree, rel))
+        out.extend(check_interpret(tree, rel))
+    return out

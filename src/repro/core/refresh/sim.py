@@ -108,11 +108,13 @@ class BankState:
     """Per-bank occupancy and row-buffer state (arrays indexed by bank)."""
 
     def __init__(self, n_banks: int):
-        self.free = np.zeros(n_banks)           # demand access busy until
-        self.ref_until = np.zeros(n_banks)      # refresh occupancy until
-        self.ref_sub = np.full(n_banks, -1)     # subarray being refreshed
-        self.open_row = np.full(n_banks, -1)
-        self.open_sub = np.full(n_banks, -1)
+        # event-mode times are float64 by design (tick-contract section 5);
+        # row/subarray ids are integral with -1 as the "none" sentinel
+        self.free = np.zeros(n_banks, dtype=np.float64)       # busy until
+        self.ref_until = np.zeros(n_banks, dtype=np.float64)  # refresh until
+        self.ref_sub = np.full(n_banks, -1, dtype=np.int64)   # refreshing
+        self.open_row = np.full(n_banks, -1, dtype=np.int64)
+        self.open_sub = np.full(n_banks, -1, dtype=np.int64)
 
 
 class BusState:
@@ -167,7 +169,8 @@ class RefreshLedger:
         R = timing.n_ranks_total
         self.tREFI = timing.tREFI
         self.issued = np.zeros(nb, dtype=int)
-        self.phase = np.arange(nb) * timing.tREFI_pb   # staggered schedule
+        self.phase = (np.arange(nb, dtype=np.int64)
+                      * timing.tREFI_pb)               # staggered schedule
         self.ref_sub_counter = np.zeros(nb, dtype=int)
         self.max_abs_lag = 0
         self.ab_pending = np.zeros(R, dtype=int)   # due-but-unstarted REFab
@@ -742,8 +745,8 @@ class DramSim:
         # ---- core state
         self.next_idx = np.zeros(ncore, dtype=int)
         self.out_reads = np.zeros(ncore, dtype=int)
-        self.next_issue = np.zeros(ncore)
-        self.finish = np.full(ncore, np.nan)
+        self.next_issue = np.zeros(ncore, dtype=np.float64)  # event times
+        self.finish = np.full(ncore, np.nan, dtype=np.float64)
         self.remaining = np.array([len(s["is_write"]) for s in self.streams])
         self.blocked_write = np.zeros(ncore, dtype=bool)
 

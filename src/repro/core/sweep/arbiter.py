@@ -32,12 +32,15 @@ from __future__ import annotations
 
 import numpy as np
 
-#: age saturates here so the packed score stays within int32
-AGE_CAP = (1 << 20) - 1
-W_HIT = 1 << 21
-W_OCC = 1 << 22              # occupancy field (closed-loop demand depth)
-OCC_CAP = 7                  # occupancy clamps to 3 bits
-W_WRITE = 1 << 25
+# The packed score-field constants live in `sweep/fields.py` (single
+# source of truth, cross-checked against the Pallas kernel and the
+# docs/tick-contract.md field table by `repro.analysis`); re-exported
+# here because this module is the historical import site.
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
+                                     W_WRITE)
+
+__all__ = ["AGE_CAP", "OCC_CAP", "W_HIT", "W_OCC", "W_WRITE",
+           "arbiter_scores", "arbiter_scores_masked", "arbiter_choice"]
 
 
 def arbiter_scores(xp, t, *, has_req, head_row, head_sub, head_arrive,

@@ -353,8 +353,8 @@ class _Grid:
         # hierarchy planes: global bank gb -> global rank / channel
         self.NB, self.NR, self.NC = spec.n_banks, spec.n_ranks, spec.n_channels
         self.R = spec.n_ranks_total
-        self.rank_of_b = (np.arange(B) // self.NB).astype(np.int32)
-        self.chan_of_b = (np.arange(B) // (self.NR * self.NB)).astype(np.int32)
+        self.rank_of_b = np.arange(B, dtype=np.int32) // self.NB
+        self.chan_of_b = np.arange(B, dtype=np.int32) // (self.NR * self.NB)
         self.rank_of_t = tuple(int(x) for x in self.rank_of_b)
         self.chan_of_t = tuple(int(x) for x in self.chan_of_b)
         self.closed = spec.mode == "closed"
@@ -454,8 +454,9 @@ class _Grid:
             for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR",
                       "TURN", "RTR", "SARP_PEN"):
                 getattr(self, f)[g] = getattr(tk, f)
-            self.phase[g] = np.arange(B) * tk.REFI_PB
-            self.rank_phase[g] = np.arange(self.R) * (tk.REFI // self.R)
+            self.phase[g] = np.arange(B, dtype=np.int32) * tk.REFI_PB
+            self.rank_phase[g] = (np.arange(self.R, dtype=np.int32)
+                                  * (tk.REFI // self.R))
             if kind == KIND_CUSTOM:
                 self.customs.append((g, pol))
             if self.closed:
@@ -623,7 +624,7 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
     has_drain_block = has_ab or bool(grid.customs)
     nav = next_arrive.ravel()
     nwv = next_w.ravel()
-    arG = np.arange(G)
+    arG = np.arange(G, dtype=np.int64)   # fancy-index helper, not a plane
     t = 0
     alive = int(active.sum())
     while alive and t < grid.horizon:
@@ -940,9 +941,9 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
                            for g in np.nonzero(level_ab)[0]
                            for p in grid.rank_phase[g]})
     has_drain_block = has_ab or bool(grid.customs)
-    arG = np.arange(G)
-    arB = np.arange(B)
-    flat_gc = arG[:, None] * C + np.arange(C)[None, :]
+    arG = np.arange(G, dtype=np.int64)   # fancy-index helpers, not planes
+    arB = np.arange(B, dtype=np.int64)
+    flat_gc = arG[:, None] * C + np.arange(C, dtype=np.int64)[None, :]
     flat_gb = arG[:, None] * B + arB[None, :]
     t = 0
     alive = int(active.sum())

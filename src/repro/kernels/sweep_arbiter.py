@@ -31,8 +31,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
-                                      W_WRITE, arbiter_scores)
+from repro.core.sweep.arbiter import arbiter_scores
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
+                                     W_WRITE)
 
 #: cells per grid step; G is padded up to a multiple of this
 TILE_G = 256

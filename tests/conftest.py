@@ -3,6 +3,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# fixture corpora for the static-analysis suite mirror the repo layout
+# (including tests/test_*.py files with planted violations) — they are
+# inputs to repro.analysis, never test modules to collect
+collect_ignore = ["fixtures"]
+
 import jax
 import jax.numpy as jnp
 import pytest

@@ -1,0 +1,8 @@
+"""Bad: W_OCC is missing from the layout entirely (BF101)."""
+AGE_BITS = 20
+AGE_CAP = (1 << AGE_BITS) - 1
+HIT_SHIFT = 21
+W_HIT = 1 << HIT_SHIFT
+OCC_CAP = 7
+WRITE_SHIFT = 25
+W_WRITE = 1 << WRITE_SHIFT

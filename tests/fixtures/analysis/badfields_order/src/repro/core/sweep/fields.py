@@ -1,0 +1,12 @@
+"""Bad: hit and write swapped — fields stay disjoint but the priority
+order age < hit < occ < write is broken (BF103)."""
+AGE_BITS = 20
+AGE_CAP = (1 << AGE_BITS) - 1
+HIT_SHIFT = 25
+W_HIT = 1 << HIT_SHIFT
+OCC_SHIFT = 22
+OCC_BITS = 3
+W_OCC = 1 << OCC_SHIFT
+OCC_CAP = (1 << OCC_BITS) - 1
+WRITE_SHIFT = 21
+W_WRITE = 1 << WRITE_SHIFT

@@ -1,0 +1,12 @@
+"""Bad: the write flag at bit 30 pushes the max packed score to 31
+bits — no int32 headroom left (BF104)."""
+AGE_BITS = 20
+AGE_CAP = (1 << AGE_BITS) - 1
+HIT_SHIFT = 21
+W_HIT = 1 << HIT_SHIFT
+OCC_SHIFT = 22
+OCC_BITS = 3
+W_OCC = 1 << OCC_SHIFT
+OCC_CAP = (1 << OCC_BITS) - 1
+WRITE_SHIFT = 30
+W_WRITE = 1 << WRITE_SHIFT

@@ -1,0 +1,40 @@
+"""Bad: the policy layer imports engine code (PP303), a select()
+mutates its shared MaintenanceView (PP302), and a registered policy's
+class is invisible to the fast-path table (RC404) and every test
+matrix (RC401/RC402/RC403)."""
+from repro.core.policy.registry import register_policy
+from repro.core.sweep.engine import dispatch  # planted PP303
+
+
+@register_policy("ideal")
+class IdealPolicy:
+    ideal = True
+
+    def select(self, view):
+        del view
+        return []
+
+
+class AllBankPolicy:
+    ideal = False
+
+    def select(self, view):
+        view.due.append(0)          # planted PP302: mutator call
+        view.now = view.now + 1     # planted PP302: attribute write
+        return list(view.due)
+
+
+register_policy("ref_ab", AllBankPolicy)
+
+
+class RogueLonerPolicy:
+    ideal = False
+
+    def select(self, view):
+        del view
+        return dispatch("ideal")
+
+
+# planted RC401/RC402/RC403/RC404: 'rogue' reaches no matrix and
+# classify() cannot map RogueLonerPolicy to a vectorized kind
+register_policy("rogue", lambda **kw: RogueLonerPolicy(**kw))

@@ -1,0 +1,31 @@
+"""Bad: one planted int32-closure hazard per dtype rule, plus a
+per-policy registry-name branch (PP301) and one pragma-suppressed
+finding exercising the suppression machinery."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def _run_batched(G, B, horizon):
+    bank_free = np.zeros((G, B))            # planted DT201
+    phase = np.arange(B)                    # planted DT202
+    big = 3000000000                        # planted DT204
+    lat = np.zeros((G, B), dtype=np.int32)
+    for t in range(horizon):
+        lat[:, 0] = t * 0.5                 # planted DT205
+        bank_free[:, :] = bank_free + 1
+    # contract: disable=DT201 -- fixture: demonstrates pragma suppression
+    scratch = np.zeros(B)
+    return bank_free, lat, big, scratch
+
+
+def _run_jax(state, horizon):
+    def body(st):
+        return np.minimum(st, horizon)      # planted DT203
+
+    return body(state)
+
+
+def dispatch(policy):
+    if policy == "ref_ab":                  # planted PP301
+        return 1
+    return 0

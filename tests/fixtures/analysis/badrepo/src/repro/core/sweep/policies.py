@@ -1,0 +1,16 @@
+"""Bad: classify() dispatches on a class no registration produces
+(RC405) and cannot classify the registered RogueLonerPolicy (RC404,
+reported at its registration site)."""
+from repro.core.policy.paper import AllBankPolicy
+
+(KIND_IDEAL, KIND_AB, KIND_GHOST, KIND_CUSTOM) = range(4)
+
+
+def classify(pol, budget):
+    if pol.ideal:
+        return KIND_IDEAL, {}
+    if type(pol) is AllBankPolicy:
+        return KIND_AB, {"budget": budget}
+    if type(pol) is GhostPolicy:            # planted RC405: dead entry
+        return KIND_GHOST, {}
+    return KIND_CUSTOM, {}

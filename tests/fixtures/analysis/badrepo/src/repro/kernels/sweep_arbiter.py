@@ -1,0 +1,27 @@
+"""Bad pallas kernel: Python branch on a traced value (PL501),
+unguarded floor-div grid (PL502), no interpret fallback (PL503)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
+                                     W_WRITE)
+
+TILE = 128
+
+
+def _score_kernel(age_ref, occ_ref, o_ref):
+    age = jnp.minimum(age_ref[...], AGE_CAP)
+    occ = jnp.minimum(occ_ref[...], OCC_CAP)
+    if age > 0:                     # planted PL501: traced Python branch
+        occ = occ + 1
+    o_ref[...] = (age + W_OCC * occ + W_HIT + W_WRITE).astype(jnp.int32)
+
+
+def score(age, occ):
+    n = age.shape[0]
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(n // TILE,),          # planted PL502: no guard, no ceil
+        out_shape=jax.ShapeDtypeStruct(age.shape, jnp.int32),
+    )(age, occ)                     # planted PL503: no interpret=

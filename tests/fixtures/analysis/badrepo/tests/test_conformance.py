@@ -1,0 +1,6 @@
+"""Bad: static matrix, and 'rogue' never appears (RC401)."""
+POLICIES = ("ideal", "ref_ab")
+
+
+def test_conformance_matrix():
+    assert len(POLICIES) == 2

@@ -1,0 +1,6 @@
+"""Bad: static matrix, and 'rogue' never appears (RC402)."""
+POLICIES = ("ideal", "ref_ab")
+
+
+def test_multirank_matrix():
+    assert len(POLICIES) == 2

@@ -1,0 +1,6 @@
+"""Bad: static matrix, and 'rogue' never appears (RC403)."""
+POLICIES = ("ideal", "ref_ab")
+
+
+def test_sweep_matrix():
+    assert len(POLICIES) == 2

@@ -1,0 +1,2 @@
+from repro.core.policy.registry import (list_policies,  # noqa: F401
+                                        register_policy)

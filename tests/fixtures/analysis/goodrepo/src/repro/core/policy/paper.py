@@ -1,0 +1,24 @@
+"""Good: select() treats the view as read-only (PP302); the policy
+layer imports no engine code (PP303); every registration's class is
+classifiable (RC404)."""
+from repro.core.policy.registry import register_policy
+
+
+@register_policy("ideal")
+class IdealPolicy:
+    ideal = True
+
+    def select(self, view):
+        del view
+        return []
+
+
+class AllBankPolicy:
+    ideal = False
+
+    def select(self, view):
+        return [b for b in view.due if view.lag[b] > 0]
+
+
+register_policy("ref_ab", AllBankPolicy)
+register_policy("all_bank", lambda **kw: AllBankPolicy(**kw))

@@ -1,0 +1,26 @@
+"""Good: typed constructors, jnp-only traced bodies, int32-safe
+literals, integral plane stores (DT201-DT205)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def _run_batched(G, B, horizon):
+    bank_free = np.zeros((G, B), dtype=np.int32)
+    phase = np.arange(B, dtype=np.int32)
+    lat = np.zeros((G, B), dtype=np.int32)
+    guard_ok = horizon < 2 ** 31            # comparison guard, not a value
+    for t in range(horizon if guard_ok else 0):
+        lat[:, :] = (bank_free + phase[None, :]) // 2
+        bank_free[:, :] = bank_free + 1
+    return bank_free, lat
+
+
+def _run_jax(state, horizon):
+    def body(st):
+        st = dict(st)
+        st["bank_free"] = st["bank_free"] + jnp.int32(1)
+        return st
+
+    for _ in range(horizon):
+        state = body(state)
+    return state

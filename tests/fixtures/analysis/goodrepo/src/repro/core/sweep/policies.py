@@ -1,0 +1,13 @@
+"""Good: classify() covers every registered class; no dead entries
+(RC404/RC405); engines never branch on registry names (PP301)."""
+from repro.core.policy.paper import AllBankPolicy
+
+(KIND_IDEAL, KIND_AB, KIND_CUSTOM) = range(3)
+
+
+def classify(pol, budget):
+    if pol.ideal:
+        return KIND_IDEAL, {}
+    if type(pol) is AllBankPolicy:
+        return KIND_AB, {"budget": budget}
+    return KIND_CUSTOM, {}

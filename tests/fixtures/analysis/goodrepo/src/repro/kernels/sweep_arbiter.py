@@ -1,0 +1,35 @@
+"""Good pallas kernel: static-config branches only (PL501), guarded
+grid division (PL502), interpret threaded through (PL503)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
+                                     W_WRITE)
+
+TILE = 128
+
+
+def _score_kernel(age_ref, hit_ref, occ_ref, wantw_ref, o_ref, *,
+                  closed: bool):
+    score = (jnp.minimum(age_ref[...], AGE_CAP)
+             + jnp.where(hit_ref[...] != 0, W_HIT, 0)
+             + jnp.where(wantw_ref[...] != 0, W_WRITE, 0))
+    if closed:                       # static config, bound at partial time
+        score = score + W_OCC * jnp.minimum(occ_ref[...], OCC_CAP)
+    o_ref[...] = score.astype(jnp.int32)
+
+
+def score(age, hit, occ, wantw, *, closed=False, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = age.shape[0]
+    assert n % TILE == 0
+    import functools
+    kern = functools.partial(_score_kernel, closed=closed)
+    return pl.pallas_call(
+        kern,
+        grid=(n // TILE,),
+        out_shape=jax.ShapeDtypeStruct(age.shape, jnp.int32),
+        interpret=interpret,
+    )(age, hit, occ, wantw)

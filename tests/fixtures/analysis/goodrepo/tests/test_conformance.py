@@ -1,0 +1,7 @@
+"""Good: iterates list_policies() — full dynamic coverage (RC401)."""
+from repro.core.policy import list_policies
+
+
+def test_conformance_matrix():
+    for name in list_policies():
+        assert isinstance(name, str)

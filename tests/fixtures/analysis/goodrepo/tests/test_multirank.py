@@ -1,0 +1,6 @@
+"""Good: a static matrix naming every registered policy (RC402)."""
+POLICIES = ("ideal", "ref_ab", "all_bank")
+
+
+def test_multirank_matrix():
+    assert len(POLICIES) == 3

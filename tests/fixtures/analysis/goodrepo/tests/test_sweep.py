@@ -1,0 +1,6 @@
+"""Good: iterates list_policies() — full dynamic coverage (RC403)."""
+from repro.core.policy import list_policies
+
+
+def test_sweep_matrix():
+    assert list_policies()
