@@ -3,10 +3,12 @@
 fig1: performance loss of REF_ab / REF_pb vs the no-refresh ideal across
       densities (paper Figure 1; claims C1, C2) — one *closed-loop*
       sweep-grid call reporting true weighted speedup.
-fig2: service-timeline microbenchmark — a read arriving during a refresh
-      to another subarray of the SAME bank (paper Figure 2; SARP
-      mechanism). Stays on the event-driven `DramSim` (single focused
-      scenario; timing fidelity matters more than throughput).
+fig2: service-timeline comparison — reads arriving during refreshes to
+      other subarrays of the SAME bank (paper Figure 2; SARP mechanism),
+      regenerated from the ACTUAL per-subarray refresh occupancy that
+      `DramSim.run_ticks(record_timeline=True)` records, not a scripted
+      timeline: the payload carries the first refresh window SARP
+      parallelized serves into.
 fig3: DSARP (and components) performance + energy vs baselines across
       densities (paper Figure 3; claims C3, C4), plus the post-paper
       registry policies (elastic, hira) — one *closed-loop* sweep-grid
@@ -19,6 +21,9 @@ closed_loop: the closed-loop analogue — a timed (policy x closed-scenario
       x density) grid through the batched backend vs looping
       `DramSim.run_ticks` per cell, plus the bit_identical conformance
       flag (the same cross-check `tests/test_conformance.py` enforces).
+sweep_subarray: the [bank, subarray] hierarchy — the subarray-storm grid
+      at n_subarrays in {1, 4, 8}, bit-identical per subarray count vs
+      looping `DramSim.run_ticks`, per-count weighted speedup vs ideal.
 
 `docs/figures.md` maps each emitted results/bench/*.json artifact to its
 paper figure and regeneration command.
@@ -32,7 +37,6 @@ import numpy as np
 from repro.core.refresh import (DramSim, make_closed_workload,
                                 make_workload, run_policy)
 from repro.core.refresh.timing import timing_for_density
-from repro.core.refresh.workload import Workload
 from repro.core.sweep import SweepSpec, sweep
 
 DENSITIES = (8, 16, 32)
@@ -104,17 +108,33 @@ def fig1(reqs: int = 2000, runs: list = None) -> dict:
 
 
 def fig2() -> dict:
-    """Single focused scenario: bank 0 starts a refresh; a read to bank 0,
-    different subarray, arrives mid-refresh. REF_pb blocks it; SARP serves
-    it concurrently."""
+    """Reads arriving during a refresh to another subarray of the same
+    bank: REF_pb marks every subarray and blocks them; SARP marks one and
+    serves them concurrently. Regenerated from the recorded per-subarray
+    occupancy timeline (deterministic: same seed, same timeline), with
+    the first parallelized refresh window kept as the figure's excerpt."""
     out = {}
+    T = timing_for_density(32, n_subarrays=8)
+    wl = make_closed_workload("closed_subarray_storm", 240, 9)
     for pol in ("ref_pb", "sarp_pb"):
-        wl = Workload("timeline", n_cores=1, mlp=1, think_ns=400.0,
-                      row_hit_rate=0.0, write_ratio=0.0, reqs_per_core=200,
-                      seed=9)
-        r = run_policy(pol, 32, wl)
+        r = DramSim(T, wl, pol).run_ticks(record_timeline=True)
+        ref = r.timeline["refresh"]
+        serves = r.timeline["serves"]
+        sibling = sum(1 for (t, b, sub, row, isw, done) in serves
+                      if any(rb == b and rs not in (-1, sub) and s0 <= t < s1
+                             for (rb, rs, s0, s1, k) in ref))
+        excerpt = None
+        for (rb, rs, s0, s1, k) in ref:
+            inside = [s for s in serves if s[1] == rb and s0 <= s[0] < s1]
+            if inside:
+                excerpt = {"refresh_bank_sub_start_end": [rb, rs, s0, s1],
+                           "serves_during": [list(s) for s in inside[:4]]}
+                break
         out[pol] = {"avg_read_ns": r.avg_read_latency,
-                    "p99_read_ns": r.p99_read_latency}
+                    "p99_read_ns": r.p99_read_latency,
+                    "refreshes_pb": r.refreshes_pb,
+                    "serves_during_sibling_refresh": sibling,
+                    "first_parallelized_refresh": excerpt}
     return out
 
 
@@ -285,6 +305,55 @@ def sweep_multirank(fast: bool = False) -> dict:
             ws[p] = {d: round(res.get(p, scen, d).weighted_speedup_vs(
                 res.get("ideal", scen, d)), 4) for d in DENSITIES}
         out["per_rank_count"][n_ranks] = {
+            "batched_s": round(t_batched, 3),
+            "dramsim_ticks_loop_s": round(t_loop, 3),
+            "weighted_speedup_vs_ideal": ws,
+        }
+    out["bit_identical"] = identical
+    return out
+
+
+#: policy axis for the subarray hierarchy sweep: the flat baselines, the
+#: paper's SARP family, and the hidden-row-activation extra
+SUBARRAY_POLICIES = ("ideal", "ref_ab", "ref_pb", "sarp_ab", "sarp_pb",
+                     "dsarp", "hira")
+
+
+def sweep_subarray(fast: bool = False) -> dict:
+    """The [bank, subarray] hierarchy sweep: the closed_subarray_storm
+    grid at n_subarrays in {1, 4, 8} through the batched backend, each
+    subarray count cross-checked bit-identically against looping
+    `DramSim.run_ticks` per cell (the conformance surface of
+    tests/test_subarray.py), plus per-subarray-count weighted speedup vs
+    ideal — how much refresh cost subarray-level parallelism absorbs."""
+    reqs = 120 if fast else 400
+    seed = 0
+    scen = "closed_subarray_storm"
+    wl = make_closed_workload(scen, reqs, seed)
+    out = {"grid": {"policies": len(SUBARRAY_POLICIES), "scenario": scen,
+                    "densities": list(DENSITIES), "reqs_per_cell": reqs},
+           "per_subarray_count": {}}
+    identical = True
+    for n_subarrays in (1, 4, 8):
+        spec = SweepSpec(policies=SUBARRAY_POLICIES, scenarios=(scen,),
+                         densities=DENSITIES, reqs=reqs, seed=seed,
+                         mode="closed", n_subarrays=n_subarrays)
+        t0 = time.perf_counter()
+        res = sweep(spec, backend="batched")
+        t_batched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for p, s, d in spec.cells():
+            sim = DramSim(timing_for_density(d, n_subarrays=n_subarrays),
+                          wl, p).run_ticks()
+            identical &= _cell_matches_sim(res.get(p, s, d), sim)
+        t_loop = time.perf_counter() - t0
+        ws = {}
+        for p in SUBARRAY_POLICIES:
+            if p == "ideal":
+                continue
+            ws[p] = {d: round(res.get(p, scen, d).weighted_speedup_vs(
+                res.get("ideal", scen, d)), 4) for d in DENSITIES}
+        out["per_subarray_count"][n_subarrays] = {
             "batched_s": round(t_batched, 3),
             "dramsim_ticks_loop_s": round(t_loop, 3),
             "weighted_speedup_vs_ideal": ws,

@@ -15,6 +15,9 @@ dicts go to results/bench/*.json.
   sweep_multirank     the [channel, rank, bank] hierarchy: closed grid
                  at n_ranks in {1,2,4}, bit_identical per rank count,
                  per-rank-count weighted speedup vs ideal
+  sweep_subarray      the [bank, subarray] hierarchy: subarray-storm grid
+                 at n_subarrays in {1,4,8}, bit_identical per subarray
+                 count, per-count weighted speedup vs ideal
   darp_ckpt      framework DARP: checkpoint flush scheduling overhead
   serving        framework DARP: serving maintenance policies (legacy shim)
   serving_lifecycle   EngineCore request lifecycle: TTFT/TPOT percentiles
@@ -63,7 +66,9 @@ def main() -> None:
     f2 = FR.fig2()
     _emit("fig2_sarp_timeline", (time.perf_counter() - t0) * 1e6,
           f"refpb_p99={f2['ref_pb']['p99_read_ns']:.0f}ns;"
-          f"sarp_p99={f2['sarp_pb']['p99_read_ns']:.0f}ns", f2)
+          f"sarp_p99={f2['sarp_pb']['p99_read_ns']:.0f}ns;"
+          f"sarp_overlapped_serves="
+          f"{f2['sarp_pb']['serves_during_sibling_refresh']}", f2)
 
     t0 = time.perf_counter()
     f3 = FR.fig3(reqs=reqs, runs=runs)
@@ -92,6 +97,14 @@ def main() -> None:
           f"bit_identical={mr['bit_identical']};"
           f"dsarp_ws_2rank_32gb={ws2['dsarp'][32]};"
           f"refab_ws_2rank_32gb={ws2['ref_ab'][32]}", mr)
+
+    t0 = time.perf_counter()
+    ss = FR.sweep_subarray(fast=fast)
+    ws8 = ss["per_subarray_count"][8]["weighted_speedup_vs_ideal"]
+    _emit("sweep_subarray", (time.perf_counter() - t0) * 1e6,
+          f"bit_identical={ss['bit_identical']};"
+          f"sarp_ws_8sub_32gb={ws8['sarp_pb'][32]};"
+          f"refpb_ws_8sub_32gb={ws8['ref_pb'][32]}", ss)
 
     t0 = time.perf_counter()
     ck = BF.bench_darp_ckpt(steps=20 if fast else 40)

@@ -103,6 +103,7 @@ class RepoContext:
     TEST_CONFORMANCE = "tests/test_conformance.py"
     TEST_MULTIRANK = "tests/test_multirank.py"
     TEST_SWEEP = "tests/test_sweep.py"
+    TEST_SUBARRAY = "tests/test_subarray.py"
 
     def __init__(self, root: str | Path):
         self.root = Path(root)

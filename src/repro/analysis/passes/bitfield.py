@@ -29,7 +29,7 @@ from repro.analysis.astutil import (EvalError, eval_int, eval_int_str,
 from repro.analysis.core import Finding, RepoContext, register_pass
 
 #: the canonical packed-layout names every consumer must agree on
-CANON = ("AGE_CAP", "W_HIT", "W_OCC", "OCC_CAP", "W_WRITE")
+CANON = ("AGE_CAP", "W_NOCONF", "W_HIT", "W_OCC", "OCC_CAP", "W_WRITE")
 
 RULES = (
     ("BF101", "required score-field constant missing"),
@@ -91,6 +91,7 @@ def _layout(env: dict[str, int]) -> dict[str, tuple[int, int]]:
     """name -> (shift, width) of each packed field; assumes env validated."""
     return {
         "age": (0, env["AGE_CAP"].bit_length()),
+        "noconf": (env["W_NOCONF"].bit_length() - 1, 1),
         "hit": (env["W_HIT"].bit_length() - 1, 1),
         "occ": (env["W_OCC"].bit_length() - 1, env["OCC_CAP"].bit_length()),
         "write": (env["W_WRITE"].bit_length() - 1, 1),
@@ -112,7 +113,7 @@ def check_layout(env: dict[str, int], path: str, line: int) -> list[Finding]:
         if v <= 0 or v & (v + 1):
             out.append(Finding(path, line, "BF103",
                                f"{cap} = {v} is not of the form 2**k - 1"))
-    for w in ("W_HIT", "W_OCC", "W_WRITE"):
+    for w in ("W_NOCONF", "W_HIT", "W_OCC", "W_WRITE"):
         v = env[w]
         if v <= 0 or v & (v - 1):
             out.append(Finding(path, line, "BF103",
@@ -129,16 +130,16 @@ def check_layout(env: dict[str, int], path: str, line: int) -> list[Finding]:
                 f"fields '{na}' (bits {sa}..{sa + wa - 1}) and '{nb}' "
                 f"(shift {sb}) overlap"))
     # priority order is part of the contract: write above occ above hit
-    # above age — disjointness alone would accept a swapped layout
-    order = [lay[n][0] for n in ("age", "hit", "occ", "write")]
-    if order != sorted(order) or len(set(order)) != 4:
+    # above noconf above age — disjointness alone would accept a swap
+    order = [lay[n][0] for n in ("age", "noconf", "hit", "occ", "write")]
+    if order != sorted(order) or len(set(order)) != 5:
         out.append(Finding(
             path, line, "BF103",
             "field priority order broken: need "
-            "age < W_HIT < W_OCC < W_WRITE shifts, got "
-            f"{dict(zip(('age', 'hit', 'occ', 'write'), order))}"))
+            "age < W_NOCONF < W_HIT < W_OCC < W_WRITE shifts, got "
+            f"{dict(zip(('age', 'noconf', 'hit', 'occ', 'write'), order))}"))
     max_score = (env["W_WRITE"] + env["OCC_CAP"] * env["W_OCC"]
-                 + env["W_HIT"] + env["AGE_CAP"])
+                 + env["W_HIT"] + env["W_NOCONF"] + env["AGE_CAP"])
     if max_score.bit_length() >= 31:
         out.append(Finding(
             path, line, "BF104",

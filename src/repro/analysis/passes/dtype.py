@@ -41,6 +41,7 @@ _CONSTRUCTORS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2}
 #: stay integral
 STATE_PLANES = frozenset({
     "bank_free", "ref_until", "ref_sub", "open_row", "open_sub", "ctr",
+    "ref_until_s", "open_row_s",
     "issued", "n_arrived", "n_served", "wpend", "score", "lat", "done",
     "lat_sum", "last_done", "phase", "rank_phase", "ab_pending",
     "rank_drain", "comp_t", "next_issue", "next_idx", "q_head", "q_tail",

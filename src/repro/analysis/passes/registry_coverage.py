@@ -18,6 +18,15 @@ Rules
   RC403  policy missing from the sweep test matrix
   RC404  policy class unknown to the vectorized fast-path table
   RC405  fast-path table entry for a class no registration produces
+  RC406  SARP-trait policy missing from the subarray test matrix
+
+RC406 looks at the *trait*, not just the class attribute: a registration
+is SARP either because its class (or a base) sets ``sarp = True``, or
+because the ``register_policy(name, lambda: Cls(..., sarp=True))``
+factory passes the trait as a keyword — both spellings exist in the
+built-in catalogue. Such a policy exercises the per-subarray refresh
+path, so skipping `tests/test_subarray.py`'s backend-vs-DramSim matrix
+would leave its defining behavior untested.
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ RULES = (
     ("RC403", "policy missing from sweep matrix"),
     ("RC404", "policy class not classifiable by the fast-path table"),
     ("RC405", "fast-path table entry with no registered producer"),
+    ("RC406", "SARP-trait policy missing from subarray matrix"),
 )
 
 
@@ -121,6 +131,35 @@ def collect_trait_classes(ctx: RepoContext, trait: str) -> set[str]:
     return flagged
 
 
+def collect_sarp_names(ctx: RepoContext,
+                       regs: dict[str, Registration]) -> set[str]:
+    """Registered names carrying the SARP trait, via either spelling:
+    the class (or a base) sets ``sarp = True``, or the registration's
+    lambda factory passes ``sarp=True`` as a constructor keyword (which
+    `collect_registrations` cannot see — it only keeps the class name)."""
+    trait_classes = collect_trait_classes(ctx, "sarp")
+    sarp = {n for n, r in regs.items() if r.cls in trait_classes}
+    for rel in ctx.py_files(ctx.POLICY_PKG):
+        tree = ctx.tree(rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call) and _is_register_call(node)
+                    and len(node.args) >= 2
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)
+                    and isinstance(node.args[1], ast.Lambda)):
+                continue
+            body = node.args[1].body
+            if isinstance(body, ast.Call) and any(
+                    kw.arg == "sarp"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    for kw in body.keywords):
+                sarp.add(node.args[0].value)
+    return sarp
+
+
 def classify_table(ctx: RepoContext,
                    trait: str = "ideal") -> tuple[dict[str, int], bool]:
     """Classes named in `classify()`'s exact-type dispatch
@@ -186,6 +225,22 @@ def run(ctx: RepoContext) -> list[Finding]:
                     rel, 1, rule,
                     f"registered policy '{name}' ({reg.path}:{reg.line}) "
                     f"never reaches the {label} matrix — add it or "
+                    "iterate list_policies()"))
+
+    # SARP-trait policies must additionally hit the subarray tier, whose
+    # matrix is what pins their idle-sibling-serving semantics to DramSim
+    sarp_names = collect_sarp_names(ctx, regs)
+    if sarp_names and not ctx.exists(ctx.TEST_SUBARRAY):
+        out.append(Finding(ctx.TEST_SUBARRAY, 0, "RC406",
+                           "subarray test matrix file missing"))
+    elif sarp_names:
+        for name in sorted(sarp_names):
+            reg = regs[name]
+            if not _matrix_covers(ctx, ctx.TEST_SUBARRAY, name):
+                out.append(Finding(
+                    ctx.TEST_SUBARRAY, 1, "RC406",
+                    f"SARP-trait policy '{name}' ({reg.path}:{reg.line}) "
+                    "never reaches the subarray matrix — add it or "
                     "iterate list_policies()"))
 
     table, has_trait_branch = classify_table(ctx)

@@ -158,12 +158,15 @@ class CheckpointEngine:
         arrs = {str(i): leaves[i] for i in banks[b]}
         path = os.path.join(ep_dir, f"bank_{b}.npz")
         tmp = path + f".tmp{b}"
-        with open(tmp, "wb") as fh:   # file handle: savez won't rename it
-            np.savez(fh, **arrs)
-        os.replace(tmp, path)
-        meta = {str(i): _crc(leaves[i]) for i in banks[b]}
-        with open(os.path.join(ep_dir, f"bank_{b}.crc.json"), "w") as f:
-            json.dump(meta, f)
+        try:
+            with open(tmp, "wb") as fh:  # file handle: savez won't rename it
+                np.savez(fh, **arrs)
+            os.replace(tmp, path)
+            meta = {str(i): _crc(leaves[i]) for i in banks[b]}
+            with open(os.path.join(ep_dir, f"bank_{b}.crc.json"), "w") as f:
+                json.dump(meta, f)
+        except FileNotFoundError:
+            return  # epoch dir gc'd concurrently: already superseded
         self.stats["flushes"] += 1
         if forced:
             self.stats["forced"] += 1

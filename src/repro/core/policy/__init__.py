@@ -6,7 +6,7 @@ first-class API).
   pol.select(view)                 # -> [Decision(bank=...), ...]
 
 Importing this package registers the built-in policies (paper family +
-the elastic/hira extras + the multirank pair)."""
+the elastic extra + the multirank pair + the subarray-aware hira)."""
 from repro.core.policy.base import (ALL_BANKS, ANY_RANK, Decision,
                                     MaintenanceView, PolicyBase,
                                     RefreshPolicy)
@@ -15,9 +15,10 @@ from repro.core.policy.registry import (get_policy, list_policies,
                                         register_policy, resolve_policy)
 from repro.core.policy.paper import (AllBankPolicy, DarpPolicy, IdealPolicy,
                                      RoundRobinPolicy)
-from repro.core.policy.extras import ElasticPolicy, HiraPolicy
+from repro.core.policy.extras import ElasticPolicy
 from repro.core.policy.multirank import (RankAwareDarpPolicy,
                                          StaggeredAllBankPolicy)
+from repro.core.policy.subarray import HiraPolicy
 
 __all__ = [
     "ALL_BANKS", "ANY_RANK", "Decision", "MaintenanceView", "PolicyBase",

@@ -93,6 +93,20 @@ class MaintenanceView:
     channel_of: Sequence[int] = ()   # [n_banks] channel per bank
     ranks_due: Sequence[int] = ()    # [n_ranks_total] per-rank ab debt
 
+    # ---- subarray plane (bank, subarray) — tick engines only ----------
+    # One level below banks: per-subarray refresh occupancy and row
+    # activation. Generic engines leave the defaults (one subarray per
+    # bank, no per-subarray signals). `next_ref_sub[b]` is the subarray a
+    # SARP per-bank refresh on bank b would target NEXT (the round-robin
+    # pointer); `refreshing_sub[b]` is the single subarray of bank b
+    # currently mid-refresh, or -1 when none or more than one (an all-
+    # bank refresh occupies every subarray); `active_sub[b]` is the
+    # subarray holding bank b's open row (-1 while the bank is closed).
+    n_subarrays: int = 1             # subarrays per bank
+    next_ref_sub: Sequence[int] = ()     # [n_banks] next SARP target
+    refreshing_sub: Sequence[int] = ()   # [n_banks] mid-refresh subarray
+    active_sub: Sequence[int] = ()       # [n_banks] open-row subarray
+
     @property
     def n_ranks_total(self) -> int:
         return self.n_ranks * self.n_channels

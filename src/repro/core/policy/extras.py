@@ -1,20 +1,18 @@
 """Post-paper policies, added registry-only — no engine internals touched.
 
-These exist to prove the `RefreshPolicy` API earns its keep: both run
+These exist to prove the `RefreshPolicy` API earns its keep: they run
 end-to-end through the DRAM density sweep (`run_policy("elastic", ...)`)
-and the serving benchmark (`ServeConfig(policy="hira")`) purely by being
-registered here.
+and the serving benchmark purely by being registered here.
 
   elastic : demand-elastic postpone — refresh debt is deferred while demand
             pressure is high and repaid aggressively (with pull-in) in
             low-pressure valleys, with a smoothing ramp so the forced cliff
             at the budget edge is never hit all at once. Inspired by the
             refresh-access parallelism follow-on work (arXiv:1805.01289).
-  hira    : refresh-behind-access — instead of seeking *idle* banks like
-            DARP, prefer refreshing banks that are actively serving demand,
-            hiding the refresh behind accesses to the bank's other
-            subarrays (requires the SARP trait). Inspired by HiRA
-            (arXiv:2209.10198).
+
+The subarray-aware `hira` policy, which used to live here, moved to
+`repro.core.policy.subarray` when the tick engines grew a real
+subarray plane for it to exploit.
 """
 from __future__ import annotations
 
@@ -94,63 +92,4 @@ class ElasticPolicy(PolicyBase):
                             and lag[b] >= urgent_at),
                            key=lambda b: -lag[b])
             take(cands, "urgency ramp")
-        return picks
-
-
-@register_policy("hira")
-class HiraPolicy(PolicyBase):
-    """Refresh-behind-access (HiRA-inspired).
-
-    DARP treats a bank with demand as untouchable; HiRA observes the
-    opposite opportunity: with subarray-level parallelism, a refresh issued
-    to a bank that is busy serving demand hides behind the access stream —
-    only same-subarray requests wait. So owed banks are taken busiest
-    first, falling back to idle banks when nothing is being accessed, and
-    write windows additionally pull refreshes in on busy banks.
-
-    Not in the source paper — post-paper registry addition, motivated by
-    HiRA (arXiv:2209.10198); builds on the paper's §5 SARP substrate.
-
-    Traits: level='pb' (per-bank) · sarp=True (required — refreshing a
-    busy bank only hides behind accesses with subarray-level parallelism)
-    · write-drain: consumed (`view.write_window` triggers busy-bank
-    pull-in).
-    """
-    sarp = True
-
-    def __init__(self, name: str = "hira"):
-        self.name = name
-
-    def select(self, view: MaintenanceView) -> list[Decision]:
-        lag = list(view.lag)
-        picks: list[Decision] = []
-        self._forced(view, lag, picks)
-        if len(picks) >= view.max_issues:
-            return picks
-        picked = {p.bank for p in picks}
-        avail = [b for b in range(view.n_banks)
-                 if view.ready[b] and b not in picked]
-        # owed banks: hide behind active demand first, most-demanded wins
-        hot = sorted((b for b in avail if lag[b] > 0 and view.demand[b] > 0),
-                     key=lambda b: (-view.demand[b], -lag[b]))
-        cold = sorted((b for b in avail
-                       if lag[b] > 0 and view.demand[b] == 0 and view.idle[b]),
-                      key=lambda b: -lag[b])
-        for b, why in ([(b, "behind access") for b in hot]
-                       + [(b, "idle fallback") for b in cold]):
-            if len(picks) >= view.max_issues:
-                return picks
-            picks.append(Decision(b, reason=why))
-            lag[b] -= 1
-            picked.add(b)
-        if view.write_window:
-            # pull in on busy banks too: the drain hides the refresh
-            extra = sorted((b for b in avail
-                            if b not in picked and lag[b] > -view.budget),
-                           key=lambda b: (-view.demand[b], -lag[b]))
-            for b in extra:
-                if len(picks) >= view.max_issues:
-                    break
-                picks.append(Decision(b, reason="write-window pull-in"))
-                lag[b] -= 1
         return picks

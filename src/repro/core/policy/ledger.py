@@ -74,7 +74,11 @@ class MaintenanceLedger:
              rank_quiet: bool = True, n_ranks: int = 1,
              n_channels: int = 1, rank_of: Sequence[int] = (),
              channel_of: Sequence[int] = (),
-             ranks_due: Sequence[int] = ()) -> MaintenanceView:
+             ranks_due: Sequence[int] = (),
+             n_subarrays: int = 1,
+             next_ref_sub: Sequence[int] = (),
+             refreshing_sub: Sequence[int] = (),
+             active_sub: Sequence[int] = ()) -> MaintenanceView:
         """Build the read-only snapshot a policy decides against.
 
         demand[b]: pending demand work on bank b. `ready`/`idle` default
@@ -84,7 +88,9 @@ class MaintenanceLedger:
         policies — engines that track rank refresh debt themselves (the
         tick simulators) pass them through here, along with the
         [channel, rank, bank] hierarchy fields (`rank_of`/`channel_of`/
-        `ranks_due`; see docs/tick-contract.md).
+        `ranks_due`) and, one level further down, the per-subarray
+        signals (`n_subarrays`/`next_ref_sub`/`refreshing_sub`/
+        `active_sub`; see docs/tick-contract.md).
         """
         assert len(demand) == self.n_banks
         assert now >= self._last_now, "time must be monotonic"
@@ -99,7 +105,11 @@ class MaintenanceLedger:
             pressure=float(pressure), rank_due=int(rank_due),
             rank_quiet=bool(rank_quiet), n_ranks=int(n_ranks),
             n_channels=int(n_channels), rank_of=tuple(rank_of),
-            channel_of=tuple(channel_of), ranks_due=tuple(ranks_due))
+            channel_of=tuple(channel_of), ranks_due=tuple(ranks_due),
+            n_subarrays=int(n_subarrays),
+            next_ref_sub=tuple(next_ref_sub),
+            refreshing_sub=tuple(refreshing_sub),
+            active_sub=tuple(active_sub))
 
     def apply(self, decisions: Sequence[Decision], now: float) -> list[int]:
         """Record the policy's decisions as issued; returns the flat bank

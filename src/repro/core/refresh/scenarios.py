@@ -446,3 +446,28 @@ def closed_multirank(reqs: int, seed: int) -> Workload:
     return Workload(name="multirank", n_cores=8, mlp=4, think_ns=10.0,
                     row_hit_rate=0.50, write_ratio=0.25,
                     reqs_per_core=max(1, reqs // 8), seed=seed)
+
+
+@register_closed_scenario("closed_subarray_storm")
+def closed_subarray_storm(reqs: int, seed: int) -> Workload:
+    """High demand pressure with almost no row reuse: every access opens a
+    new row, so rows (and their subarrays, drawn as `row % n_subarrays`)
+    scatter across the whole bank. Under per-bank refresh this keeps a
+    steady stream of accesses arriving AT banks that are mid-refresh —
+    exactly where SARP's idle-sibling-subarray serving pays and non-SARP
+    policies stall. The subarray conformance tier
+    (`tests/test_subarray.py`) runs this at `n_subarrays` in {1, 4, 8}."""
+    return Workload(name="subarray_storm", n_cores=8, mlp=4, think_ns=8.0,
+                    row_hit_rate=0.05, write_ratio=0.20,
+                    reqs_per_core=max(1, reqs // 8), seed=seed)
+
+
+@register_closed_scenario("closed_subarray_locality")
+def closed_subarray_locality(reqs: int, seed: int) -> Workload:
+    """The opposite pole: high row locality, so the open-row state each
+    subarray carries (`open_row_s`) is load-bearing — a refresh that
+    closes one subarray's row must not disturb its siblings' hit streaks.
+    Distinguishes per-subarray row buffers from a single per-bank one."""
+    return Workload(name="subarray_locality", n_cores=4, mlp=4,
+                    think_ns=12.0, row_hit_rate=0.75, write_ratio=0.15,
+                    reqs_per_core=max(1, reqs // 4), seed=seed)

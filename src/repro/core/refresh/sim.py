@@ -84,6 +84,12 @@ class SimResult:
     row_misses: int
     energy: float
     max_abs_lag: int
+    #: optional per-command occupancy timeline (`run_ticks(...,
+    #: record_timeline=True)` only): {"refresh": [(bank, sub, start, end,
+    #: kind)], "serves": [(t, bank, sub, row, is_write, done)]} in ticks,
+    #: sub == -1 for a whole-bank (non-SARP) refresh occupancy. fig2 and
+    #: the subarray overlap property tests are built on it.
+    timeline: Optional[dict] = None
 
     def weighted_speedup_vs(self, ideal: "SimResult") -> float:
         return float(np.mean([i / p for i, p in
@@ -434,7 +440,8 @@ class DramSim:
 
     # ------------------------------------------------------------------ run
     def run_ticks(self, dt_ns: float = 6.0,
-                  horizon: Optional[int] = None) -> SimResult:
+                  horizon: Optional[int] = None, *,
+                  record_timeline: bool = False) -> SimResult:
         """Closed-loop run on the sweep engine's integer tick contract.
 
         The event-heap `run()` above is the float timing-fidelity mode;
@@ -446,6 +453,16 @@ class DramSim:
         `tests/test_conformance.py` asserts the batched/jax/pallas grids
         are **bit-identical** to looping this method per cell.
 
+        Refresh occupancy and row-activation state are SUBARRAY-granular
+        (`ref_until_s[b][s]` / `open_row_s[b][s]`, `T.n_subarrays` wide):
+        a SARP refresh occupies one subarray while siblings keep serving
+        (at `SARP_PEN`); a non-SARP refresh occupies all of them. An
+        `hra`-trait policy additionally starts a per-bank refresh at the
+        decision tick — hidden behind the in-flight access — whenever the
+        target subarray differs from the bank's active subarray. With
+        `n_subarrays == 1` every rule degenerates to the bank-granular
+        contract bit-for-bit.
+
         Deliberately an independent implementation: per-request Python
         tuples, per-bank lists, and the shared `MaintenanceLedger`
         (`repro.core.policy.ledger`) for the due/issued accounting the
@@ -454,12 +471,17 @@ class DramSim:
         turnaround, tick quantization, no separate bus serialization
         point) are asserted as divergences in the conformance tests, not
         papered over.
+
+        `record_timeline=True` additionally fills `SimResult.timeline`
+        with every refresh occupancy interval and every serve (fig2's
+        data source; ~O(commands) memory).
         """
         from repro.core.policy.ledger import MaintenanceLedger
         from repro.core.refresh.workload import quantize_streams
         from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT,
-                                              W_OCC, W_WRITE)
-        from repro.core.sweep.engine import MAX_LAT_TICKS, _p99_ticks
+                                              W_NOCONF, W_OCC, W_WRITE)
+        from repro.core.sweep.engine import (MAX_LAT_TICKS, _p99_ticks,
+                                             _scalar_refreshing_sub)
 
         pol = resolve_policy(self._policy_spec)
         T = self.T
@@ -506,9 +528,8 @@ class DramSim:
         comp: list[tuple[int, int]] = []
 
         bank_free = [0] * B
-        ref_until = [0] * B
-        ref_sub = [-1] * B
-        open_row = [-1] * B
+        ref_until_s = [[0] * S for _ in range(B)]    # per-subarray refresh
+        open_row_s = [[-1] * S for _ in range(B)]    # per-subarray open row
         open_sub = [-1] * B
         ctr = [0] * B
         wpend = 0
@@ -523,18 +544,30 @@ class DramSim:
         lat_sum = 0
         hist = np.zeros(MAX_LAT_TICKS + 1, np.int32)
         last_done = 0
+        hra = bool(getattr(pol, "hra", False))
+        timeline = ({"refresh": [], "serves": []} if record_timeline
+                    else None)
 
         def start_pb(b: int, t: int):
             nonlocal refpb, maxlag
-            ref_until[b] = max(t, bank_free[b]) + RFC_PB
             ns_ = ctr[b] % S
+            # hidden row activation: a refresh targeting a subarray other
+            # than the bank's active one issues NOW, behind the in-flight
+            # access, instead of waiting for the bank to go idle
+            start = t if (hra and ns_ != open_sub[b]) else \
+                max(t, bank_free[b])
+            end = start + RFC_PB
             if pol.sarp:
-                ref_sub[b] = ns_
-                if open_sub[b] == ns_:
-                    open_row[b] = -1
+                ref_until_s[b][ns_] = end
+                open_row_s[b][ns_] = -1
+                if timeline is not None:
+                    timeline["refresh"].append((b, ns_, start, end, "pb"))
             else:
-                ref_sub[b] = -1
-                open_row[b] = -1
+                for s_ in range(S):
+                    ref_until_s[b][s_] = end
+                    open_row_s[b][s_] = -1
+                if timeline is not None:
+                    timeline["refresh"].append((b, -1, start, end, "pb"))
             ctr[b] += 1
             refpb += 1
             maxlag = max(maxlag, abs(led.lag(b, float(t))))
@@ -543,15 +576,19 @@ class DramSim:
             nonlocal refab
             end = t + RFC_AB
             for b in range(gr * NB, (gr + 1) * NB):
-                ref_until[b] = end
                 if pol.sarp:
-                    ref_sub[b] = ctr[b] % S
-                    if open_sub[b] == ref_sub[b]:
-                        open_row[b] = -1
+                    ns_ = ctr[b] % S
+                    ref_until_s[b][ns_] = end
+                    open_row_s[b][ns_] = -1
                     ctr[b] += 1
+                    if timeline is not None:
+                        timeline["refresh"].append((b, ns_, t, end, "ab"))
                 else:
-                    ref_sub[b] = -1
-                    open_row[b] = -1
+                    for s_ in range(S):
+                        ref_until_s[b][s_] = end
+                        open_row_s[b][s_] = -1
+                    if timeline is not None:
+                        timeline["refresh"].append((b, -1, t, end, "ab"))
             ab_pending[gr] -= 1
             rank_drain[gr] = ab_pending[gr] > 0
             refab += 1
@@ -614,11 +651,13 @@ class DramSim:
                 if pol.level == "ab":
                     if sum(ab_pending) > 0:
                         quiet = (all(f <= t for f in bank_free)
-                                 and all(r <= t for r in ref_until))
+                                 and all(ru <= t for rb in ref_until_s
+                                         for ru in rb))
                         view = MaintenanceView(
                             now=float(t), n_banks=B, budget=budget,
                             lag=[0] * B, demand=[0] * B,
-                            ready=[ref_until[b] <= t for b in range(B)],
+                            ready=[all(ru <= t for ru in ref_until_s[b])
+                                   for b in range(B)],
                             idle=[bank_free[b] <= t for b in range(B)],
                             write_window=drain,
                             max_issues=1, rank_due=sum(ab_pending),
@@ -626,7 +665,14 @@ class DramSim:
                             n_ranks=T.n_ranks, n_channels=NC,
                             rank_of=self._rank_of,
                             channel_of=self._chan_of,
-                            ranks_due=tuple(ab_pending))
+                            ranks_due=tuple(ab_pending),
+                            n_subarrays=S,
+                            next_ref_sub=tuple(ctr[b] % S
+                                               for b in range(B)),
+                            refreshing_sub=tuple(
+                                _scalar_refreshing_sub(ref_until_s[b], t)
+                                for b in range(B)),
+                            active_sub=tuple(open_sub))
                         for dec in pol.select(view):
                             if dec.bank == ALL_BANKS:
                                 if dec.rank >= 0:
@@ -643,10 +689,17 @@ class DramSim:
                         float(t),
                         demand=[len(q[b]) for b in range(B)],
                         write_window=drain,
-                        ready=[ref_until[b] <= t for b in range(B)],
+                        ready=[all(ru <= t for ru in ref_until_s[b])
+                               for b in range(B)],
                         idle=[bank_free[b] <= t for b in range(B)],
                         n_ranks=T.n_ranks, n_channels=NC,
-                        rank_of=self._rank_of, channel_of=self._chan_of)
+                        rank_of=self._rank_of, channel_of=self._chan_of,
+                        n_subarrays=S,
+                        next_ref_sub=tuple(ctr[b] % S for b in range(B)),
+                        refreshing_sub=tuple(
+                            _scalar_refreshing_sub(ref_until_s[b], t)
+                            for b in range(B)),
+                        active_sub=tuple(open_sub))
                     decs = pol.select(view)
                     for dec in decs:
                         if dec.bank == ALL_BANKS:
@@ -669,12 +722,16 @@ class DramSim:
                     arr, row, sub, isw, core = q[b][0]
                     if bank_free[b] > t:
                         continue
-                    if ref_until[b] > t and not (pol.sarp
-                                                 and ref_sub[b] != sub):
+                    # the head request's OWN subarray must be refresh-free
+                    # (a non-SARP refresh marks every subarray, so the
+                    # whole bank blocks; a SARP refresh only its target)
+                    if ref_until_s[b][sub] > t:
                         continue
                     sc = (W_WRITE if (drain_arb and isw) else 0) \
                         + W_OCC * min(len(q[b]), OCC_CAP) \
-                        + (W_HIT if row == open_row[b] else 0) \
+                        + (W_HIT if row == open_row_s[b][sub] else 0) \
+                        + (0 if any(ru > t for ru in ref_until_s[b])
+                           else W_NOCONF) \
                         + min(t - arr, AGE_CAP)
                     if sc > best_score:
                         best, best_score = b, sc
@@ -682,10 +739,10 @@ class DramSim:
                     b = best
                     gr = b // NB
                     arr, row, sub, isw, core = q[b].pop(0)
-                    hit = row == open_row[b]
+                    hit = row == open_row_s[b][sub]
                     lat = HIT if hit else MISS
-                    if pol.sarp and ref_until[b] > t:
-                        lat += SARP_PEN
+                    if pol.sarp and any(ru > t for ru in ref_until_s[b]):
+                        lat += SARP_PEN  # peripheral sharing penalty
                     if isw != last_op[ch]:
                         lat += TURN
                     if 0 <= last_rank[ch] != gr:
@@ -694,8 +751,11 @@ class DramSim:
                     bank_free[b] = done + (WR if isw else 0)
                     last_op[ch] = isw
                     last_rank[ch] = gr
-                    open_row[b] = row
+                    open_row_s[b][sub] = row
                     open_sub[b] = sub
+                    if timeline is not None:
+                        timeline["serves"].append(
+                            (t, b, sub, row, isw, done))
                     if hit:
                         hits += 1
                     else:
@@ -724,7 +784,7 @@ class DramSim:
             p99_read_latency=dt_ns * _p99_ticks(hist, reads),
             refreshes_pb=refpb, refreshes_ab=refab,
             row_hits=hits, row_misses=misses, energy=e,
-            max_abs_lag=maxlag,
+            max_abs_lag=maxlag, timeline=timeline,
         )
 
     def run(self) -> SimResult:

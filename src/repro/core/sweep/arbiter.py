@@ -14,19 +14,26 @@ Priority of an eligible head request (descending):
   2. demand-side occupancy (closed-loop mode only: deeper per-bank queues
      first — serving the most-backed-up bank unblocks the most MLP-limited
      cores; open-loop runs pass `occ=None` and the field stays zero),
-  3. row-buffer hits (FR-FCFS),
-  4. age (oldest arrival first; capped so the packed score fits in int32).
+  3. row-buffer hits (FR-FCFS, per-subarray row buffers),
+  4. no-subarray-conflict (prefer a bank with no sibling-subarray refresh
+     in flight — serving around one costs `SARP_PEN`),
+  5. age (oldest arrival first; capped so the packed score fits in int32).
 
-The packed int32 score keeps the fields disjoint: age in bits 0..19, hit
-at bit 21, occupancy (clamped to OCC_CAP) in bits 22..24, drain-write at
-bit 25 — max score < 2**26.
+Eligibility mirrors `DramSim._bank_available` on the subarray-granular
+state: the bank is not busy with a demand access, the head request's OWN
+subarray is not mid-refresh (`head_ref_until` is the refresh-end tick of
+the head's target subarray — a non-SARP refresh marks every subarray of
+the bank, so the whole bank blocks; a SARP refresh marks only the
+refreshed subarray, so siblings stay eligible), and the bank's OWN rank
+is not draining for an all-bank refresh — `rank_drain` is a per-bank
+[G, B] plane (each bank carries its global rank's drain flag), so with
+multiple ranks one draining rank masks only its own banks.
 
-Eligibility mirrors `DramSim._bank_available`: the bank is not busy with a
-demand access, not mid-refresh (unless the policy has the SARP trait and
-the request targets a different subarray than the one refreshing), and the
-bank's OWN rank is not draining for an all-bank refresh — `rank_drain` is
-a per-bank [G, B] plane (each bank carries its global rank's drain flag),
-so with multiple ranks one draining rank masks only its own banks.
+The callers gather the per-head subarray planes before scoring:
+`head_ref_until[g, b] = ref_until_s[g, b * S + head_sub]`,
+`open_row[g, b] = open_row_s[g, b * S + head_sub]`, and
+`bank_mid_ref[g, b] = any subarray of bank b mid-refresh` — so the
+arbiter itself stays a [G, B] kernel regardless of `n_subarrays`.
 """
 from __future__ import annotations
 
@@ -36,56 +43,58 @@ import numpy as np
 # source of truth, cross-checked against the Pallas kernel and the
 # docs/tick-contract.md field table by `repro.analysis`); re-exported
 # here because this module is the historical import site.
-from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
-                                     W_WRITE)
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_NOCONF,
+                                     W_OCC, W_WRITE)
 
-__all__ = ["AGE_CAP", "OCC_CAP", "W_HIT", "W_OCC", "W_WRITE",
+__all__ = ["AGE_CAP", "OCC_CAP", "W_HIT", "W_NOCONF", "W_OCC", "W_WRITE",
            "arbiter_scores", "arbiter_scores_masked", "arbiter_choice"]
 
 
-def arbiter_scores(xp, t, *, has_req, head_row, head_sub, head_arrive,
-                   head_is_write, bank_free, ref_until, ref_sub, open_row,
-                   drain, sarp, rank_drain, occ=None):
+def arbiter_scores(xp, t, *, has_req, head_row, head_arrive, head_is_write,
+                   bank_free, head_ref_until, bank_mid_ref, open_row,
+                   drain, rank_drain, occ=None):
     """Score every (cell, bank); ineligible slots get -1.
 
-    [G, B] int32: head_row, head_sub, head_arrive, bank_free, ref_until,
-                  ref_sub, open_row (+ occ when given: queue depth)
-    [G, B] bool : has_req, head_is_write, rank_drain (per-bank plane:
+    [G, B] int32: head_row, head_arrive, bank_free, head_ref_until (the
+                  head subarray's refresh-end tick), open_row (the head
+                  subarray's open row) (+ occ when given: queue depth)
+    [G, B] bool : has_req, head_is_write, bank_mid_ref (any subarray of
+                  the bank mid-refresh), rank_drain (per-bank plane:
                   each bank carries its global rank's drain flag)
-    [G] bool    : drain, sarp
+    [G] bool    : drain
     t           : scalar tick
     """
-    mid_ref = ref_until > t
-    avail = ((bank_free <= t)
-             & (~mid_ref | (sarp[:, None] & (ref_sub != head_sub))))
+    avail = (bank_free <= t) & (head_ref_until <= t)
     elig = has_req & avail & ~rank_drain
     age = xp.minimum(t - head_arrive, AGE_CAP)
     score = (xp.where(drain[:, None] & head_is_write, W_WRITE, 0)
-             + xp.where(head_row == open_row, W_HIT, 0) + age)
+             + xp.where(head_row == open_row, W_HIT, 0)
+             + xp.where(bank_mid_ref, 0, W_NOCONF) + age)
     if occ is not None:
         score = score + W_OCC * xp.minimum(occ, OCC_CAP)
     return xp.where(elig, score, -1).astype(xp.int32)
 
 
-def arbiter_scores_masked(t, *, has_req, idle, ready, head_row, head_sub,
-                          head_arrive, head_is_write, ref_sub, open_row,
-                          drain, sarp_col, rank_drain, rank_can_drain,
-                          occ=None):
+def arbiter_scores_masked(t, *, has_req, idle, head_ready, bank_mid_ref,
+                          head_row, head_arrive, head_is_write, open_row,
+                          drain, rank_drain, rank_can_drain, occ=None):
     """`arbiter_scores`, restated over precomputed availability masks —
     the batched numpy backend's per-tick fast path (``idle`` must equal
-    ``bank_free <= t`` and ``ready`` must equal ``ref_until <= t`` at the
-    same instant; ``sarp_col`` is the [G, 1] SARP trait column,
-    ``rank_drain`` the per-bank [G, B] drain plane, and
-    ``rank_can_drain`` statically disables the rank-drain gate for grids
-    without rank-level policies). Kept in this module, next to the shared
-    definition, so the two formulations are edited in lock-step;
+    ``bank_free <= t`` and ``head_ready`` must equal
+    ``head_ref_until <= t`` at the same instant; ``bank_mid_ref`` flags
+    banks with ANY subarray mid-refresh, ``rank_drain`` is the per-bank
+    [G, B] drain plane, and ``rank_can_drain`` statically disables the
+    rank-drain gate for grids without rank-level policies). Kept in this
+    module, next to the shared definition, so the two formulations are
+    edited in lock-step;
     `tests/test_sweep.py::test_masked_scores_match_shared` pins them
     bit-identical."""
-    elig = has_req & idle & (ready | (sarp_col & (ref_sub != head_sub)))
+    elig = has_req & idle & head_ready
     if rank_can_drain:
         elig &= ~rank_drain
     base = np.minimum(t - head_arrive, AGE_CAP) \
-        + np.where(head_row == open_row, W_HIT, 0)
+        + np.where(head_row == open_row, W_HIT, 0) \
+        + np.where(bank_mid_ref, 0, W_NOCONF)
     if occ is not None:
         base += W_OCC * np.minimum(occ, OCC_CAP)
     if drain.any():

@@ -19,6 +19,20 @@ bank`` so the state arrays are ``[G, n_banks_total]`` with rank/channel
 id planes (`_Grid.rank_of_b` / `chan_of_b`). The default 1x1 hierarchy
 reproduces the historical flat single-rank engine bit-for-bit.
 
+One level further down, refresh occupancy and row-activation state are
+SUBARRAY-granular: ``ref_until_s`` / ``open_row_s`` are stacked over
+global subarrays, ``[G, n_banks_total * n_subarrays]`` with column
+``gs = gb * S + sub``. A SARP refresh occupies (and closes the row of)
+only its target subarray ``ctr % S``, so sibling-subarray accesses stay
+eligible while it runs (at `SARP_PEN` extra latency, deprioritized by
+the `W_NOCONF` score bit); a non-SARP refresh occupies every subarray of
+the bank, blocking it whole. Policies with the `hra` trait (`hira`,
+HiRA — hidden row activation) additionally start a per-bank refresh at
+`t` when its target subarray differs from the in-flight access's
+subarray, hiding the refresh activation behind the access instead of
+waiting for the bank. With ``n_subarrays=1`` every one of these rules
+degenerates to the bank-granular engine bit-for-bit.
+
 Tick semantics (the contract every backend implements identically;
 `docs/tick-contract.md` is the normative spec):
 
@@ -116,8 +130,8 @@ from repro.core.policy import ALL_BANKS, MaintenanceView, resolve_policy
 from repro.core.refresh.scenarios import (ClosedDemand, Trace,
                                           make_closed_demand, make_trace)
 from repro.core.refresh.timing import timing_for_density
-from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
-                                      W_WRITE, arbiter_scores,
+from repro.core.sweep.arbiter import (AGE_CAP, OCC_CAP, W_HIT, W_NOCONF,
+                                      W_OCC, W_WRITE, arbiter_scores,
                                       arbiter_scores_masked)
 from repro.core.sweep.policies import (KIND_AB, KIND_CUSTOM, KIND_IDEAL,
                                        KIND_STAG, classify, could_pick,
@@ -414,6 +428,7 @@ class _Grid:
         self.kind = ints()
         self.level_ab = np.zeros(G, bool)
         self.sarp = np.zeros(G, bool)
+        self.hra = np.zeros(G, bool)      # HiRA hidden-row-activation trait
         self.wrp = np.zeros(G, bool)
         self.urgent_at = np.ones(G, np.int32)
         self.budget = ints()
@@ -448,6 +463,7 @@ class _Grid:
             self.kind[g] = kind
             self.level_ab[g] = (not pol.ideal) and pol.level == "ab"
             self.sarp[g] = pol.sarp
+            self.hra[g] = bool(getattr(pol, "hra", False))
             self.wrp[g] = params.get("wrp", False)
             self.urgent_at[g] = params.get("urgent_at", 1)
             self.budget[g] = tk.budget
@@ -480,6 +496,7 @@ class _Grid:
                     self.q_write[g, b, :n] = isw
 
         self.has_stag = bool((self.kind == KIND_STAG).any())
+        self.has_hra = bool(self.hra.any())
 
         svc = int(self.MISS.max() + self.WR.max() + self.TURN.max() + 2)
         if self.closed:
@@ -500,6 +517,24 @@ class _Grid:
 
 
 # ----------------------------------------------------------- finalization
+def _refreshing_subs(ru_bank_sub: np.ndarray, t: int) -> tuple:
+    """Per-bank currently-refreshing subarray for `MaintenanceView`
+    (input is one cell's [B, S] ref_until plane): the single mid-refresh
+    subarray if exactly one is occupied (a SARP per-subarray refresh),
+    else -1 (idle bank, or a whole-bank refresh)."""
+    mid = ru_bank_sub > t
+    n_mid = mid.sum(axis=1)
+    first = np.argmax(mid, axis=1)
+    return tuple(int(f) if n == 1 else -1 for f, n in zip(first, n_mid))
+
+
+def _scalar_refreshing_sub(ru_subs, t: int) -> int:
+    """`_refreshing_subs` for one bank's plain-list state (scalar oracle
+    and `DramSim.run_ticks` keep per-bank lists, not planes)."""
+    mid = [i for i, ru in enumerate(ru_subs) if ru > t]
+    return mid[0] if len(mid) == 1 else -1
+
+
 def _p99_ticks(hist_row: np.ndarray, n_reads: int) -> int:
     if n_reads <= 0:
         return 0
@@ -567,11 +602,11 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
     qw = grid.q_write.reshape(G * B, L)
     n_pb_flat = grid.n_per_bank.reshape(G * B)
 
-    # machine state, stacked [G, B]
+    # machine state, stacked [G, B]; refresh occupancy and open rows are
+    # subarray-granular, [G, B * S] with column gs = bank * S + sub
     bank_free = np.zeros((G, B), np.int32)
-    ref_until = np.zeros((G, B), np.int32)
-    ref_sub = np.full((G, B), -1, np.int32)
-    open_row = np.full((G, B), -1, np.int32)
+    ref_until_s = np.zeros((G, B * S), np.int32)
+    open_row_s = np.full((G, B * S), -1, np.int32)
     open_sub = np.full((G, B), -1, np.int32)
     ctr = np.zeros((G, B), np.int32)
     issued = np.zeros((G, B), np.int32)
@@ -613,7 +648,9 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
     phase, REFI_col = grid.phase, grid.REFI[:, None]
     RFC_PB_col = grid.RFC_PB[:, None]
     sarp_c = grid.sarp[:, None]
-    sarp_g, kind_g = grid.sarp, grid.kind
+    hra_c = grid.hra[:, None]
+    sub_of_col = np.tile(np.arange(S, dtype=np.int32), B)[None, :]
+    kind_g = grid.kind
     budget_g, wrp_g, urgent_g = grid.budget, grid.wrp, grid.urgent_at
     level_ab = grid.level_ab
     rank_phase_g = grid.rank_phase          # [G, R] accrual stagger
@@ -659,7 +696,7 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
         due = np.maximum((t - phase) // REFI_col + 1, 0)
         lag = due - issued
         demand = n_arrived - n_served
-        ready = ref_until <= t
+        ready = (ref_until_s.reshape(G, B, S) <= t).all(axis=2)
         idle = bank_free <= t
         need = could_pick(kind=kind_active, lag=lag, demand=demand,
                           write_window=drain, budget=budget_g, wrp=wrp_g)
@@ -709,7 +746,12 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
                     rank_quiet=quiet_g,
                     n_ranks=grid.NR, n_channels=NC,
                     rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
-                    ranks_due=tuple(int(x) for x in ab_pending[g]))
+                    ranks_due=tuple(int(x) for x in ab_pending[g]),
+                    n_subarrays=S,
+                    next_ref_sub=tuple(int(x) % S for x in ctr[g]),
+                    refreshing_sub=_refreshing_subs(
+                        ref_until_s[g].reshape(B, S), t),
+                    active_sub=tuple(int(x) for x in open_sub[g]))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         if start_ab_r is None:
@@ -727,7 +769,12 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
                     ready=ready[g].tolist(), idle=idle[g].tolist(),
                     write_window=bool(drain[g]), max_issues=1,
                     n_ranks=grid.NR, n_channels=NC,
-                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+                    n_subarrays=S,
+                    next_ref_sub=tuple(int(x) % S for x in ctr[g]),
+                    refreshing_sub=_refreshing_subs(
+                        ref_until_s[g].reshape(B, S), t),
+                    active_sub=tuple(int(x) for x in open_sub[g]))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
@@ -740,54 +787,68 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
         if start_ab_r is not None and start_ab_r.any():
             m = np.repeat(start_ab_r, NB, axis=1)
             new_sub = (ctr % S).astype(np.int32)
-            ref_until = np.where(m, (t + grid.RFC_AB)[:, None], ref_until)
-            ref_sub = np.where(m, np.where(sarp_c, new_sub, -1), ref_sub)
-            close = m & np.where(sarp_c, open_sub == new_sub, True)
-            open_row = np.where(close, -1, open_row)
+            # SARP marks (and closes) only the target subarray ctr % S;
+            # a non-SARP refresh occupies every subarray of the bank
+            mark = (np.repeat(m, S, axis=1)
+                    & np.where(sarp_c, np.repeat(new_sub, S, axis=1)
+                               == sub_of_col, True))
+            ref_until_s = np.where(mark, (t + grid.RFC_AB)[:, None],
+                                   ref_until_s)
+            open_row_s = np.where(mark, -1, open_row_s)
             ctr = ctr + (m & sarp_c)
             ab_pending -= start_ab_r
             rank_drain = np.where(start_ab_r, ab_pending > 0, rank_drain)
             refab += start_ab_r.sum(axis=1)
-            ready &= ~m                     # tRFC_ab >= 1: mid-refresh now
 
         if picks is not None:
             new_sub = (ctr % S).astype(np.int32)
-            ref_until = np.where(
-                picks, np.maximum(t, bank_free) + RFC_PB_col, ref_until)
-            ref_sub = np.where(picks, np.where(sarp_c, new_sub, -1),
-                               ref_sub)
-            close = picks & np.where(sarp_c, open_sub == new_sub, True)
-            open_row = np.where(close, -1, open_row)
+            # HiRA hidden row activation: when the refresh targets a
+            # subarray the in-flight access is NOT using, start it at t —
+            # overlapping the access — instead of waiting for the bank
+            # (inert at S=1: the lone subarray matches open_sub once any
+            # access has been served, and bank_free <= t before then)
+            start = np.maximum(t, bank_free)
+            start = np.where(hra_c & (new_sub != open_sub), t, start)
+            mark = (np.repeat(picks, S, axis=1)
+                    & np.where(sarp_c, np.repeat(new_sub, S, axis=1)
+                               == sub_of_col, True))
+            ref_until_s = np.where(
+                mark, np.repeat(start + RFC_PB_col, S, axis=1), ref_until_s)
+            open_row_s = np.where(mark, -1, open_row_s)
             ctr = ctr + picks
             issued = issued + picks
             refpb += picks.sum(axis=1)
             lag_after = due - issued
             maxlag = np.maximum(
                 maxlag, np.where(picks, np.abs(lag_after), 0).max(axis=1))
-            ready &= ~picks                 # tRFC_pb >= 1: mid-refresh now
 
         # ---- D: arbitration — at most one request start per channel
-        # (`ready`/`idle` mirror ref_until/bank_free vs t after the refresh
-        # applications above, so the shared scoring reduces to these masks;
-        # scores — incl. the drain flag — are snapshotted before any serve)
+        # (the head request's own subarray's refresh/open-row state is
+        # gathered from the post-refresh [G, B*S] planes, so the arbiter
+        # stays a flat [G, B] step; scores — incl. the drain flag — are
+        # snapshotted before any serve)
         has_req = demand > 0
         if not has_req.any():
             t += 1
             continue
         rank_drain_b = np.repeat(rank_drain, NB, axis=1)
+        ru3 = ref_until_s.reshape(G, B, S)
+        head_ru = np.take_along_axis(ru3, h_sub[:, :, None], 2)[:, :, 0]
+        head_or = np.take_along_axis(
+            open_row_s.reshape(G, B, S), h_sub[:, :, None], 2)[:, :, 0]
+        bank_mid = (ru3 > t).any(axis=2)
         if score_fn is not None:
             score = np.asarray(score_fn(
-                t, has_req=has_req, head_row=h_row, head_sub=h_sub,
-                head_arrive=h_arr, head_is_write=h_w, bank_free=bank_free,
-                ref_until=ref_until, ref_sub=ref_sub, open_row=open_row,
-                drain=drain, sarp=sarp_g, rank_drain=rank_drain_b))
+                t, has_req=has_req, head_row=h_row, head_arrive=h_arr,
+                head_is_write=h_w, bank_free=bank_free,
+                head_ref_until=head_ru, bank_mid_ref=bank_mid,
+                open_row=head_or, drain=drain, rank_drain=rank_drain_b))
         else:
             score = arbiter_scores_masked(
-                t, has_req=has_req, idle=idle, ready=ready, head_row=h_row,
-                head_sub=h_sub, head_arrive=h_arr, head_is_write=h_w,
-                ref_sub=ref_sub, open_row=open_row, drain=drain,
-                sarp_col=sarp_c, rank_drain=rank_drain_b,
-                rank_can_drain=has_drain_block)
+                t, has_req=has_req, idle=idle, head_ready=head_ru <= t,
+                bank_mid_ref=bank_mid, head_row=h_row, head_arrive=h_arr,
+                head_is_write=h_w, open_row=head_or, drain=drain,
+                rank_drain=rank_drain_b, rank_can_drain=has_drain_block)
         for ch in range(NC):
             sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
             bs_loc = sc_ch.argmax(axis=1)
@@ -798,9 +859,9 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
             bs = bs_loc[gs] + ch * RBC
             row, sub = h_row[gs, bs], h_sub[gs, bs]
             arr, isw = h_arr[gs, bs], h_w[gs, bs]
-            hit = row == open_row[gs, bs]
+            hit = row == head_or[gs, bs]
             lat = np.where(hit, grid.HIT[gs], grid.MISS[gs])
-            lat = lat + np.where(grid.sarp[gs] & (ref_until[gs, bs] > t),
+            lat = lat + np.where(grid.sarp[gs] & bank_mid[gs, bs],
                                  grid.SARP_PEN[gs], 0)
             lat = lat + np.where(isw != last_op[gs, ch], grid.TURN[gs], 0)
             gr_b = bs // NB
@@ -810,7 +871,7 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
             bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
             last_op[gs, ch] = isw
             last_rank[gs, ch] = gr_b
-            open_row[gs, bs] = row
+            open_row_s[gs, bs * S + sub] = row
             open_sub[gs, bs] = sub
             n_served[gs, bs] += 1
             hits[gs] += hit
@@ -897,11 +958,11 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
     finish = np.where(remaining == 0, 0, -1).astype(np.int32)
     comp_t = np.full((G, C, K), _PAD_ARRIVE, np.int32)
 
-    # machine state, stacked [G, B]
+    # machine state, stacked [G, B]; refresh occupancy and open rows are
+    # subarray-granular, [G, B * S] with column gs = bank * S + sub
     bank_free = np.zeros((G, B), np.int32)
-    ref_until = np.zeros((G, B), np.int32)
-    ref_sub = np.full((G, B), -1, np.int32)
-    open_row = np.full((G, B), -1, np.int32)
+    ref_until_s = np.zeros((G, B * S), np.int32)
+    open_row_s = np.full((G, B * S), -1, np.int32)
     open_sub = np.full((G, B), -1, np.int32)
     ctr = np.zeros((G, B), np.int32)
     issued = np.zeros((G, B), np.int32)
@@ -932,7 +993,9 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
     phase, REFI_col = grid.phase, grid.REFI[:, None]
     RFC_PB_col = grid.RFC_PB[:, None]
     sarp_c = grid.sarp[:, None]
-    sarp_g, kind_g = grid.sarp, grid.kind
+    hra_c = grid.hra[:, None]
+    sub_of_col = np.tile(np.arange(S, dtype=np.int32), B)[None, :]
+    kind_g = grid.kind
     budget_g, wrp_g, urgent_g = grid.budget, grid.wrp, grid.urgent_at
     level_ab = grid.level_ab
     rank_phase_g = grid.rank_phase          # [G, R] accrual stagger
@@ -1017,7 +1080,7 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
         due = np.maximum((t - phase) // REFI_col + 1, 0)
         lag = due - issued
         demand = q_tail - q_head
-        ready = ref_until <= t
+        ready = (ref_until_s.reshape(G, B, S) <= t).all(axis=2)
         idle = bank_free <= t
         need = could_pick(kind=kind_active, lag=lag, demand=demand,
                           write_window=drain, budget=budget_g, wrp=wrp_g)
@@ -1067,7 +1130,12 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
                     rank_quiet=quiet_g,
                     n_ranks=grid.NR, n_channels=NC,
                     rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
-                    ranks_due=tuple(int(x) for x in ab_pending[g]))
+                    ranks_due=tuple(int(x) for x in ab_pending[g]),
+                    n_subarrays=S,
+                    next_ref_sub=tuple(int(x) % S for x in ctr[g]),
+                    refreshing_sub=_refreshing_subs(
+                        ref_until_s[g].reshape(B, S), t),
+                    active_sub=tuple(int(x) for x in open_sub[g]))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         if start_ab_r is None:
@@ -1085,7 +1153,12 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
                     ready=ready[g].tolist(), idle=idle[g].tolist(),
                     write_window=bool(drain[g]), max_issues=1,
                     n_ranks=grid.NR, n_channels=NC,
-                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+                    n_subarrays=S,
+                    next_ref_sub=tuple(int(x) % S for x in ctr[g]),
+                    refreshing_sub=_refreshing_subs(
+                        ref_until_s[g].reshape(B, S), t),
+                    active_sub=tuple(int(x) for x in open_sub[g]))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
@@ -1098,31 +1171,40 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
         if start_ab_r is not None and start_ab_r.any():
             m = np.repeat(start_ab_r, NB, axis=1)
             new_sub = (ctr % S).astype(np.int32)
-            ref_until = np.where(m, (t + grid.RFC_AB)[:, None], ref_until)
-            ref_sub = np.where(m, np.where(sarp_c, new_sub, -1), ref_sub)
-            close = m & np.where(sarp_c, open_sub == new_sub, True)
-            open_row = np.where(close, -1, open_row)
+            # SARP marks (and closes) only the target subarray ctr % S;
+            # a non-SARP refresh occupies every subarray of the bank
+            mark = (np.repeat(m, S, axis=1)
+                    & np.where(sarp_c, np.repeat(new_sub, S, axis=1)
+                               == sub_of_col, True))
+            ref_until_s = np.where(mark, (t + grid.RFC_AB)[:, None],
+                                   ref_until_s)
+            open_row_s = np.where(mark, -1, open_row_s)
             ctr = ctr + (m & sarp_c)
             ab_pending -= start_ab_r
             rank_drain = np.where(start_ab_r, ab_pending > 0, rank_drain)
             refab += start_ab_r.sum(axis=1)
-            ready &= ~m                     # tRFC_ab >= 1: mid-refresh now
 
         if picks is not None:
             new_sub = (ctr % S).astype(np.int32)
-            ref_until = np.where(
-                picks, np.maximum(t, bank_free) + RFC_PB_col, ref_until)
-            ref_sub = np.where(picks, np.where(sarp_c, new_sub, -1),
-                               ref_sub)
-            close = picks & np.where(sarp_c, open_sub == new_sub, True)
-            open_row = np.where(close, -1, open_row)
+            # HiRA hidden row activation: when the refresh targets a
+            # subarray the in-flight access is NOT using, start it at t —
+            # overlapping the access — instead of waiting for the bank
+            # (inert at S=1: the lone subarray matches open_sub once any
+            # access has been served, and bank_free <= t before then)
+            start = np.maximum(t, bank_free)
+            start = np.where(hra_c & (new_sub != open_sub), t, start)
+            mark = (np.repeat(picks, S, axis=1)
+                    & np.where(sarp_c, np.repeat(new_sub, S, axis=1)
+                               == sub_of_col, True))
+            ref_until_s = np.where(
+                mark, np.repeat(start + RFC_PB_col, S, axis=1), ref_until_s)
+            open_row_s = np.where(mark, -1, open_row_s)
             ctr = ctr + picks
             issued = issued + picks
             refpb += picks.sum(axis=1)
             lag_after = due - issued
             maxlag = np.maximum(
                 maxlag, np.where(picks, np.abs(lag_after), 0).max(axis=1))
-            ready &= ~picks                 # tRFC_pb >= 1: mid-refresh now
 
         # ---- 5: occupancy-aware arbitration — one start per channel
         # (scores — incl. the drain flag — snapshotted before any serve)
@@ -1136,20 +1218,25 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
         h_sub = qs[flat_gb, hslot]
         h_w = qw[flat_gb, hslot]
         rank_drain_b = np.repeat(rank_drain, NB, axis=1)
+        ru3 = ref_until_s.reshape(G, B, S)
+        head_ru = np.take_along_axis(ru3, h_sub[:, :, None], 2)[:, :, 0]
+        head_or = np.take_along_axis(
+            open_row_s.reshape(G, B, S), h_sub[:, :, None], 2)[:, :, 0]
+        bank_mid = (ru3 > t).any(axis=2)
         if score_fn is not None:
             score = np.asarray(score_fn(
-                t, has_req=has_req, head_row=h_row, head_sub=h_sub,
-                head_arrive=h_arr, head_is_write=h_w, bank_free=bank_free,
-                ref_until=ref_until, ref_sub=ref_sub, open_row=open_row,
-                drain=drain, sarp=sarp_g, rank_drain=rank_drain_b,
+                t, has_req=has_req, head_row=h_row, head_arrive=h_arr,
+                head_is_write=h_w, bank_free=bank_free,
+                head_ref_until=head_ru, bank_mid_ref=bank_mid,
+                open_row=head_or, drain=drain, rank_drain=rank_drain_b,
                 occ=demand))
         else:
             score = arbiter_scores_masked(
-                t, has_req=has_req, idle=idle, ready=ready, head_row=h_row,
-                head_sub=h_sub, head_arrive=h_arr, head_is_write=h_w,
-                ref_sub=ref_sub, open_row=open_row, drain=drain,
-                sarp_col=sarp_c, rank_drain=rank_drain_b,
-                rank_can_drain=has_drain_block, occ=demand)
+                t, has_req=has_req, idle=idle, head_ready=head_ru <= t,
+                bank_mid_ref=bank_mid, head_row=h_row, head_arrive=h_arr,
+                head_is_write=h_w, open_row=head_or, drain=drain,
+                rank_drain=rank_drain_b, rank_can_drain=has_drain_block,
+                occ=demand)
         for ch in range(NC):
             sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
             bs_loc = sc_ch.argmax(axis=1)
@@ -1161,9 +1248,9 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
             row, sub = h_row[gs, bs], h_sub[gs, bs]
             arr, isw = h_arr[gs, bs], h_w[gs, bs]
             core = qc[gs * B + bs, hslot[gs, bs]]
-            hit = row == open_row[gs, bs]
+            hit = row == head_or[gs, bs]
             lat = np.where(hit, grid.HIT[gs], grid.MISS[gs])
-            lat = lat + np.where(grid.sarp[gs] & (ref_until[gs, bs] > t),
+            lat = lat + np.where(grid.sarp[gs] & bank_mid[gs, bs],
                                  grid.SARP_PEN[gs], 0)
             lat = lat + np.where(isw != last_op[gs, ch], grid.TURN[gs], 0)
             gr_b = bs // NB
@@ -1173,7 +1260,7 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
             bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
             last_op[gs, ch] = isw
             last_rank[gs, ch] = gr_b
-            open_row[gs, bs] = row
+            open_row_s[gs, bs * S + sub] = row
             open_sub[gs, bs] = sub
             q_head[gs, bs] += 1
             hits[gs] += hit
@@ -1216,6 +1303,7 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
     RBC = grid.NR * NB               # banks per channel
     HI, LO = spec.wbuf_hi, spec.wbuf_lo
     pol = resolve_policy(p)
+    hra = bool(getattr(pol, "hra", False))
     budget = tk.budget
 
     q = []
@@ -1230,9 +1318,8 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
     rank_phase = [gr * (tk.REFI // R) for gr in range(R)]
 
     bank_free = [0] * B
-    ref_until = [0] * B
-    ref_sub = [-1] * B
-    open_row = [-1] * B
+    ref_until_s = [[0] * S for _ in range(B)]
+    open_row_s = [[-1] * S for _ in range(B)]
     open_sub = [-1] * B
     ctr = [0] * B
     issued = [0] * B
@@ -1257,15 +1344,18 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
 
     def start_pb(b: int, t: int):
         nonlocal refpb, maxlag
-        ref_until[b] = max(t, bank_free[b]) + tk.RFC_PB
         ns = ctr[b] % S
+        # HiRA: hide the refresh activation behind an in-flight access to
+        # a different subarray (start at t instead of waiting for the bank)
+        start = t if (hra and ns != open_sub[b]) else max(t, bank_free[b])
+        end = start + tk.RFC_PB
         if pol.sarp:
-            ref_sub[b] = ns
-            if open_sub[b] == ns:
-                open_row[b] = -1
+            ref_until_s[b][ns] = end
+            open_row_s[b][ns] = -1
         else:
-            ref_sub[b] = -1
-            open_row[b] = -1
+            for s_ in range(S):
+                ref_until_s[b][s_] = end
+                open_row_s[b][s_] = -1
         ctr[b] += 1
         issued[b] += 1
         refpb += 1
@@ -1275,15 +1365,15 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
         nonlocal refab
         end = t + tk.RFC_AB
         for b in range(gr * NB, (gr + 1) * NB):
-            ref_until[b] = end
             if pol.sarp:
-                ref_sub[b] = ctr[b] % S
-                if open_sub[b] == ref_sub[b]:
-                    open_row[b] = -1
+                ns = ctr[b] % S
+                ref_until_s[b][ns] = end
+                open_row_s[b][ns] = -1
                 ctr[b] += 1
             else:
-                ref_sub[b] = -1
-                open_row[b] = -1
+                for s_ in range(S):
+                    ref_until_s[b][s_] = end
+                    open_row_s[b][s_] = -1
         ab_pending[gr] -= 1
         rank_drain[gr] = ab_pending[gr] > 0
         refab += 1
@@ -1305,15 +1395,22 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
         return MaintenanceView(
             now=float(t), n_banks=B, budget=budget,
             lag=[0] * B, demand=[0] * B,
-            ready=[ref_until[b] <= t for b in range(B)],
+            ready=[all(ru <= t for ru in ref_until_s[b])
+                   for b in range(B)],
             idle=[bank_free[b] <= t for b in range(B)],
             write_window=drain, max_issues=1,
             rank_due=sum(ab_pending),
             rank_quiet=(all(f <= t for f in bank_free)
-                        and all(r_ <= t for r_ in ref_until)),
+                        and all(ru <= t for rb in ref_until_s
+                                for ru in rb)),
             n_ranks=grid.NR, n_channels=NC,
             rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
-            ranks_due=tuple(ab_pending))
+            ranks_due=tuple(ab_pending),
+            n_subarrays=S,
+            next_ref_sub=tuple(ctr[b] % S for b in range(B)),
+            refreshing_sub=tuple(_scalar_refreshing_sub(ref_until_s[b], t)
+                                 for b in range(B)),
+            active_sub=tuple(open_sub))
 
     t = 0
     while served < total and t < grid.horizon:
@@ -1344,11 +1441,18 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                     now=float(t), n_banks=B, budget=budget,
                     lag=[due(b, t) - issued[b] for b in range(B)],
                     demand=[n_arrived[b] - n_served[b] for b in range(B)],
-                    ready=[ref_until[b] <= t for b in range(B)],
+                    ready=[all(ru <= t for ru in ref_until_s[b])
+                           for b in range(B)],
                     idle=[bank_free[b] <= t for b in range(B)],
                     write_window=drain, max_issues=1,
                     n_ranks=grid.NR, n_channels=NC,
-                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+                    n_subarrays=S,
+                    next_ref_sub=tuple(ctr[b] % S for b in range(B)),
+                    refreshing_sub=tuple(
+                        _scalar_refreshing_sub(ref_until_s[b], t)
+                        for b in range(B)),
+                    active_sub=tuple(open_sub))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
@@ -1367,11 +1471,12 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                 arr, row, sub, isw = q[b][n_served[b]]
                 if bank_free[b] > t:
                     continue
-                if ref_until[b] > t and not (pol.sarp
-                                             and ref_sub[b] != sub):
+                if ref_until_s[b][sub] > t:
                     continue
                 sc = (W_WRITE if (drain_arb and isw) else 0) \
-                    + (W_HIT if row == open_row[b] else 0) \
+                    + (W_HIT if row == open_row_s[b][sub] else 0) \
+                    + (0 if any(ru > t for ru in ref_until_s[b])
+                       else W_NOCONF) \
                     + min(t - arr, AGE_CAP)
                 if sc > best_score:
                     best, best_score = b, sc
@@ -1379,9 +1484,9 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                 b = best
                 gr = b // NB
                 arr, row, sub, isw = q[b][n_served[b]]
-                hit = row == open_row[b]
+                hit = row == open_row_s[b][sub]
                 lat = tk.HIT if hit else tk.MISS
-                if pol.sarp and ref_until[b] > t:
+                if pol.sarp and any(ru > t for ru in ref_until_s[b]):
                     lat += tk.SARP_PEN
                 if isw != last_op[ch]:
                     lat += tk.TURN
@@ -1391,7 +1496,7 @@ def _run_scalar_cell(grid: _Grid, g: int) -> CellResult:
                 bank_free[b] = done + (tk.WR if isw else 0)
                 last_op[ch] = isw
                 last_rank[ch] = gr
-                open_row[b] = row
+                open_row_s[b][sub] = row
                 open_sub[b] = sub
                 n_served[b] += 1
                 served += 1
@@ -1429,6 +1534,7 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
     RBC = grid.NR * NB               # banks per channel
     HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
     pol = resolve_policy(p)
+    hra = bool(getattr(pol, "hra", False))
     budget = tk.budget
     dem = grid.demands[_scenario_name(s)]
     C, mlp = dem.n_cores, dem.mlp
@@ -1450,9 +1556,8 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
     comp: list[tuple[int, int]] = []      # (done_tick, core)
 
     bank_free = [0] * B
-    ref_until = [0] * B
-    ref_sub = [-1] * B
-    open_row = [-1] * B
+    ref_until_s = [[0] * S for _ in range(B)]
+    open_row_s = [[-1] * S for _ in range(B)]
     open_sub = [-1] * B
     ctr = [0] * B
     issued = [0] * B
@@ -1474,15 +1579,18 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
 
     def start_pb(b: int, t: int):
         nonlocal refpb, maxlag
-        ref_until[b] = max(t, bank_free[b]) + tk.RFC_PB
         ns = ctr[b] % S
+        # HiRA: hide the refresh activation behind an in-flight access to
+        # a different subarray (start at t instead of waiting for the bank)
+        start = t if (hra and ns != open_sub[b]) else max(t, bank_free[b])
+        end = start + tk.RFC_PB
         if pol.sarp:
-            ref_sub[b] = ns
-            if open_sub[b] == ns:
-                open_row[b] = -1
+            ref_until_s[b][ns] = end
+            open_row_s[b][ns] = -1
         else:
-            ref_sub[b] = -1
-            open_row[b] = -1
+            for s_ in range(S):
+                ref_until_s[b][s_] = end
+                open_row_s[b][s_] = -1
         ctr[b] += 1
         issued[b] += 1
         refpb += 1
@@ -1492,15 +1600,15 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
         nonlocal refab
         end = t + tk.RFC_AB
         for b in range(gr * NB, (gr + 1) * NB):
-            ref_until[b] = end
             if pol.sarp:
-                ref_sub[b] = ctr[b] % S
-                if open_sub[b] == ref_sub[b]:
-                    open_row[b] = -1
+                ns = ctr[b] % S
+                ref_until_s[b][ns] = end
+                open_row_s[b][ns] = -1
                 ctr[b] += 1
             else:
-                ref_sub[b] = -1
-                open_row[b] = -1
+                for s_ in range(S):
+                    ref_until_s[b][s_] = end
+                    open_row_s[b][s_] = -1
         ab_pending[gr] -= 1
         rank_drain[gr] = ab_pending[gr] > 0
         refab += 1
@@ -1522,15 +1630,22 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
         return MaintenanceView(
             now=float(t), n_banks=B, budget=budget,
             lag=[0] * B, demand=[0] * B,
-            ready=[ref_until[b] <= t for b in range(B)],
+            ready=[all(ru <= t for ru in ref_until_s[b])
+                   for b in range(B)],
             idle=[bank_free[b] <= t for b in range(B)],
             write_window=drain, max_issues=1,
             rank_due=sum(ab_pending),
             rank_quiet=(all(f <= t for f in bank_free)
-                        and all(r_ <= t for r_ in ref_until)),
+                        and all(ru <= t for rb in ref_until_s
+                                for ru in rb)),
             n_ranks=grid.NR, n_channels=NC,
             rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
-            ranks_due=tuple(ab_pending))
+            ranks_due=tuple(ab_pending),
+            n_subarrays=S,
+            next_ref_sub=tuple(ctr[b] % S for b in range(B)),
+            refreshing_sub=tuple(_scalar_refreshing_sub(ref_until_s[b], t)
+                                 for b in range(B)),
+            active_sub=tuple(open_sub))
 
     t = 0
     while n_finished < C and t < grid.horizon:
@@ -1592,11 +1707,18 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                     now=float(t), n_banks=B, budget=budget,
                     lag=[due(b, t) - issued[b] for b in range(B)],
                     demand=[len(q[b]) for b in range(B)],
-                    ready=[ref_until[b] <= t for b in range(B)],
+                    ready=[all(ru <= t for ru in ref_until_s[b])
+                           for b in range(B)],
                     idle=[bank_free[b] <= t for b in range(B)],
                     write_window=drain, max_issues=1,
                     n_ranks=grid.NR, n_channels=NC,
-                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t)
+                    rank_of=grid.rank_of_t, channel_of=grid.chan_of_t,
+                    n_subarrays=S,
+                    next_ref_sub=tuple(ctr[b] % S for b in range(B)),
+                    refreshing_sub=tuple(
+                        _scalar_refreshing_sub(ref_until_s[b], t)
+                        for b in range(B)),
+                    active_sub=tuple(open_sub))
                 for dec in pol.select(view):
                     if dec.bank == ALL_BANKS:
                         raise ValueError(
@@ -1616,12 +1738,13 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                 arr, row, sub, isw, core = q[b][0]
                 if bank_free[b] > t:
                     continue
-                if ref_until[b] > t and not (pol.sarp
-                                             and ref_sub[b] != sub):
+                if ref_until_s[b][sub] > t:
                     continue
                 sc = (W_WRITE if (drain_arb and isw) else 0) \
                     + W_OCC * min(len(q[b]), OCC_CAP) \
-                    + (W_HIT if row == open_row[b] else 0) \
+                    + (W_HIT if row == open_row_s[b][sub] else 0) \
+                    + (0 if any(ru > t for ru in ref_until_s[b])
+                       else W_NOCONF) \
                     + min(t - arr, AGE_CAP)
                 if sc > best_score:
                     best, best_score = b, sc
@@ -1629,9 +1752,9 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                 b = best
                 gr = b // NB
                 arr, row, sub, isw, core = q[b].pop(0)
-                hit = row == open_row[b]
+                hit = row == open_row_s[b][sub]
                 lat = tk.HIT if hit else tk.MISS
-                if pol.sarp and ref_until[b] > t:
+                if pol.sarp and any(ru > t for ru in ref_until_s[b]):
                     lat += tk.SARP_PEN
                 if isw != last_op[ch]:
                     lat += tk.TURN
@@ -1641,7 +1764,7 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
                 bank_free[b] = done + (tk.WR if isw else 0)
                 last_op[ch] = isw
                 last_rank[ch] = gr
-                open_row[b] = row
+                open_row_s[b][sub] = row
                 open_sub[b] = sub
                 if hit:
                     hits += 1
@@ -1722,6 +1845,7 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     kind = j32(grid.kind)
     level_ab = jnp.asarray(grid.level_ab)
     sarp = jnp.asarray(grid.sarp)
+    hra = jnp.asarray(grid.hra)
     wrp = jnp.asarray(grid.wrp)
     urgent_at = j32(grid.urgent_at)
     budget = j32(grid.budget)
@@ -1730,13 +1854,13 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     TURN, RTR, SARP_PEN = j32(grid.TURN), j32(grid.RTR), j32(grid.SARP_PEN)
     arG = jnp.arange(G)
     flat_gb = (arG[:, None] * B + jnp.arange(B)[None, :])
+    sub_of_col = j32(np.tile(np.arange(S, dtype=np.int32), B))[None, :]
 
     st = dict(
         t=jnp.int32(0),
         bank_free=jnp.zeros((G, B), jnp.int32),
-        ref_until=jnp.zeros((G, B), jnp.int32),
-        ref_sub=jnp.full((G, B), -1, jnp.int32),
-        open_row=jnp.full((G, B), -1, jnp.int32),
+        ref_until_s=jnp.zeros((G, B * S), jnp.int32),
+        open_row_s=jnp.full((G, B * S), -1, jnp.int32),
         open_sub=jnp.full((G, B), -1, jnp.int32),
         ctr=jnp.zeros((G, B), jnp.int32),
         issued=jnp.zeros((G, B), jnp.int32),
@@ -1811,8 +1935,8 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         due = jnp.where(t >= phase, (t - phase) // REFI[:, None] + 1, 0)
         issued = s["issued"]
         lag = due - issued
-        bank_free, ref_until = s["bank_free"], s["ref_until"]
-        ready = ref_until <= t
+        bank_free, ref_until_s = s["bank_free"], s["ref_until_s"]
+        ready = (ref_until_s.reshape(G, B, S) <= t).all(axis=2)
         idle = bank_free <= t
         demand = n_arrived - n_served
         picks, rr = select_batch(
@@ -1839,27 +1963,39 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             ab_rr = s["ab_rr"] + st_elig
         else:
             ab_rr = s["ab_rr"]
-        ctr, ref_sub = s["ctr"], s["ref_sub"]
-        open_row, open_sub = s["open_row"], s["open_sub"]
+        ctr = s["ctr"]
+        open_row_s, open_sub = s["open_row_s"], s["open_sub"]
         sarp_c = sarp[:, None]
 
+        # SARP marks (and closes) only the target subarray ctr % S; a
+        # non-SARP refresh occupies every subarray of the bank
         m = jnp.repeat(start_ab_r, NB, axis=1)
         new_sub = ctr % S
-        ref_until = jnp.where(m, (t + RFC_AB)[:, None], ref_until)
-        ref_sub = jnp.where(m, jnp.where(sarp_c, new_sub, -1), ref_sub)
-        close = m & jnp.where(sarp_c, open_sub == new_sub, True)
-        open_row = jnp.where(close, -1, open_row)
+        mark = (jnp.repeat(m, S, axis=1)
+                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
+                            == sub_of_col, True))
+        ref_until_s = jnp.where(mark, (t + RFC_AB)[:, None], ref_until_s)
+        open_row_s = jnp.where(mark, -1, open_row_s)
         ctr = ctr + (m & sarp_c)
         ab_pending = ab_pending - start_ab_r
         rank_drain = jnp.where(start_ab_r, ab_pending > 0, rank_drain)
         refab = s["refab"] + start_ab_r.sum(axis=1)
 
         new_sub = ctr % S
-        ref_until = jnp.where(
-            picks, jnp.maximum(t, bank_free) + RFC_PB[:, None], ref_until)
-        ref_sub = jnp.where(picks, jnp.where(sarp_c, new_sub, -1), ref_sub)
-        close = picks & jnp.where(sarp_c, open_sub == new_sub, True)
-        open_row = jnp.where(close, -1, open_row)
+        start = jnp.maximum(t, bank_free)
+        if grid.has_hra:
+            # HiRA hidden row activation: refresh a subarray the in-flight
+            # access is NOT using starting at t (static at trace time —
+            # grids without the trait keep this out of the jitted graph)
+            start = jnp.where(hra[:, None] & (new_sub != open_sub), t,
+                              start)
+        mark = (jnp.repeat(picks, S, axis=1)
+                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
+                            == sub_of_col, True))
+        ref_until_s = jnp.where(
+            mark, jnp.repeat(start + RFC_PB[:, None], S, axis=1),
+            ref_until_s)
+        open_row_s = jnp.where(mark, -1, open_row_s)
         ctr = ctr + picks
         issued = issued + picks
         refpb = s["refpb"] + picks.sum(axis=1)
@@ -1868,12 +2004,20 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
 
         # ---- D: arbitration + serve, one start per channel (scores —
-        # incl. the drain flag — snapshotted before any serve)
+        # incl. the drain flag — snapshotted before any serve; the head
+        # request's own subarray's state is gathered from [G, B*S] planes)
+        ru3 = ref_until_s.reshape(G, B, S)
+        head_ru = jnp.take_along_axis(
+            ru3, s["h_sub"][:, :, None], axis=2)[:, :, 0]
+        head_or = jnp.take_along_axis(
+            open_row_s.reshape(G, B, S), s["h_sub"][:, :, None],
+            axis=2)[:, :, 0]
+        bank_mid = (ru3 > t).any(axis=2)
         score = scores(t, has_req=demand > 0, head_row=s["h_row"],
-                       head_sub=s["h_sub"], head_arrive=s["h_arr"],
-                       head_is_write=s["h_w"], bank_free=bank_free,
-                       ref_until=ref_until, ref_sub=ref_sub,
-                       open_row=open_row, drain=drain, sarp=sarp,
+                       head_arrive=s["h_arr"], head_is_write=s["h_w"],
+                       bank_free=bank_free, head_ref_until=head_ru,
+                       bank_mid_ref=bank_mid, open_row=head_or,
+                       drain=drain,
                        rank_drain=jnp.repeat(rank_drain, NB, axis=1))
         h_arr_s, h_row_s = s["h_arr"], s["h_row"]
         h_sub_s, h_w_s = s["h_sub"], s["h_w"]
@@ -1888,11 +2032,11 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             ok = score[arG, bs] >= 0
             row, sub_ = h_row_s[arG, bs], h_sub_s[arG, bs]
             arr, isw = h_arr_s[arG, bs], h_w_s[arG, bs]
-            hit = row == open_row[arG, bs]
+            hit = row == head_or[arG, bs]
             gr_b = bs // NB
             lr = last_rank[:, ch]
             lat = (jnp.where(hit, HIT, MISS)
-                   + jnp.where(sarp & (ref_until[arG, bs] > t),
+                   + jnp.where(sarp & bank_mid[arG, bs],
                                SARP_PEN, 0)
                    + jnp.where(isw != last_op[:, ch], TURN, 0)
                    + jnp.where((lr >= 0) & (lr != gr_b), RTR, 0))
@@ -1904,8 +2048,9 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
                 jnp.where(ok, isw, last_op[:, ch]))
             last_rank = last_rank.at[:, ch].set(
                 jnp.where(ok, gr_b, last_rank[:, ch]))
-            open_row = open_row.at[arG, bs].set(
-                jnp.where(ok, row, open_row[arG, bs]))
+            gsub = bs * S + sub_
+            open_row_s = open_row_s.at[arG, gsub].set(
+                jnp.where(ok, row, open_row_s[arG, gsub]))
             open_sub = open_sub.at[arG, bs].set(
                 jnp.where(ok, sub_, open_sub[arG, bs]))
             n_served = n_served.at[arG, bs].add(ok)
@@ -1934,8 +2079,8 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
                 jnp.where(ok, qw[flat, sl], h_w_s[arG, bs]))
 
         return dict(
-            t=t + 1, bank_free=bank_free, ref_until=ref_until,
-            ref_sub=ref_sub, open_row=open_row, open_sub=open_sub,
+            t=t + 1, bank_free=bank_free, ref_until_s=ref_until_s,
+            open_row_s=open_row_s, open_sub=open_sub,
             ctr=ctr, issued=issued, n_arrived=n_arrived,
             n_served=n_served, rr=rr, ab_rr=ab_rr, wpend=wpend,
             drain=drain, last_op=last_op, last_rank=last_rank,
@@ -2015,6 +2160,7 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     kind = j32(grid.kind)
     level_ab = jnp.asarray(grid.level_ab)
     sarp = jnp.asarray(grid.sarp)
+    hra = jnp.asarray(grid.hra)
     wrp = jnp.asarray(grid.wrp)
     urgent_at = j32(grid.urgent_at)
     budget = j32(grid.budget)
@@ -2026,6 +2172,7 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     arC = jnp.arange(C)
     flat_gc = arG[:, None] * C + arC[None, :]
     flat_gb = arG[:, None] * B + arB[None, :]
+    sub_of_col = j32(np.tile(np.arange(S, dtype=np.int32), B))[None, :]
     OOB = G * B * LQ                       # scatter target for non-issues
 
     remaining0 = grid.n_req_c.astype(np.int32)
@@ -2048,9 +2195,8 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         comp_t=jnp.full((G, C, K), _PAD_ARRIVE, jnp.int32),
         # machine state
         bank_free=jnp.zeros((G, B), jnp.int32),
-        ref_until=jnp.zeros((G, B), jnp.int32),
-        ref_sub=jnp.full((G, B), -1, jnp.int32),
-        open_row=jnp.full((G, B), -1, jnp.int32),
+        ref_until_s=jnp.zeros((G, B * S), jnp.int32),
+        open_row_s=jnp.full((G, B * S), -1, jnp.int32),
         open_sub=jnp.full((G, B), -1, jnp.int32),
         ctr=jnp.zeros((G, B), jnp.int32),
         issued=jnp.zeros((G, B), jnp.int32),
@@ -2137,8 +2283,8 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         due = jnp.where(t >= phase, (t - phase) // REFI[:, None] + 1, 0)
         issued = s["issued"]
         lag = due - issued
-        bank_free, ref_until = s["bank_free"], s["ref_until"]
-        ready = ref_until <= t
+        bank_free, ref_until_s = s["bank_free"], s["ref_until_s"]
+        ready = (ref_until_s.reshape(G, B, S) <= t).all(axis=2)
         idle = bank_free <= t
         demand = q_tail - s["q_head"]
         picks, rr = select_batch(
@@ -2165,27 +2311,39 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             ab_rr = s["ab_rr"] + st_elig
         else:
             ab_rr = s["ab_rr"]
-        ctr, ref_sub = s["ctr"], s["ref_sub"]
-        open_row, open_sub = s["open_row"], s["open_sub"]
+        ctr = s["ctr"]
+        open_row_s, open_sub = s["open_row_s"], s["open_sub"]
         sarp_c = sarp[:, None]
 
+        # SARP marks (and closes) only the target subarray ctr % S; a
+        # non-SARP refresh occupies every subarray of the bank
         m = jnp.repeat(start_ab_r, NB, axis=1)
         new_sub = ctr % S
-        ref_until = jnp.where(m, (t + RFC_AB)[:, None], ref_until)
-        ref_sub = jnp.where(m, jnp.where(sarp_c, new_sub, -1), ref_sub)
-        close = m & jnp.where(sarp_c, open_sub == new_sub, True)
-        open_row = jnp.where(close, -1, open_row)
+        mark = (jnp.repeat(m, S, axis=1)
+                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
+                            == sub_of_col, True))
+        ref_until_s = jnp.where(mark, (t + RFC_AB)[:, None], ref_until_s)
+        open_row_s = jnp.where(mark, -1, open_row_s)
         ctr = ctr + (m & sarp_c)
         ab_pending = ab_pending - start_ab_r
         rank_drain = jnp.where(start_ab_r, ab_pending > 0, rank_drain)
         refab = s["refab"] + start_ab_r.sum(axis=1)
 
         new_sub = ctr % S
-        ref_until = jnp.where(
-            picks, jnp.maximum(t, bank_free) + RFC_PB[:, None], ref_until)
-        ref_sub = jnp.where(picks, jnp.where(sarp_c, new_sub, -1), ref_sub)
-        close = picks & jnp.where(sarp_c, open_sub == new_sub, True)
-        open_row = jnp.where(close, -1, open_row)
+        start = jnp.maximum(t, bank_free)
+        if grid.has_hra:
+            # HiRA hidden row activation: refresh a subarray the in-flight
+            # access is NOT using starting at t (static at trace time —
+            # grids without the trait keep this out of the jitted graph)
+            start = jnp.where(hra[:, None] & (new_sub != open_sub), t,
+                              start)
+        mark = (jnp.repeat(picks, S, axis=1)
+                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
+                            == sub_of_col, True))
+        ref_until_s = jnp.where(
+            mark, jnp.repeat(start + RFC_PB[:, None], S, axis=1),
+            ref_until_s)
+        open_row_s = jnp.where(mark, -1, open_row_s)
         ctr = ctr + picks
         issued = issued + picks
         refpb = s["refpb"] + picks.sum(axis=1)
@@ -2200,11 +2358,18 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
         h_row, h_sub = qr[flat_h], qs_[flat_h]
         h_arr, h_w = qa[flat_h], qw[flat_h]
         has_req = (demand > 0) & active[:, None]
-        score = scores(t, has_req=has_req, head_row=h_row, head_sub=h_sub,
+        ru3 = ref_until_s.reshape(G, B, S)
+        head_ru = jnp.take_along_axis(
+            ru3, h_sub[:, :, None], axis=2)[:, :, 0]
+        head_or = jnp.take_along_axis(
+            open_row_s.reshape(G, B, S), h_sub[:, :, None],
+            axis=2)[:, :, 0]
+        bank_mid = (ru3 > t).any(axis=2)
+        score = scores(t, has_req=has_req, head_row=h_row,
                        head_arrive=h_arr, head_is_write=h_w,
-                       bank_free=bank_free, ref_until=ref_until,
-                       ref_sub=ref_sub, open_row=open_row, drain=drain,
-                       sarp=sarp, occ=demand,
+                       bank_free=bank_free, head_ref_until=head_ru,
+                       bank_mid_ref=bank_mid, open_row=head_or,
+                       drain=drain, occ=demand,
                        rank_drain=jnp.repeat(rank_drain, NB, axis=1))
         last_op, last_rank = s["last_op"], s["last_rank"]
         q_head = s["q_head"]
@@ -2219,11 +2384,11 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             row, sub_ = h_row[arG, bs], h_sub[arG, bs]
             arr, isw = h_arr[arG, bs], h_w[arG, bs]
             core = qc[flat_gb * LQ + hslot][arG, bs]
-            hit = row == open_row[arG, bs]
+            hit = row == head_or[arG, bs]
             gr_b = bs // NB
             lr = last_rank[:, ch]
             lat = (jnp.where(hit, HIT, MISS)
-                   + jnp.where(sarp & (ref_until[arG, bs] > t),
+                   + jnp.where(sarp & bank_mid[arG, bs],
                                SARP_PEN, 0)
                    + jnp.where(isw != last_op[:, ch], TURN, 0)
                    + jnp.where((lr >= 0) & (lr != gr_b), RTR, 0))
@@ -2235,8 +2400,9 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
                 jnp.where(ok, isw, last_op[:, ch]))
             last_rank = last_rank.at[:, ch].set(
                 jnp.where(ok, gr_b, last_rank[:, ch]))
-            open_row = open_row.at[arG, bs].set(
-                jnp.where(ok, row, open_row[arG, bs]))
+            gsub = bs * S + sub_
+            open_row_s = open_row_s.at[arG, gsub].set(
+                jnp.where(ok, row, open_row_s[arG, gsub]))
             open_sub = open_sub.at[arG, bs].set(
                 jnp.where(ok, sub_, open_sub[arG, bs]))
             q_head = q_head.at[arG, bs].add(ok)
@@ -2263,8 +2429,9 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             q_head=q_head, q_tail=q_tail,
             next_idx=next_idx, next_issue=next_issue, out_reads=out_reads,
             remaining=remaining, finish=finish, comp_t=comp_t,
-            bank_free=bank_free, ref_until=ref_until, ref_sub=ref_sub,
-            open_row=open_row, open_sub=open_sub, ctr=ctr, issued=issued,
+            bank_free=bank_free, ref_until_s=ref_until_s,
+            open_row_s=open_row_s, open_sub=open_sub, ctr=ctr,
+            issued=issued,
             rr=rr, ab_rr=ab_rr, wpend=wpend, drain=drain, last_op=last_op,
             last_rank=last_rank,
             ab_pending=ab_pending, rank_drain=rank_drain,

@@ -9,17 +9,23 @@ cross-checked by the `bitfield` pass of `repro.analysis`
 (`python tools/check_contract.py --pass bitfield`): redefining any of
 these names downstream, or letting the doc table drift, fails CI.
 
-Layout (descending priority; bit 20 is a guard bit left unused so the
-age field saturates one bit below the hit flag):
+Layout (descending priority):
 
     bit 25      W_WRITE   drain-mode write
     bits 22-24  W_OCC     demand occupancy, clamped to OCC_CAP (closed mode)
     bit 21      W_HIT     row-buffer hit
+    bit 20      W_NOCONF  no in-progress sibling-subarray refresh on the bank
     bits 0-19   age       min(t - arrive, AGE_CAP)
 
-The maximum packed score is W_WRITE + OCC_CAP * W_OCC + W_HIT + AGE_CAP
-< 2**26, leaving int32 headroom (scores must stay strictly positive and
--1 is the ineligible sentinel).
+`W_NOCONF` prefers banks whose serve would not overlap a SARP refresh in
+a sibling subarray (such a serve pays `SARP_PEN`); with one subarray, or
+under non-SARP refreshes (which occupy the whole bank), every eligible
+bank is conflict-free and the field is a constant offset, so the pre-
+subarray arbitration order is reproduced bit-for-bit.
+
+The maximum packed score is W_WRITE + OCC_CAP * W_OCC + W_HIT + W_NOCONF
++ AGE_CAP < 2**26, leaving int32 headroom (scores must stay strictly
+positive and -1 is the ineligible sentinel).
 """
 from __future__ import annotations
 
@@ -27,6 +33,11 @@ from __future__ import annotations
 #: stays within int32
 AGE_BITS = 20
 AGE_CAP = (1 << AGE_BITS) - 1
+
+#: no-subarray-conflict flag (single bit): the bank has no refresh in
+#: progress in any sibling subarray of the head request's target
+NOCONF_SHIFT = 20
+W_NOCONF = 1 << NOCONF_SHIFT
 
 #: row-buffer hit flag (single bit)
 HIT_SHIFT = 21
@@ -45,6 +56,6 @@ W_WRITE = 1 << WRITE_SHIFT
 #: exclusive top bit of the packed layout — must stay < 31 for int32
 SCORE_BITS = WRITE_SHIFT + 1
 
-__all__ = ["AGE_BITS", "AGE_CAP", "HIT_SHIFT", "W_HIT", "OCC_SHIFT",
-           "OCC_BITS", "W_OCC", "OCC_CAP", "WRITE_SHIFT", "W_WRITE",
-           "SCORE_BITS"]
+__all__ = ["AGE_BITS", "AGE_CAP", "NOCONF_SHIFT", "W_NOCONF", "HIT_SHIFT",
+           "W_HIT", "OCC_SHIFT", "OCC_BITS", "W_OCC", "OCC_CAP",
+           "WRITE_SHIFT", "W_WRITE", "SCORE_BITS"]

@@ -29,11 +29,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.policy.extras import ElasticPolicy, HiraPolicy
+from repro.core.policy.extras import ElasticPolicy
 from repro.core.policy.multirank import (RankAwareDarpPolicy,
                                          StaggeredAllBankPolicy)
 from repro.core.policy.paper import (AllBankPolicy, DarpPolicy,
                                      RoundRobinPolicy)
+from repro.core.policy.subarray import HiraPolicy
 
 # Policy kinds the batched engine dispatches on. IDEAL and the AB pair
 # are decided by *flag/trait*, matching the engine adapters

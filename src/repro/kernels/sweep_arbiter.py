@@ -15,6 +15,12 @@ the arbitration of one slice of the sweep overlaps the fetch of the next,
 which is the same access/refresh parallelization shape the paper builds
 in DRAM.
 
+Subarray state never enters the kernel: the engine gathers the per-head
+planes first (`head_ref_until` — the head request's own subarray's
+refresh-end tick, `open_row` — the head subarray's open row, and
+`bank_mid_ref` — any subarray of the bank mid-refresh), so the kernel
+stays a flat ``[G, B]`` step at every `n_subarrays`.
+
 All arithmetic is int32 on both paths (`sweep.arbiter.arbiter_scores` is
 the shared scoring definition), so the kernel is bit-identical to the
 numpy backend — asserted by `tests/test_sweep.py`. Off-TPU the kernel
@@ -32,25 +38,25 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sweep.arbiter import arbiter_scores
-from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
-                                     W_WRITE)
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_NOCONF,
+                                     W_OCC, W_WRITE)
 
 #: cells per grid step; G is padded up to a multiple of this
 TILE_G = 256
 
 
 def _arbiter_kernel(t_ref,                                # scalar prefetch
-                    has_req_ref, head_row_ref, head_sub_ref,
-                    head_arrive_ref, head_is_write_ref, bank_free_ref,
-                    ref_until_ref, ref_sub_ref, open_row_ref, occ_ref,
+                    has_req_ref, head_row_ref, head_arrive_ref,
+                    head_is_write_ref, bank_free_ref, head_ref_until_ref,
+                    bank_mid_ref_ref, open_row_ref, occ_ref,
                     rank_drain_ref,                        # [TILE_G, B]
-                    drain_ref, sarp_ref,                   # [TILE_G, 1]
+                    drain_ref,                             # [TILE_G, 1]
                     score_ref):
     t = t_ref[0]
-    sarp = sarp_ref[...] != 0
-    mid_ref = ref_until_ref[...] > t
-    other_sub = sarp & (ref_sub_ref[...] != head_sub_ref[...])
-    avail = (bank_free_ref[...] <= t) & (~mid_ref | other_sub)
+    # a non-SARP refresh marks every subarray of the bank, so the whole
+    # bank blocks through head_ref_until; a SARP refresh marks only its
+    # own subarray, so sibling-subarray heads stay available
+    avail = (bank_free_ref[...] <= t) & (head_ref_until_ref[...] <= t)
     # rank-conflict masking: each bank carries its global rank's all-bank
     # drain flag, so one draining rank masks only its own banks
     elig = ((has_req_ref[...] != 0) & avail
@@ -60,14 +66,15 @@ def _arbiter_kernel(t_ref,                                # scalar prefetch
     score = (jnp.where(wantw, W_WRITE, 0)
              + W_OCC * jnp.minimum(occ_ref[...], OCC_CAP)
              + jnp.where(head_row_ref[...] == open_row_ref[...], W_HIT, 0)
+             + jnp.where(bank_mid_ref_ref[...] != 0, 0, W_NOCONF)
              + age)
     score_ref[...] = jnp.where(elig, score, -1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
-                  head_is_write, bank_free, ref_until, ref_sub, open_row,
-                  drain, sarp, rank_drain, occ=None, *, interpret: bool):
+def _arbiter_call(t, has_req, head_row, head_arrive, head_is_write,
+                  bank_free, head_ref_until, bank_mid_ref, open_row,
+                  drain, rank_drain, occ=None, *, interpret: bool):
     G, B = head_row.shape
     if occ is None:                       # open-loop: occupancy field is 0
         occ = jnp.zeros((G, B), jnp.int32)
@@ -83,7 +90,7 @@ def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(tiles,),
-        in_specs=[gb] * 11 + [g1] * 2,
+        in_specs=[gb] * 10 + [g1],
         out_specs=gb,
     )
     out = pl.pallas_call(
@@ -92,10 +99,10 @@ def _arbiter_call(t, has_req, head_row, head_sub, head_arrive,
         out_shape=jax.ShapeDtypeStruct((tiles * TILE_G, B), jnp.int32),
         interpret=interpret,
     )(jnp.asarray([t], jnp.int32),
-      prep(has_req), prep(head_row), prep(head_sub), prep(head_arrive),
-      prep(head_is_write), prep(bank_free), prep(ref_until),
-      prep(ref_sub), prep(open_row), prep(occ), prep(rank_drain),
-      prep(drain[:, None]), prep(sarp[:, None]))
+      prep(has_req), prep(head_row), prep(head_arrive),
+      prep(head_is_write), prep(bank_free), prep(head_ref_until),
+      prep(bank_mid_ref), prep(open_row), prep(occ), prep(rank_drain),
+      prep(drain[:, None]))
     return out[:G]
 
 
@@ -106,13 +113,13 @@ def make_arbiter(G: int, B: int, interpret: bool | None = None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    def score(t, *, has_req, head_row, head_sub, head_arrive,
-              head_is_write, bank_free, ref_until, ref_sub, open_row,
-              drain, sarp, rank_drain, occ=None):
+    def score(t, *, has_req, head_row, head_arrive, head_is_write,
+              bank_free, head_ref_until, bank_mid_ref, open_row,
+              drain, rank_drain, occ=None):
         out = _arbiter_call(
-            int(t), has_req, head_row, head_sub, head_arrive,
-            head_is_write, bank_free, ref_until, ref_sub, open_row,
-            drain, sarp, rank_drain, occ, interpret=interpret)
+            int(t), has_req, head_row, head_arrive, head_is_write,
+            bank_free, head_ref_until, bank_mid_ref, open_row,
+            drain, rank_drain, occ, interpret=interpret)
         return np.asarray(out)
 
     return score

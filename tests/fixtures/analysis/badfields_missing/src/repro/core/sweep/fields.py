@@ -1,6 +1,10 @@
 """Bad: W_OCC is missing from the layout entirely (BF101)."""
 AGE_BITS = 20
 AGE_CAP = (1 << AGE_BITS) - 1
+#: no-refresh-conflict flag (single bit; set when no subarray of the
+#: bank is mid-refresh)
+NOCONF_SHIFT = 20
+W_NOCONF = 1 << NOCONF_SHIFT
 HIT_SHIFT = 21
 W_HIT = 1 << HIT_SHIFT
 OCC_CAP = 7

@@ -1,12 +1,14 @@
-"""Bad: the hit flag sits at bit 19, inside the 20-bit age field
-(BF102) — order is preserved, so only the overlap rule fires."""
+"""Bad: the write flag at bit 24 sits inside the 3-bit occupancy
+field (BF102) — order is preserved, so only the overlap rule fires."""
 AGE_BITS = 20
 AGE_CAP = (1 << AGE_BITS) - 1
-HIT_SHIFT = 19
+NOCONF_SHIFT = 20
+W_NOCONF = 1 << NOCONF_SHIFT
+HIT_SHIFT = 21
 W_HIT = 1 << HIT_SHIFT
 OCC_SHIFT = 22
 OCC_BITS = 3
 W_OCC = 1 << OCC_SHIFT
 OCC_CAP = (1 << OCC_BITS) - 1
-WRITE_SHIFT = 25
+WRITE_SHIFT = 24
 W_WRITE = 1 << WRITE_SHIFT

@@ -2,6 +2,10 @@
 bits — no int32 headroom left (BF104)."""
 AGE_BITS = 20
 AGE_CAP = (1 << AGE_BITS) - 1
+#: no-refresh-conflict flag (single bit; set when no subarray of the
+#: bank is mid-refresh)
+NOCONF_SHIFT = 20
+W_NOCONF = 1 << NOCONF_SHIFT
 HIT_SHIFT = 21
 W_HIT = 1 << HIT_SHIFT
 OCC_SHIFT = 22

@@ -38,3 +38,17 @@ class RogueLonerPolicy:
 # planted RC401/RC402/RC403/RC404: 'rogue' reaches no matrix and
 # classify() cannot map RogueLonerPolicy to a vectorized kind
 register_policy("rogue", lambda **kw: RogueLonerPolicy(**kw))
+
+
+class SneakySarpPolicy:
+    ideal = False
+    sarp = True
+
+    def select(self, view):
+        del view
+        return []
+
+
+# planted RC406: a SARP-trait policy (class attribute spelling) that the
+# static matrix in tests/test_subarray.py never names
+register_policy("sneaky_sarp", SneakySarpPolicy)

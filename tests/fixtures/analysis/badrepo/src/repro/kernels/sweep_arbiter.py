@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
-                                     W_WRITE)
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT,
+                                     W_NOCONF, W_OCC, W_WRITE)
 
 TILE = 128
 
@@ -15,7 +15,8 @@ def _score_kernel(age_ref, occ_ref, o_ref):
     occ = jnp.minimum(occ_ref[...], OCC_CAP)
     if age > 0:                     # planted PL501: traced Python branch
         occ = occ + 1
-    o_ref[...] = (age + W_OCC * occ + W_HIT + W_WRITE).astype(jnp.int32)
+    o_ref[...] = (age + W_OCC * occ + W_HIT + W_NOCONF
+                  + W_WRITE).astype(jnp.int32)
 
 
 def score(age, occ):

@@ -1,0 +1,6 @@
+"""Bad: static matrix, and 'sneaky_sarp' never appears (RC406)."""
+POLICIES = ("ideal", "ref_ab")
+
+
+def test_subarray_matrix():
+    assert len(POLICIES) == 2

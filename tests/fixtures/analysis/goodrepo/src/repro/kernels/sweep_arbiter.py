@@ -4,23 +4,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT, W_OCC,
-                                     W_WRITE)
+from repro.core.sweep.fields import (AGE_CAP, OCC_CAP, W_HIT,
+                                     W_NOCONF, W_OCC, W_WRITE)
 
 TILE = 128
 
 
-def _score_kernel(age_ref, hit_ref, occ_ref, wantw_ref, o_ref, *,
-                  closed: bool):
+def _score_kernel(age_ref, hit_ref, occ_ref, wantw_ref, noconf_ref,
+                  o_ref, *, closed: bool):
     score = (jnp.minimum(age_ref[...], AGE_CAP)
              + jnp.where(hit_ref[...] != 0, W_HIT, 0)
-             + jnp.where(wantw_ref[...] != 0, W_WRITE, 0))
+             + jnp.where(wantw_ref[...] != 0, W_WRITE, 0)
+             + jnp.where(noconf_ref[...] != 0, W_NOCONF, 0))
     if closed:                       # static config, bound at partial time
         score = score + W_OCC * jnp.minimum(occ_ref[...], OCC_CAP)
     o_ref[...] = score.astype(jnp.int32)
 
 
-def score(age, hit, occ, wantw, *, closed=False, interpret=None):
+def score(age, hit, occ, wantw, noconf, *, closed=False, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n = age.shape[0]
@@ -32,4 +33,4 @@ def score(age, hit, occ, wantw, *, closed=False, interpret=None):
         grid=(n // TILE,),
         out_shape=jax.ShapeDtypeStruct(age.shape, jnp.int32),
         interpret=interpret,
-    )(age, hit, occ, wantw)
+    )(age, hit, occ, wantw, noconf)

@@ -1,6 +1,6 @@
 """Good: a static matrix naming every registered policy (RC402)."""
-POLICIES = ("ideal", "ref_ab", "all_bank")
+POLICIES = ("ideal", "ref_ab", "all_bank", "sarp_pb", "dsarp")
 
 
 def test_multirank_matrix():
-    assert len(POLICIES) == 3
+    assert len(POLICIES) == 5

@@ -1,0 +1,8 @@
+"""Good: iterates list_policies() — every SARP-trait policy reaches
+the subarray matrix (RC406)."""
+from repro.core.policy import list_policies
+
+
+def test_subarray_matrix():
+    for name in list_policies():
+        assert isinstance(name, str)

@@ -31,7 +31,7 @@ BADREPO_RULES = {
     "BF105", "BF106",
     "DT201", "DT202", "DT203", "DT204", "DT205",
     "PP301", "PP302", "PP303",
-    "RC401", "RC402", "RC403", "RC404", "RC405",
+    "RC401", "RC402", "RC403", "RC404", "RC405", "RC406",
     "PL501", "PL502", "PL503",
 }
 
@@ -156,6 +156,37 @@ def test_bitfield_catches_doc_mutation(tmp_path):
 
     root = _mutated_goodrepo(tmp_path, mutate)
     assert "BF106" in rules_of(root, ["bitfield"])
+
+
+def test_bitfield_catches_noconf_mutation(tmp_path):
+    # the subarray no-conflict bit is part of the packed contract: moving
+    # it onto the hit flag must trip the layout check in every consumer
+    def mutate(root):
+        f = root / "src/repro/core/sweep/fields.py"
+        f.write_text(f.read_text().replace("NOCONF_SHIFT = 20",
+                                           "NOCONF_SHIFT = 21"))
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    fired = rules_of(root, ["bitfield"])
+    # the duplicate shift both overlaps the hit flag and breaks priority
+    assert fired == {"BF102", "BF103"}
+
+
+def test_registry_catches_sarp_policy_skipping_subarray_matrix(tmp_path):
+    # RC406's reason to exist: a new SARP-trait registration (lambda
+    # keyword spelling) that never reaches the subarray matrix
+    def mutate(root):
+        f = root / "src/repro/core/policy/paper.py"
+        f.write_text(f.read_text() + (
+            "\nregister_policy(\"stealth_sarp\",\n"
+            "                lambda **kw: SarpPolicy(sarp=True, **kw))\n"))
+        t = root / "tests/test_subarray.py"
+        t.write_text('"""Static matrix without the newcomer."""\n'
+                     'POLICIES = ("sarp_pb", "dsarp")\n')
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    fired = rules_of(root, ["registry-coverage"])
+    assert "RC406" in fired
 
 
 def test_registry_catches_new_unregistered_policy(tmp_path):

@@ -10,7 +10,10 @@ Invariants pinned here:
     engines' hot-path configuration), and per interval window a bank's
     issues stay within the ±budget swing bound (2*budget + 1);
   * deadline monotonicity: `due` never decreases as time advances, `lag`
-    only decreases through `apply`, and `snapshot_age` resets on issue.
+    only decreases through `apply`, and `snapshot_age` resets on issue;
+  * subarray-granular views (tick-contract.md §2) conserve the ±budget
+    bound and round-trip through `view()`, and the recorded run_ticks
+    timeline never serves into its own subarray's refresh window.
 """
 import numpy as np
 import pytest
@@ -177,6 +180,86 @@ def test_per_rank_budget_conservation_under_random_walks():
             banks = [b for b in range(n_banks) if rank_of[b] == gr]
             rank_lag = sum(led.lag(b, t) for b in banks)
             assert abs(rank_lag) <= nb_per_rank * budget, (policy, gr)
+
+
+def test_view_passes_subarray_fields_through():
+    """The subarray plane (tick-contract.md §2) round-trips through the
+    shared view builder; generic engines that omit it get the flat
+    defaults (n_subarrays=1, empty tuples)."""
+    led = MaintenanceLedger(4, interval=2.0, budget=8)
+    v = led.view(1.0, demand=[0] * 4, n_subarrays=4,
+                 next_ref_sub=[1, 2, 3, 0], refreshing_sub=[-1, 2, -1, -1],
+                 active_sub=[0, -1, 3, 1])
+    assert v.n_subarrays == 4
+    assert v.next_ref_sub == (1, 2, 3, 0)
+    assert v.refreshing_sub == (-1, 2, -1, -1)
+    assert v.active_sub == (0, -1, 3, 1)
+    flat = led.view(2.0, demand=[0] * 4)
+    assert flat.n_subarrays == 1
+    assert flat.next_ref_sub == () and flat.refreshing_sub == ()
+    assert flat.active_sub == ()
+
+
+@settings(max_examples=25, deadline=None)
+@given(policy=st.sampled_from(PB_POLICIES),
+       n_subarrays=st.integers(1, 8),
+       budget=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_budget_conservation_under_subarray_views(policy, n_subarrays,
+                                                  budget, seed):
+    """The ±budget invariant cannot leak through the subarray plane:
+    per-bank due/issued accounting is unchanged by per-subarray refresh
+    targeting, so arbitrary subarray-granular views (rotating next_ref
+    targets, random mid-refresh/open subarrays) conserve the budget for
+    every registered per-bank policy."""
+    rs = np.random.RandomState(seed)
+    n_banks = 6
+    led = MaintenanceLedger(n_banks, interval=3.0, budget=budget,
+                            stagger=bool(seed % 2))
+    pol = resolve_policy(policy)
+    ctr = [0] * n_banks
+    t = 0.0
+    for _ in range(60):
+        t += float(rs.rand()) * 3.0
+        ready = [bool(rs.rand() < 0.8) or led.lag(b, t) >= budget
+                 for b in range(n_banks)]
+        view = led.view(
+            t, demand=rs.randint(0, 3, n_banks).tolist(),
+            write_window=bool(rs.rand() < 0.4), ready=ready,
+            idle=(rs.rand(n_banks) < 0.8).tolist(),
+            n_subarrays=n_subarrays,
+            next_ref_sub=[c % n_subarrays for c in ctr],
+            refreshing_sub=rs.randint(-1, n_subarrays, n_banks).tolist(),
+            active_sub=rs.randint(-1, n_subarrays, n_banks).tolist())
+        for b in led.apply(pol.select(view), t):
+            ctr[b] += 1
+        led.check_invariant(t)               # per-bank ±budget
+    for b in range(n_banks):
+        assert abs(led.lag(b, t)) <= budget
+
+
+@settings(max_examples=10, deadline=None)
+@given(policy=st.sampled_from(("sarp_pb", "dsarp", "hira", "ref_pb")),
+       n_subarrays=st.sampled_from((2, 4, 8)),
+       seed=st.integers(0, 2 ** 20))
+def test_refresh_never_overlaps_activation_in_same_subarray(policy,
+                                                            n_subarrays,
+                                                            seed):
+    """End-to-end occupancy property on the recorded timeline: no serve
+    ever starts inside its OWN subarray's refresh window (whole-bank
+    refreshes, sub = −1, block every subarray), for SARP and non-SARP
+    policies alike at any subarray count."""
+    from repro.core.refresh import DramSim, make_closed_workload
+    from repro.core.refresh.timing import timing_for_density
+
+    T = timing_for_density(32, n_subarrays=n_subarrays)
+    wl = make_closed_workload("closed_subarray_storm", 64, seed)
+    sim = DramSim(T, wl, policy).run_ticks(record_timeline=True)
+    ref = sim.timeline["refresh"]
+    for (t, b, sub, row, isw, done) in sim.timeline["serves"]:
+        hits = [(rb, rs, s0, s1) for (rb, rs, s0, s1, kind) in ref
+                if rb == b and (rs == sub or rs == -1) and s0 <= t < s1]
+        assert not hits, (policy, n_subarrays, t, b, sub, hits[:3])
 
 
 def test_time_must_be_monotonic():

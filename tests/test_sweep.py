@@ -200,15 +200,15 @@ def test_masked_scores_match_shared():
         kw = dict(
             has_req=rs.rand(G, B) < 0.7,
             head_row=rs.randint(0, 4096, (G, B)).astype(np.int32),
-            head_sub=rs.randint(0, 8, (G, B)).astype(np.int32),
             head_arrive=rs.randint(0, max(1, t + 1), (G, B)).astype(np.int32),
             head_is_write=rs.rand(G, B) < 0.3,
             bank_free=rs.randint(0, 700, (G, B)).astype(np.int32),
-            ref_until=rs.randint(0, 700, (G, B)).astype(np.int32),
-            ref_sub=rs.randint(-1, 8, (G, B)).astype(np.int32),
+            # the head subarray's refresh-end tick + the bank-level
+            # any-subarray-mid-refresh plane (gathered by the engine)
+            head_ref_until=rs.randint(0, 700, (G, B)).astype(np.int32),
+            bank_mid_ref=rs.rand(G, B) < 0.3,
             open_row=rs.randint(-1, 4096, (G, B)).astype(np.int32),
             drain=rs.rand(G) < 0.4,
-            sarp=rs.rand(G) < 0.5,
             # per-bank rank-drain plane (each bank carries its rank's flag)
             rank_drain=np.repeat(rs.rand(G, 2) < 0.1, B // 2, axis=1),
             occ=rs.randint(0, 20, (G, B)).astype(np.int32),
@@ -216,11 +216,11 @@ def test_masked_scores_match_shared():
         expect = arbiter_scores(np, t, **kw)
         got = arbiter_scores_masked(
             t, has_req=kw["has_req"], idle=kw["bank_free"] <= t,
-            ready=kw["ref_until"] <= t, head_row=kw["head_row"],
-            head_sub=kw["head_sub"], head_arrive=kw["head_arrive"],
-            head_is_write=kw["head_is_write"], ref_sub=kw["ref_sub"],
+            head_ready=kw["head_ref_until"] <= t,
+            bank_mid_ref=kw["bank_mid_ref"], head_row=kw["head_row"],
+            head_arrive=kw["head_arrive"],
+            head_is_write=kw["head_is_write"],
             open_row=kw["open_row"], drain=kw["drain"],
-            sarp_col=kw["sarp"][:, None],
             rank_drain=np.asarray(kw["rank_drain"]),
             rank_can_drain=True, occ=kw["occ"])
         np.testing.assert_array_equal(np.asarray(got, np.int64),
@@ -236,15 +236,13 @@ def test_pallas_arbiter_matches_numpy_scores():
     kw = dict(
         has_req=rs.rand(G, B) < 0.7,
         head_row=rs.randint(0, 4096, (G, B)).astype(np.int32),
-        head_sub=rs.randint(0, 8, (G, B)).astype(np.int32),
         head_arrive=rs.randint(0, 500, (G, B)).astype(np.int32),
         head_is_write=rs.rand(G, B) < 0.3,
         bank_free=rs.randint(0, 700, (G, B)).astype(np.int32),
-        ref_until=rs.randint(0, 700, (G, B)).astype(np.int32),
-        ref_sub=rs.randint(-1, 8, (G, B)).astype(np.int32),
+        head_ref_until=rs.randint(0, 700, (G, B)).astype(np.int32),
+        bank_mid_ref=rs.rand(G, B) < 0.3,
         open_row=rs.randint(-1, 4096, (G, B)).astype(np.int32),
         drain=rs.rand(G) < 0.4,
-        sarp=rs.rand(G) < 0.5,
         # per-bank rank-drain plane (each bank carries its rank's flag)
         rank_drain=np.repeat(rs.rand(G, 2) < 0.1, B // 2, axis=1),
     )
