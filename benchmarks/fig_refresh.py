@@ -360,3 +360,44 @@ def sweep_subarray(fast: bool = False) -> dict:
         }
     out["bit_identical"] = identical
     return out
+
+
+def command_trace(fast: bool = False) -> dict:
+    """The command layer's cost model: `DramSim.run_ticks` with
+    `record_commands=True` vs disabled (emission must stay under ~10%
+    slowdown and cost nothing when off), the JEDEC validator over the
+    emitted trace (zero violations), and the emit -> replay round trip
+    (`bit_identical`)."""
+    from repro.core.commands import round_trip, validate_trace
+
+    reqs = 300 if fast else 800
+    reps = 3 if fast else 5
+    T = timing_for_density(32, n_ranks=2, n_subarrays=4)
+    wl = make_closed_workload("closed_mixed", reqs, 0)
+
+    def timed(record):
+        best = float("inf")
+        res = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = DramSim(T, wl, "dsarp").run_ticks(record_commands=record)
+            best = min(best, time.perf_counter() - t0)
+        return best, res
+
+    t_off, res_off = timed(False)
+    t_on, res_on = timed(True)
+    trace = res_on.commands
+    violations = validate_trace(trace)
+    _, bit_identical = round_trip(trace)
+    return {
+        "workload": {"scenario": "closed_mixed", "reqs": reqs,
+                     "policy": "dsarp", "n_ranks": 2, "n_subarrays": 4},
+        "commands": len(trace),
+        "counts": trace.counts(),
+        "disabled_s": round(t_off, 4),
+        "enabled_s": round(t_on, 4),
+        "overhead_pct": round(100.0 * (t_on - t_off) / t_off, 1),
+        "disabled_emits_trace": res_off.commands is not None,
+        "violations": len(violations),
+        "bit_identical": bit_identical,
+    }

@@ -18,6 +18,9 @@ dicts go to results/bench/*.json.
   sweep_subarray      the [bank, subarray] hierarchy: subarray-storm grid
                  at n_subarrays in {1,4,8}, bit_identical per subarray
                  count, per-count weighted speedup vs ideal
+  command_trace  command layer: DFI-trace emission overhead (enabled vs
+                 disabled run_ticks), validator violations, round-trip
+                 bit_identical flag
   darp_ckpt      framework DARP: checkpoint flush scheduling overhead
   serving        framework DARP: serving maintenance policies (legacy shim)
   serving_lifecycle   EngineCore request lifecycle: TTFT/TPOT percentiles
@@ -105,6 +108,13 @@ def main() -> None:
           f"bit_identical={ss['bit_identical']};"
           f"sarp_ws_8sub_32gb={ws8['sarp_pb'][32]};"
           f"refpb_ws_8sub_32gb={ws8['ref_pb'][32]}", ss)
+
+    t0 = time.perf_counter()
+    ct = FR.command_trace(fast=fast)
+    _emit("command_trace", (time.perf_counter() - t0) * 1e6,
+          f"overhead_pct={ct['overhead_pct']};"
+          f"violations={ct['violations']};"
+          f"bit_identical={ct['bit_identical']}", ct)
 
     t0 = time.perf_counter()
     ck = BF.bench_darp_ckpt(steps=20 if fast else 40)

@@ -97,6 +97,7 @@ class RepoContext:
     ENGINE = "src/repro/core/sweep/engine.py"
     SIM = "src/repro/core/refresh/sim.py"
     SWEEP_POLICIES = "src/repro/core/sweep/policies.py"
+    COMMANDS = "src/repro/core/commands/trace.py"
     POLICY_PKG = "src/repro/core/policy"
     KERNELS_DIR = "src/repro/kernels"
     SRC_PKG = "src/repro"

@@ -1,3 +1,3 @@
 """Built-in analysis passes; importing this package registers them all."""
-from repro.analysis.passes import (bitfield, dtype, pallas_lint,  # noqa: F401
-                                   purity, registry_coverage)
+from repro.analysis.passes import (bitfield, commands, dtype,  # noqa: F401
+                                   pallas_lint, purity, registry_coverage)

@@ -289,25 +289,52 @@ def streaming(n_banks, n_subarrays, reqs, rs):
 
 
 @register_scenario("trace_replay")
-def trace_replay(n_banks, n_subarrays, reqs, rs, trace: dict = None):
-    """Replay an explicit trace: `trace` maps arrive/bank/row/is_write (and
-    optionally sub) to array-likes. Without one, replays a small embedded
-    antagonist (two banks ping-ponging rows around a write pulse) so the
-    scenario is runnable out of the box; `reqs` tiles it to length."""
+def trace_replay(n_banks, n_subarrays, reqs, rs, trace=None):
+    """Replay a DRAM command trace as the demand stream — the scenario
+    face of `repro.core.commands` (emit -> validate -> replay).
+
+    `trace` may be a `repro.core.commands.CmdTrace` (emitted by
+    `run_ticks(record_commands=True)` or loaded via `CmdTrace.from_json`)
+    whose RD/WR records become the open-loop arrivals, or the legacy
+    dict of arrive/bank/row/is_write (and optionally sub) array-likes.
+
+    Without one, a small `dsarp` source run on `closed_mixed` is
+    captured through the real emission layer and replayed; its seed is
+    drawn from `rs`, so the result is deterministic per (name, seed)
+    like every other registered scenario, and `reqs` tiles the captured
+    window to length."""
+    from repro.core.commands.trace import CmdTrace
+
     if trace is None:
-        base_n = 64
-        arrive = np.arange(base_n) * 3
-        bank = np.tile([0, 1], base_n // 2)
-        row = np.tile([7, 7, 123, 123], base_n // 4)
-        is_write = (np.arange(base_n) % 8) >= 6        # write pulse
+        from repro.core.refresh.sim import DramSim
+        from repro.core.refresh.timing import timing_for_density
+        src_seed = int(rs.randint(0, 2 ** 31 - 1))
+        wl = make_closed_workload("closed_mixed", 64, src_seed)
+        res = DramSim(timing_for_density(32), wl, "dsarp").run_ticks(
+            record_commands=True)
+        cmds = [c for c in res.commands.cmds if c.op in ("RD", "WR")]
+        m = res.commands.meta
+        arrive = np.array([int(c.tick) for c in cmds])
+        bank = np.array([(c.ch * m["n_ranks"] + c.rank) * m["n_banks"]
+                         + c.bank for c in cmds])
+        row = np.array([c.row for c in cmds])
+        is_write = np.array([c.op == "WR" for c in cmds])
+        base_n = len(cmds)
         reps = max(1, -(-reqs // base_n))
         span = int(arrive[-1]) + 16
         arrive = np.concatenate([arrive + r * span for r in range(reps)])
-        bank = np.tile(bank, reps)
-        row = np.tile(row, reps)
-        is_write = np.tile(is_write, reps)
-        trace = dict(arrive=arrive[:reqs], bank=bank[:reqs],
-                     row=row[:reqs], is_write=is_write[:reqs])
+        trace = dict(arrive=arrive[:reqs], bank=np.tile(bank, reps)[:reqs],
+                     row=np.tile(row, reps)[:reqs],
+                     is_write=np.tile(is_write, reps)[:reqs])
+    elif isinstance(trace, CmdTrace):
+        m = trace.meta
+        cmds = [c for c in trace.cmds if c.op in ("RD", "WR")]
+        trace = dict(
+            arrive=np.array([int(c.tick) for c in cmds]),
+            bank=np.array([(c.ch * m["n_ranks"] + c.rank) * m["n_banks"]
+                           + c.bank for c in cmds]),
+            row=np.array([c.row for c in cmds]),
+            is_write=np.array([c.op == "WR" for c in cmds]))
     return _assemble("trace_replay", n_banks, n_subarrays,
                      trace["arrive"], np.asarray(trace["bank"]) % n_banks,
                      np.asarray(trace["row"]) % N_ROWS, trace["is_write"],

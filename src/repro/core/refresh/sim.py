@@ -90,6 +90,12 @@ class SimResult:
     #: sub == -1 for a whole-bank (non-SARP) refresh occupancy. fig2 and
     #: the subarray overlap property tests are built on it.
     timeline: Optional[dict] = None
+    #: optional DFI-style command trace (`record_commands=True` only): a
+    #: `repro.core.commands.CmdTrace` of every ACT/PRE/PREA/RD/WR/
+    #: REF_ab/REF_pb the run issued, validated by
+    #: `repro.core.commands.validate_trace` and replayable bit-identically
+    #: by `repro.core.commands.replay_trace` (tick-contract section 7).
+    commands: Optional[object] = None
 
     def weighted_speedup_vs(self, ideal: "SimResult") -> float:
         return float(np.mean([i / p for i, p in
@@ -243,6 +249,7 @@ class DramSim:
         self._rank_of = tuple(b // timing.n_banks for b in range(bt))
         self._chan_of = tuple(b // (timing.n_ranks * timing.n_banks)
                               for b in range(bt))
+        self._rec = None             # event-mode command recorder (run())
 
     # --------------------------------------------------------- event heap
     def _push(self, t: float, kind: str, data=None) -> None:
@@ -252,7 +259,8 @@ class DramSim:
     # -------------------------------------------------- refresh mechanics
     def _start_pb_refresh(self, b: int, t: float) -> None:
         T, banks, led = self.T, self.banks, self.ledger
-        banks.ref_until[b] = max(t, banks.free[b]) + T.tRFC_pb
+        start = max(t, float(banks.free[b]))
+        banks.ref_until[b] = start + T.tRFC_pb
         if self.policy.sarp:
             banks.ref_sub[b] = led.ref_sub_counter[b] % T.n_subarrays
             if banks.open_sub[b] == banks.ref_sub[b]:
@@ -260,6 +268,10 @@ class DramSim:
         else:
             banks.ref_sub[b] = -1       # whole bank unavailable
             banks.open_row[b] = -1
+        if self._rec is not None:
+            tsub = int(banks.ref_sub[b])
+            self._rec.emit(start, "PRE", b, sub=tsub)
+            self._rec.emit(start + T.tRP, "REF_PB", b, sub=tsub, data=t)
         led.ref_sub_counter[b] += 1
         led.record_issue(b, t)
         self.stats["ref_pb"] += 1
@@ -269,6 +281,9 @@ class DramSim:
         """All-bank refresh on global rank `gr` (its n_banks banks)."""
         T, banks, led = self.T, self.banks, self.ledger
         end = t + T.tRFC_ab
+        if self._rec is not None:
+            self._rec.emit_rank(t, "PREA", gr)
+            self._rec.emit_rank(t + T.tRP, "REF_AB", gr, data=t)
         for b in range(gr * T.n_banks, (gr + 1) * T.n_banks):
             banks.ref_until[b] = end
             if self.policy.sarp:
@@ -392,6 +407,13 @@ class DramSim:
             bus.free = done
             bus.last_op_write = r.is_write
             bus.last_rank = gr
+            if self._rec is not None:
+                if not is_hit:
+                    if banks.open_row[b] != -1:
+                        self._rec.emit(t, "PRE", int(b), sub=r.sub)
+                    self._rec.emit(t, "ACT", int(b), sub=r.sub, row=r.row)
+                self._rec.emit(t, "WR" if r.is_write else "RD", int(b),
+                               sub=r.sub, row=r.row, data=done)
             banks.open_row[b] = r.row
             banks.open_sub[b] = r.sub
             self.stats["hits" if is_hit else "misses"] += 1
@@ -441,7 +463,8 @@ class DramSim:
     # ------------------------------------------------------------------ run
     def run_ticks(self, dt_ns: float = 6.0,
                   horizon: Optional[int] = None, *,
-                  record_timeline: bool = False) -> SimResult:
+                  record_timeline: bool = False,
+                  record_commands: bool = False) -> SimResult:
         """Closed-loop run on the sweep engine's integer tick contract.
 
         The event-heap `run()` above is the float timing-fidelity mode;
@@ -475,6 +498,12 @@ class DramSim:
         `record_timeline=True` additionally fills `SimResult.timeline`
         with every refresh occupancy interval and every serve (fig2's
         data source; ~O(commands) memory).
+
+        `record_commands=True` additionally fills `SimResult.commands`
+        with a DFI-style `repro.core.commands.CmdTrace` of every
+        ACT/PRE/PREA/RD/WR/REF command the run issues, plus the raw
+        demand streams for bit-identical replay (tick-contract section
+        7); when False the tick loop pays nothing for it.
         """
         from repro.core.policy.ledger import MaintenanceLedger
         from repro.core.refresh.workload import quantize_streams
@@ -499,6 +528,7 @@ class DramSim:
         WR, TURN = tkq(T.tWR), tkq(T.tWTR)
         RTR = tkq(T.tRTR)
         SARP_PEN = tkq(T.sarp_penalty)
+        TRP = tkq(T.tRP)
         budget = T.refresh_budget
         rank_phase = [gr * (REFI // R) for gr in range(R)]
 
@@ -506,6 +536,11 @@ class DramSim:
         C, mlp = len(streams), self.wl.mlp
         n_req = [len(s["is_write"]) for s in streams]
         CAP, HI, LO = self.wbuf_cap, self.wbuf_hi, self.wbuf_lo
+
+        rec = None
+        if record_commands:
+            from repro.core.commands.trace import CmdRecorder, tick_meta
+            rec = CmdRecorder(tick_meta(T, pol, dt_ns, wbuf=(CAP, HI, LO)))
 
         led = MaintenanceLedger(B, interval=float(REFI), budget=budget,
                                 stagger=False)
@@ -557,6 +592,10 @@ class DramSim:
             start = t if (hra and ns_ != open_sub[b]) else \
                 max(t, bank_free[b])
             end = start + RFC_PB
+            if rec is not None:
+                tsub = ns_ if pol.sarp else -1
+                rec.emit(start, "PRE", b, sub=tsub)
+                rec.emit(start + TRP, "REF_PB", b, sub=tsub, data=t)
             if pol.sarp:
                 ref_until_s[b][ns_] = end
                 open_row_s[b][ns_] = -1
@@ -575,6 +614,9 @@ class DramSim:
         def start_ab(gr: int, t: int):
             nonlocal refab
             end = t + RFC_AB
+            if rec is not None:
+                rec.emit_rank(t, "PREA", gr)
+                rec.emit_rank(t + TRP, "REF_AB", gr, data=t)
             for b in range(gr * NB, (gr + 1) * NB):
                 if pol.sarp:
                     ns_ = ctr[b] % S
@@ -751,6 +793,13 @@ class DramSim:
                     bank_free[b] = done + (WR if isw else 0)
                     last_op[ch] = isw
                     last_rank[ch] = gr
+                    if rec is not None:
+                        if not hit:
+                            if open_row_s[b][sub] != -1:
+                                rec.emit(t, "PRE", b, sub=sub)
+                            rec.emit(t, "ACT", b, sub=sub, row=row)
+                        rec.emit(t, "WR" if isw else "RD", b,
+                                 sub=sub, row=row, data=done)
                     open_row_s[b][sub] = row
                     open_sub[b] = sub
                     if timeline is not None:
@@ -785,13 +834,25 @@ class DramSim:
             refreshes_pb=refpb, refreshes_ab=refab,
             row_hits=hits, row_misses=misses, energy=e,
             max_abs_lag=maxlag, timeline=timeline,
+            commands=(rec.trace(end=int(max(fin, default=0)),
+                                demand={"mlp": int(mlp),
+                                        "streams": self.streams})
+                      if rec is not None else None),
         )
 
-    def run(self) -> SimResult:
+    def run(self, *, record_commands: bool = False) -> SimResult:
         self.policy = resolve_policy(self._policy_spec)
         T, pol = self.T, self.policy
         nb, ncore = T.n_banks_total, self.wl.n_cores
         R = T.n_ranks_total
+
+        self._rec = None
+        if record_commands:
+            # event-mode trace: float-ns clock, sequencing/budget rules
+            # only (tick-contract section 5 names the divergences)
+            from repro.core.commands.trace import CmdRecorder, event_meta
+            self._rec = CmdRecorder(event_meta(
+                T, pol, wbuf=(self.wbuf_cap, self.wbuf_hi, self.wbuf_lo)))
 
         # ---- machine state
         self._heap: list = []
@@ -871,6 +932,8 @@ class DramSim:
             refreshes_pb=stats["ref_pb"], refreshes_ab=stats["ref_ab"],
             row_hits=stats["hits"], row_misses=stats["misses"], energy=e,
             max_abs_lag=int(self.ledger.max_abs_lag),
+            commands=(self._rec.trace(end=makespan)
+                      if self._rec is not None else None),
         )
 
 

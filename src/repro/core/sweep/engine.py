@@ -156,6 +156,7 @@ class TickTiming:
     REFI_PB: int
     RFC_PB: int
     RFC_AB: int
+    TRP: int                     # precharge-to-REF preamble gap
     HIT: int
     MISS: int
     WR: int
@@ -179,7 +180,7 @@ class TickTiming:
         return cls(density_gb=density_gb, dt_ns=dt_ns, REFI=refi,
                    REFI_PB=max(1, refi // T.n_banks_total),
                    RFC_PB=tk(T.tRFC_pb),
-                   RFC_AB=tk(T.tRFC_ab), HIT=tk(T.row_hit),
+                   RFC_AB=tk(T.tRFC_ab), TRP=tk(T.tRP), HIT=tk(T.row_hit),
                    MISS=tk(T.row_miss), WR=tk(T.tWR), TURN=tk(T.tWTR),
                    RTR=tk(T.tRTR), SARP_PEN=tk(T.sarp_penalty),
                    budget=T.refresh_budget)
@@ -330,9 +331,20 @@ class SweepResult:
         self.backend = backend
         self._by_key = {(c.policy, c.scenario, c.density_gb): c
                         for c in cells}
+        #: per-cell DFI command traces, keyed (policy, scenario, density);
+        #: populated only by `sweep(..., record_commands=True)`
+        self.commands = None
 
     def get(self, policy: str, scenario: str, density: int) -> CellResult:
         return self._by_key[(policy, _scenario_name(scenario), density)]
+
+    def commands_for(self, policy: str, scenario: str, density: int):
+        """The cell's emitted `CmdTrace` (record_commands sweeps only)."""
+        if self.commands is None:
+            raise ValueError(
+                "this sweep did not record command traces; rerun with "
+                "sweep(spec, record_commands=True)")
+        return self.commands[(policy, _scenario_name(scenario), density)]
 
     def stat(self, name: str) -> np.ndarray:
         """One stat as a [n_policies, n_scenarios, n_densities] array."""
@@ -432,8 +444,8 @@ class _Grid:
         self.wrp = np.zeros(G, bool)
         self.urgent_at = np.ones(G, np.int32)
         self.budget = ints()
-        for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR", "TURN",
-                  "RTR", "SARP_PEN"):
+        for f in ("REFI", "RFC_PB", "RFC_AB", "TRP", "HIT", "MISS", "WR",
+                  "TURN", "RTR", "SARP_PEN"):
             setattr(self, f, ints())
         self.phase = np.zeros((G, B), np.int32)
         # per-(cell, global rank) all-bank debt accrual phase: rank r's
@@ -467,8 +479,8 @@ class _Grid:
             self.wrp[g] = params.get("wrp", False)
             self.urgent_at[g] = params.get("urgent_at", 1)
             self.budget[g] = tk.budget
-            for f in ("REFI", "RFC_PB", "RFC_AB", "HIT", "MISS", "WR",
-                      "TURN", "RTR", "SARP_PEN"):
+            for f in ("REFI", "RFC_PB", "RFC_AB", "TRP", "HIT", "MISS",
+                      "WR", "TURN", "RTR", "SARP_PEN"):
                 getattr(self, f)[g] = getattr(tk, f)
             self.phase[g] = np.arange(B, dtype=np.int32) * tk.REFI_PB
             self.rank_phase[g] = (np.arange(self.R, dtype=np.int32)
@@ -911,11 +923,19 @@ def _run_batched(grid: _Grid, arbiter: str = "numpy") -> list[CellResult]:
 
 
 # ------------------------------------------------ batched backend (closed)
-def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
-                        ) -> list[CellResult]:
+def _run_batched_closed(grid: _Grid, arbiter: str = "numpy", *,
+                        record_commands: bool = False):
     """Closed-loop mode over the stacked state: the open-loop machine plus
     vectorized per-core MLP windows, write-buffer backpressure, and ring
-    bank queues fed by the cores (contract in the module docstring)."""
+    bank queues fed by the cores (contract in the module docstring).
+
+    Returns the cell list; with `record_commands=True` returns
+    `(cells, traces)` where `traces[g]` is the cell's DFI-style
+    `repro.core.commands.CmdTrace` — emitted at the same three hook
+    points as `DramSim.run_ticks` (refresh decisions and serves), so the
+    per-cell trace is command-identical to the reference engine's. The
+    per-command Python appends only run when recording; the vectorized
+    loop is untouched otherwise."""
     spec = grid.spec
     G, B, S = grid.G, grid.B, grid.S
     NB, R, NC = grid.NB, grid.R, grid.NC
@@ -924,6 +944,20 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
     LQ = grid.LQ
     QM = LQ - 1
     HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
+
+    recs = None
+    if record_commands:
+        from repro.core.commands.trace import CmdRecorder, tick_meta
+        recs = []
+        for (p, s, d) in grid.cells:
+            T = timing_for_density(d, n_banks=spec.n_banks,
+                                   n_subarrays=spec.n_subarrays,
+                                   n_ranks=spec.n_ranks,
+                                   n_channels=spec.n_channels)
+            recs.append(CmdRecorder(tick_meta(
+                T, resolve_policy(p), spec.dt_ns,
+                scenario=_scenario_name(s),
+                wbuf=(spec.wbuf_cap, spec.wbuf_hi, spec.wbuf_lo))))
 
     score_fn = None
     if arbiter == "pallas":
@@ -1183,6 +1217,11 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
             ab_pending -= start_ab_r
             rank_drain = np.where(start_ab_r, ab_pending > 0, rank_drain)
             refab += start_ab_r.sum(axis=1)
+            if recs is not None:
+                for g_, r_ in zip(*np.nonzero(start_ab_r)):
+                    recs[g_].emit_rank(t, "PREA", int(r_))
+                    recs[g_].emit_rank(t + int(grid.TRP[g_]), "REF_AB",
+                                       int(r_), data=t)
 
         if picks is not None:
             new_sub = (ctr % S).astype(np.int32)
@@ -1193,6 +1232,13 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
             # access has been served, and bank_free <= t before then)
             start = np.maximum(t, bank_free)
             start = np.where(hra_c & (new_sub != open_sub), t, start)
+            if recs is not None:
+                for g_, b_ in zip(*np.nonzero(picks)):
+                    st = int(start[g_, b_])
+                    tsub = int(new_sub[g_, b_]) if grid.sarp[g_] else -1
+                    recs[g_].emit(st, "PRE", int(b_), sub=tsub)
+                    recs[g_].emit(st + int(grid.TRP[g_]), "REF_PB",
+                                  int(b_), sub=tsub, data=t)
             mark = (np.repeat(picks, S, axis=1)
                     & np.where(sarp_c, np.repeat(new_sub, S, axis=1)
                                == sub_of_col, True))
@@ -1257,6 +1303,17 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
             lr = last_rank[gs, ch]
             lat = lat + np.where((lr >= 0) & (lr != gr_b), grid.RTR[gs], 0)
             done = t + lat
+            if recs is not None:
+                oldr = head_or[gs, bs]
+                for k in range(len(gs)):
+                    g_, b_ = int(gs[k]), int(bs[k])
+                    sb_, rw_ = int(sub[k]), int(row[k])
+                    if not hit[k]:
+                        if oldr[k] != -1:
+                            recs[g_].emit(t, "PRE", b_, sub=sb_)
+                        recs[g_].emit(t, "ACT", b_, sub=sb_, row=rw_)
+                    recs[g_].emit(t, "WR" if isw[k] else "RD", b_,
+                                  sub=sb_, row=rw_, data=int(done[k]))
             bank_free[gs, bs] = done + np.where(isw, grid.WR[gs], 0)
             last_op[gs, ch] = isw
             last_rank[gs, ch] = gr_b
@@ -1283,12 +1340,17 @@ def _run_batched_closed(grid: _Grid, arbiter: str = "numpy"
 
     finished = ~active
     fin = np.where(finish < 0, t, finish)
-    return [_finalize(grid, g, reads=reads[g], writes=writes[g],
-                      hits=hits[g], misses=misses[g], refpb=refpb[g],
-                      refab=refab[g], lat_sum=lat_sum[g], hist=hist[g],
-                      maxlag=maxlag[g], last_done=last_done[g],
-                      finished=finished[g], core_finish=fin[g])
-            for g in range(grid.G)]
+    cells = [_finalize(grid, g, reads=reads[g], writes=writes[g],
+                       hits=hits[g], misses=misses[g], refpb=refpb[g],
+                       refab=refab[g], lat_sum=lat_sum[g], hist=hist[g],
+                       maxlag=maxlag[g], last_done=last_done[g],
+                       finished=finished[g], core_finish=fin[g])
+             for g in range(grid.G)]
+    if recs is not None:
+        traces = [recs[g].trace(end=int(fin[g].max()))
+                  for g in range(grid.G)]
+        return cells, traces
+    return cells
 
 
 # ---------------------------------------------------------- scalar oracle
@@ -2460,7 +2522,8 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
 
 # ------------------------------------------------------------------ entry
 def sweep(spec: SweepSpec, backend: str = "batched",
-          arbiter: Optional[str] = None) -> SweepResult:
+          arbiter: Optional[str] = None, *,
+          record_commands: bool = False) -> SweepResult:
     """Run the whole grid.
 
     backend="batched" : stacked-numpy lock-step (default; supports custom
@@ -2476,12 +2539,30 @@ def sweep(spec: SweepSpec, backend: str = "batched",
     All three backends exist for both `spec.mode` values; closed-loop
     cells additionally carry `core_finish`, making
     `CellResult.weighted_speedup_vs` (the paper's metric) available.
+
+    `record_commands=True` (batched backend, closed mode only)
+    additionally emits a per-cell DFI-style command trace, retrievable
+    via `SweepResult.commands_for(policy, scenario, density)` — the same
+    `repro.core.commands.CmdTrace` `DramSim.run_ticks` emits, command
+    for command (tick-contract section 7).
     """
     grid = _Grid(spec)
     closed = grid.closed
+    if record_commands and not (backend == "batched" and closed):
+        raise ValueError(
+            "record_commands=True needs backend='batched' and "
+            "mode='closed' (the jitted/scalar backends do not emit; use "
+            "DramSim.run_ticks(record_commands=True) per cell instead)")
+    traces = None
     if backend == "batched":
-        run = _run_batched_closed if closed else _run_batched
-        cells = run(grid, arbiter=arbiter or "numpy")
+        if closed:
+            if record_commands:
+                cells, traces = _run_batched_closed(
+                    grid, arbiter=arbiter or "numpy", record_commands=True)
+            else:
+                cells = _run_batched_closed(grid, arbiter=arbiter or "numpy")
+        else:
+            cells = _run_batched(grid, arbiter=arbiter or "numpy")
     elif backend == "jax":
         run = _run_jax_closed if closed else _run_jax
         cells = run(grid, arbiter=arbiter or "jnp")
@@ -2490,4 +2571,8 @@ def sweep(spec: SweepSpec, backend: str = "batched",
         cells = [run_cell(grid, g) for g in range(grid.G)]
     else:
         raise ValueError(f"unknown sweep backend {backend!r}")
-    return SweepResult(spec, cells, backend)
+    res = SweepResult(spec, cells, backend)
+    if traces is not None:
+        res.commands = {(c.policy, c.scenario, c.density_gb): tr
+                        for c, tr in zip(cells, traces)}
+    return res

@@ -1,0 +1,6 @@
+"""Fixture command layer: tuples drift from the doc tables (CM601/CM602)."""
+
+MNEMONICS = ("ACT", "PRE", "PREA", "RD", "WR", "REF_AB", "REF_PB")
+
+TIMING_FIELDS = ("REFI", "REFI_PB", "RFC_AB", "RFC_PB", "TRP", "HIT",
+                 "MISS", "WR", "TURN", "RTR", "SARP_PEN", "BUDGET")

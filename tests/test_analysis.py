@@ -33,6 +33,7 @@ BADREPO_RULES = {
     "PP301", "PP302", "PP303",
     "RC401", "RC402", "RC403", "RC404", "RC405", "RC406",
     "PL501", "PL502", "PL503",
+    "CM601", "CM602",
 }
 
 
@@ -46,7 +47,7 @@ def test_pass_catalog():
     infos = list_passes()
     assert {i.name for i in infos} == {
         "bitfield", "dtype", "policy-purity", "registry-coverage",
-        "pallas-lint"}
+        "pallas-lint", "commands"}
     all_rules = [rid for i in infos for rid, _ in i.rules]
     assert len(all_rules) == len(set(all_rules)), "rule ids must be unique"
     assert all(RULE_ID_RE.match(r) for r in all_rules)
@@ -170,6 +171,31 @@ def test_bitfield_catches_noconf_mutation(tmp_path):
     fired = rules_of(root, ["bitfield"])
     # the duplicate shift both overlaps the hit flag and breaks priority
     assert fired == {"BF102", "BF103"}
+
+
+def test_commands_catches_doc_table_drift(tmp_path):
+    # dropping a mnemonic row from the doc must trip CM601; renaming it
+    # to something the code never emits must also trip CM602
+    def mutate(root):
+        f = root / "docs/tick-contract.md"
+        f.write_text(f.read_text().replace("| `REF_PB` | bank  |",
+                                           "| `REF_SB` | bank  |"))
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    fired = rules_of(root, ["commands"])
+    assert fired == {"CM601", "CM602"}
+
+
+def test_commands_catches_new_code_mnemonic(tmp_path):
+    # the pass re-derives the tuple by AST: a new command the doc does
+    # not yet table must fail CI
+    def mutate(root):
+        f = root / "src/repro/core/commands/trace.py"
+        f.write_text(f.read_text().replace(
+            '"REF_AB", "REF_PB")', '"REF_AB", "REF_PB", "SRE")'))
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    assert rules_of(root, ["commands"]) == {"CM601"}
 
 
 def test_registry_catches_sarp_policy_skipping_subarray_matrix(tmp_path):

@@ -1,0 +1,223 @@
+"""The command layer: DFI-style emission, JEDEC validation, replay.
+
+Four pins (docs/tick-contract.md section 7 is the normative spec):
+
+* emission — `record_commands=True` on `DramSim.run_ticks` / `run` and
+  the batched closed-loop sweep produce canonically-ordered `CmdTrace`s
+  whose counts reconcile with the run's stats; disabled runs carry no
+  trace (and pay nothing — `benchmarks/run.py::command_trace` measures
+  the overhead);
+* validation — golden fixtures under tests/fixtures/commands/: the
+  captured trace is violation-free, and each `bad_*.json` (one planted
+  sequencing break per rule) fires exactly its named rule first;
+* replay — emit -> validate -> replay is a bit-identical round trip
+  (`round_trip`), from fresh runs and from the on-disk fixture;
+* the property — every registered policy x closed scenario x
+  n_ranks in {1, 2} x n_subarrays in {1, 4} emits a violation-free
+  trace (full matrix deterministically, random seeds via hypothesis).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback; see _hypothesis_shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.commands import (MNEMONICS, TIMING_FIELDS, CmdTrace,
+                                 round_trip, traces_equal, validate_trace)
+from repro.core.commands.trace import _key
+from repro.core.commands.validator import RULES
+from repro.core.policy import list_policies
+from repro.core.refresh import DramSim, make_closed_workload
+from repro.core.refresh.scenarios import list_closed_scenarios
+from repro.core.refresh.timing import timing_for_density
+from repro.core.refresh.workload import make_workload
+from repro.core.sweep import SweepSpec, sweep
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "commands"
+
+
+def _run(policy="dsarp", density=32, n_ranks=2, n_subarrays=4, reqs=48,
+         seed=3, record=True):
+    T = timing_for_density(density, n_ranks=n_ranks,
+                           n_subarrays=n_subarrays)
+    wl = make_workload(n_cores=2, reqs_per_core=reqs, seed=seed)
+    return DramSim(T, wl, policy).run_ticks(record_commands=record)
+
+
+# ------------------------------------------------------------- emission
+
+def test_disabled_by_default_and_zero_cost():
+    res = _run(record=False)
+    assert res.commands is None
+
+
+def test_trace_counts_reconcile_with_stats():
+    res = _run()
+    tr = res.commands
+    assert len(tr) > 0
+    counts = tr.counts()
+    assert set(counts) <= set(MNEMONICS)
+    assert counts["RD"] == res.reads_done
+    assert counts["WR"] == res.writes_done
+    assert counts["REF_PB"] == res.refreshes_pb
+    assert counts["REF_AB"] == res.refreshes_ab == 0  # dsarp is pb-level
+    assert counts["PRE"] >= counts["REF_PB"]  # every refresh has a preamble
+    # canonical order: sorted by (tick, op-class, address)
+    assert tr.cmds == sorted(tr.cmds, key=_key)
+
+
+def test_ab_policy_emits_rank_level_commands():
+    res = _run(policy="ref_ab", reqs=400)  # long enough to owe a REF_AB
+    counts = res.commands.counts()
+    assert counts["REF_AB"] == res.refreshes_ab > 0
+    assert counts["PREA"] == counts["REF_AB"]
+    for c in res.commands.cmds:
+        if c.op in ("PREA", "REF_AB"):
+            assert c.bank == -1 and c.sub == -1
+
+
+def test_meta_carries_every_timing_field():
+    tr = _run().commands
+    for f in TIMING_FIELDS:
+        assert f in tr.meta, f
+    assert tr.meta["clock"] == "tick"
+    assert tr.meta["TRP"] == 2 and tr.meta["BUDGET"] == 8
+    assert tr.meta["end"] >= max(c.tick for c in tr.cmds)
+
+
+def test_event_mode_emits_ns_trace():
+    T = timing_for_density(32, n_subarrays=4)
+    wl = make_workload(n_cores=2, reqs_per_core=48, seed=3)
+    res = DramSim(T, wl, "dsarp").run(record_commands=True)
+    tr = res.commands
+    assert tr.meta["clock"] == "ns" and tr.meta["dt_ns"] is None
+    assert len(tr) > 0
+    assert validate_trace(tr) == []
+
+
+def test_json_round_trip():
+    tr = _run().commands
+    back = CmdTrace.from_json(json.loads(json.dumps(tr.to_json())))
+    assert traces_equal(tr, back)
+    assert back.demand is not None  # captured traces keep their streams
+
+
+# ----------------------------------------------------- golden fixtures
+
+def _load(name):
+    return CmdTrace.from_json(json.loads((FIXTURES / name).read_text()))
+
+
+def test_golden_valid_fixture_is_clean_and_replays():
+    tr = _load("valid.json")
+    assert validate_trace(tr) == []
+    res, bit_identical = round_trip(tr)
+    assert bit_identical
+    assert res.commands.meta["end"] == tr.meta["end"]
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_golden_fixture_fires_exactly_its_rule(rule):
+    bad = _load("bad_" + rule.replace("-", "_") + ".json")
+    fired = validate_trace(bad)
+    assert fired, rule
+    assert fired[0].rule == rule, fired[:3]
+
+
+# --------------------------------------------------------------- replay
+
+@pytest.mark.parametrize("policy", ("dsarp", "ref_ab", "hira", "elastic"))
+def test_round_trip_is_bit_identical(policy):
+    res = _run(policy=policy)
+    replayed, bit_identical = round_trip(res.commands)
+    assert bit_identical
+    assert replayed.makespan == res.makespan
+    assert replayed.avg_read_latency == res.avg_read_latency
+
+
+def test_replay_under_a_different_policy_is_counterfactual():
+    from repro.core.commands import replay_trace
+
+    tr = _run(policy="ref_pb").commands
+    other = replay_trace(tr, policy="dsarp")
+    assert other.commands.meta["policy"] == "dsarp"
+    assert validate_trace(other.commands) == []
+
+
+def test_external_trace_replays_through_demand_synthesis():
+    # strip the captured demand: replay must go through
+    # demand_from_commands, stay JEDEC-clean, and be deterministic
+    tr = _run().commands
+    external = CmdTrace(meta=dict(tr.meta), cmds=list(tr.cmds))  # no demand
+    res, _ = round_trip(external)
+    assert validate_trace(res.commands) == []
+    again, _ = round_trip(CmdTrace(meta=dict(tr.meta), cmds=list(tr.cmds)))
+    assert res.makespan == again.makespan
+    assert traces_equal(res.commands, again.commands)
+
+
+# ------------------------------------------------- batched sweep parity
+
+def test_batched_sweep_emission_matches_run_ticks():
+    reqs, seed = 96, 2
+    spec = SweepSpec(policies=("dsarp", "ref_ab", "darp"),
+                     scenarios=("closed_mixed",), densities=(8, 32),
+                     reqs=reqs, seed=seed, n_ranks=2, mode="closed")
+    res = sweep(spec, "batched", record_commands=True)
+    for p in spec.policies:
+        for d in spec.densities:
+            tr = res.commands_for(p, "closed_mixed", d)
+            assert validate_trace(tr) == [], (p, d)
+            wl = make_closed_workload("closed_mixed", reqs, seed)
+            sim = DramSim(timing_for_density(d, n_ranks=2), wl, p)
+            ref = sim.run_ticks(record_commands=True).commands
+            assert traces_equal(tr, ref), (p, d)
+
+
+def test_sweep_refuses_recording_off_the_fast_path():
+    spec = SweepSpec(policies=("dsarp",), scenarios=("closed_mixed",),
+                     densities=(32,), reqs=8, mode="closed")
+    with pytest.raises(ValueError):
+        sweep(spec, "scalar", record_commands=True)
+
+
+# ----------------------------------------------- the clean-trace matrix
+
+def test_every_policy_matrix_is_violation_free():
+    """Full matrix: 14+ policies x closed scenarios x R{1,2} x S{1,4}."""
+    failures = []
+    for policy in list_policies():
+        for scenario in list_closed_scenarios():
+            for n_ranks in (1, 2):
+                for n_subarrays in (1, 4):
+                    T = timing_for_density(32, n_ranks=n_ranks,
+                                           n_subarrays=n_subarrays)
+                    wl = make_closed_workload(scenario, 32, 1)
+                    res = DramSim(T, wl, policy).run_ticks(
+                        record_commands=True)
+                    vio = validate_trace(res.commands, limit=1)
+                    if vio:
+                        failures.append(
+                            (policy, scenario, n_ranks, n_subarrays,
+                             str(vio[0])))
+    assert not failures, failures[:5]
+
+
+@settings(max_examples=20, deadline=None)
+@given(policy=st.sampled_from(sorted(list_policies())),
+       scenario=st.sampled_from(sorted(list_closed_scenarios())),
+       n_ranks=st.sampled_from((1, 2)),
+       n_subarrays=st.sampled_from((1, 4)),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_property_every_emitted_trace_is_jedec_clean(
+        policy, scenario, n_ranks, n_subarrays, seed):
+    T = timing_for_density(32, n_ranks=n_ranks, n_subarrays=n_subarrays)
+    wl = make_closed_workload(scenario, 48, seed)
+    res = DramSim(T, wl, policy).run_ticks(record_commands=True)
+    vio = validate_trace(res.commands, limit=3)
+    assert vio == [], (policy, scenario, n_ranks, n_subarrays, seed,
+                       [str(v) for v in vio])
