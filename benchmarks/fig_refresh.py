@@ -24,12 +24,23 @@ closed_loop: the closed-loop analogue — a timed (policy x closed-scenario
 sweep_subarray: the [bank, subarray] hierarchy — the subarray-storm grid
       at n_subarrays in {1, 4, 8}, bit-identical per subarray count vs
       looping `DramSim.run_ticks`, per-count weighted speedup vs ideal.
+sweep_mega: the fused megakernel's giga-sweep ladder — every registered
+      policy x seed-varied closed scenario instances x 3 densities at
+      10^3 / 10^4 / 10^5 cells, `run_mega` vs the jitted `lax.while_loop`
+      backend as one campaign, plus 1/2/4-way `shard_map`, bit-identity
+      spot checks vs batched, and the warm-kernel regression guard on
+      the 8x8x3 reference grid.
 
 `docs/figures.md` maps each emitted results/bench/*.json artifact to its
 paper figure and regeneration command.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -360,6 +371,168 @@ def sweep_subarray(fast: bool = False) -> dict:
         }
     out["bit_identical"] = identical
     return out
+
+
+#: base closed scenarios the giga-sweep ladder cycles through while
+#: scaling the scenario axis (densities are pinned to the three tREFI
+#: ladders in timing.py, so scale comes from seed-varied demand instances)
+MEGA_BASE_SCENARIOS = ("closed_mixed", "closed_read_heavy",
+                       "closed_write_heavy", "closed_streaming")
+#: ladder chunk-shape pins: with the cell tile and tiles-per-dispatch
+#: fixed, the megakernel's compiled program is independent of the grid
+#: size G, so its one compile at the 10^3 rung serves the whole campaign
+#: (the jax while_loop backend re-jits at every G — its trace includes
+#: the stacked state's leading axis)
+MEGA_TILE = 42
+MEGA_CHUNK_TILES = 24
+#: scenario-axis rungs: 14 policies x n_scen x 3 densities cells
+MEGA_LADDER = {"1e3": 24, "1e4": 239, "1e5": 2384}
+
+
+def mega_ladder_spec(n_scen: int, reqs: int = 32) -> SweepSpec:
+    """The ladder spec at one rung: every registered policy x `n_scen`
+    seed-varied closed demand instances x the 3 densities."""
+    from repro.core.policy import list_policies
+    from repro.core.refresh.scenarios import make_closed_demand
+
+    scen = []
+    for i in range(n_scen):
+        name = MEGA_BASE_SCENARIOS[i % len(MEGA_BASE_SCENARIOS)]
+        d = make_closed_demand(name, reqs=reqs, seed=1000 + i)
+        scen.append(dataclasses.replace(d, name=f"{name}#s{i}"))
+    return SweepSpec(policies=tuple(list_policies()),
+                     scenarios=tuple(scen), densities=DENSITIES,
+                     reqs=reqs, seed=0, mode="closed")
+
+
+def _shard_probe(n_scen: int = 24) -> dict:
+    """1/2/4-way `shard_map` over the cell-tile axis at one ladder rung,
+    each way warmed then timed, 2- and 4-way outputs compared
+    bit-for-bit against 1-way. Runs in a fresh subprocess spawned by
+    `sweep_mega` because XLA_FLAGS=--xla_force_host_platform_device_count
+    must be set before jax initialises."""
+    import jax
+
+    from repro.core.sweep.engine import _Grid
+    from repro.kernels.sweep_megakernel import run_mega
+
+    grid = _Grid(mega_ladder_spec(n_scen), stack_streams=False)
+    out = {"cells": grid.G, "host_devices": len(jax.devices()),
+           "wall_clock_s": {}, "bit_identical": True}
+    base = None
+    for ways in (1, 2, 4):
+        if ways > len(jax.devices()):
+            continue
+        run_mega(grid, n_shards=ways, tile=MEGA_TILE,
+                 chunk_tiles=MEGA_CHUNK_TILES)  # compile warm-up
+        t0 = time.perf_counter()
+        res = run_mega(grid, n_shards=ways, tile=MEGA_TILE,
+                       chunk_tiles=MEGA_CHUNK_TILES)
+        out["wall_clock_s"][str(ways)] = round(time.perf_counter() - t0, 3)
+        if base is None:
+            base = res
+        else:
+            out["bit_identical"] &= all(
+                np.array_equal(base[k], res[k]) for k in base)
+    return out
+
+
+def sweep_mega(fast: bool = False) -> dict:
+    """The fused megakernel's giga-sweep ladder vs the jitted
+    `lax.while_loop` backend, run as ONE campaign: the megakernel keeps
+    its pinned chunk shape across rungs (one compile for the whole
+    ladder), while the jax backend re-jits at each grid size — exactly
+    the cost profile a real 10^5-cell sweep sees. Each rung reports
+    wall-clock and cells/sec for both; bit-identity is re-checked
+    through the public `sweep()` dispatch against the batched oracle
+    (the full 10^3 grid, then the 24 scenarios unique to each larger
+    rung). Also emits the 1/2/4-way `shard_map` probe (subprocess, 4
+    virtual host devices) and the regression guard: the warmed fused
+    path must beat the batched backend on the 8x8x3 open reference
+    grid."""
+    from repro.core.sweep.engine import _Grid
+    from repro.kernels.sweep_megakernel import run_mega
+
+    rungs = list(MEGA_LADDER.items())[:2 if fast else 3]
+    ladder = []
+    identical = True
+    for i, (label, n_scen) in enumerate(rungs):
+        spec = mega_ladder_spec(n_scen)
+        cells = len(spec.cells())
+        grid = _Grid(spec, stack_streams=False)
+        t0 = time.perf_counter()
+        run_mega(grid, tile=MEGA_TILE, chunk_tiles=MEGA_CHUNK_TILES)
+        mega_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sweep(spec, backend="jax")
+        jax_s = time.perf_counter() - t0
+        sub = spec if i == 0 else SweepSpec(
+            policies=spec.policies, scenarios=spec.scenarios[-24:],
+            densities=spec.densities, reqs=spec.reqs, seed=spec.seed,
+            mode="closed")
+        a = sweep(sub, backend="mega")
+        b = sweep(sub, backend="batched")
+        identical &= all(x == y for x, y in zip(a.cells, b.cells))
+        ladder.append({
+            "rung": label, "cells": cells,
+            "mega_s": round(mega_s, 2),
+            "mega_cells_per_s": int(cells / mega_s),
+            "jax_s": round(jax_s, 2),
+            "jax_cells_per_s": int(cells / jax_s),
+            "speedup_vs_jax": round(jax_s / mega_s, 2),
+            "bit_identical_cells_checked": len(sub.cells()),
+        })
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.pathsep.join((os.path.join(root, "src"),
+                                           root)))
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import json; from benchmarks.fig_refresh import _shard_probe; "
+         "print(json.dumps(_shard_probe(24)))"],
+        capture_output=True, text=True, env=env, cwd=root, check=True)
+    shard = json.loads(proc.stdout.strip().splitlines()[-1])
+    identical &= shard["bit_identical"]
+
+    reqs = 120 if fast else 400
+    spec_ref = SweepSpec(policies=GRID_POLICIES, scenarios=GRID_SCENARIOS,
+                         densities=DENSITIES, reqs=reqs, seed=0)
+    sweep(spec_ref, backend="mega")  # compile warm-up
+    t0 = time.perf_counter()
+    sweep(spec_ref, backend="mega")
+    mega_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep(spec_ref, backend="batched")
+    batched_ref = time.perf_counter() - t0
+    if mega_ref >= batched_ref:
+        raise AssertionError(
+            "megakernel regression: warmed fused path took "
+            f"{mega_ref:.3f}s vs batched {batched_ref:.3f}s on the "
+            "8x8x3 reference grid (it must stay faster)")
+
+    spec0 = mega_ladder_spec(1)
+    return {
+        "grid": {"policies": len(spec0.policies),
+                 "densities": list(DENSITIES),
+                 "reqs_per_cell": spec0.reqs,
+                 "base_scenarios": list(MEGA_BASE_SCENARIOS)},
+        "protocol": "one campaign: run_mega keeps its pinned chunk "
+                    f"shape (tile={MEGA_TILE}, chunk_tiles="
+                    f"{MEGA_CHUNK_TILES}) so one compile serves every "
+                    "rung; the jax while_loop backend re-jits per grid "
+                    "size, as its trace shape includes G",
+        "ladder": ladder,
+        "shard_map": dict(shard, note="virtual host devices (single-"
+                          "core host): functional + bit-identity "
+                          "surface; scaling needs real devices"),
+        "ref_grid_8x8x3": {"reqs_per_cell": reqs,
+                           "mega_warm_s": round(mega_ref, 3),
+                           "batched_s": round(batched_ref, 3),
+                           "fused_beats_batched": True},
+        "bit_identical": identical,
+    }
 
 
 def command_trace(fast: bool = False) -> dict:

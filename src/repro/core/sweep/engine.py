@@ -362,9 +362,17 @@ def _scenario_name(s) -> str:
 
 # ------------------------------------------------------------------ grid
 class _Grid:
-    """Spec unpacked into stacked arrays + per-cell constants."""
+    """Spec unpacked into stacked arrays + per-cell constants.
 
-    def __init__(self, spec: SweepSpec):
+    ``stack_streams=False`` (the megakernel layout) skips the per-cell
+    ``[G, ...]`` demand-stream stacking and keeps one stream plane per
+    *scenario* (``scn_*``, indexed by ``scn_of_cell``) instead — every
+    cell of a scenario replays the same stream, so a 10^5-cell grid needs
+    only ``n_scenarios`` stream copies; the fused kernel gathers its
+    tile's plane via scalar prefetch. Per-cell constants and totals are
+    identical in both layouts."""
+
+    def __init__(self, spec: SweepSpec, stack_streams: bool = True):
         if not (spec.policies and spec.scenarios and spec.densities):
             raise ValueError(
                 "sweep() needs at least one policy, scenario, and density "
@@ -424,10 +432,26 @@ class _Grid:
                     L = max(L, int(m.sum()))
                 split[name] = per_bank
             self.L = L
-            self.q_arrive = np.full((G, B, L), _PAD_ARRIVE, np.int32)
-            self.q_row = np.zeros((G, B, L), np.int32)
-            self.q_sub = np.zeros((G, B, L), np.int32)
-            self.q_write = np.zeros((G, B, L), bool)
+            if stack_streams:
+                self.q_arrive = np.full((G, B, L), _PAD_ARRIVE, np.int32)
+                self.q_row = np.zeros((G, B, L), np.int32)
+                self.q_sub = np.zeros((G, B, L), np.int32)
+                self.q_write = np.zeros((G, B, L), bool)
+            else:
+                NS = len(traces)
+                self.scn_qa = np.full((NS, B, L), _PAD_ARRIVE, np.int32)
+                self.scn_qr = np.zeros((NS, B, L), np.int32)
+                self.scn_qs = np.zeros((NS, B, L), np.int32)
+                self.scn_qw = np.zeros((NS, B, L), bool)
+                self.scn_npb = np.zeros((NS, B), np.int32)
+                for i, name in enumerate(traces):
+                    for b, (arr, row, sub, isw) in enumerate(split[name]):
+                        n = len(arr)
+                        self.scn_npb[i, b] = n
+                        self.scn_qa[i, b, :n] = arr
+                        self.scn_qr[i, b, :n] = row
+                        self.scn_qs[i, b, :n] = sub
+                        self.scn_qw[i, b, :n] = isw
             self.n_per_bank = np.zeros((G, B), np.int32)
 
         self.timing = {d: TickTiming.from_density(
@@ -460,13 +484,37 @@ class _Grid:
                     for dem in self.demands.values())
             self.C, self.N = C, N
             self.K = max(dem.mlp for dem in self.demands.values())
-            self.s_write = np.zeros((G, C, N), bool)
-            self.s_bank = np.zeros((G, C, N), np.int32)
-            self.s_row = np.zeros((G, C, N), np.int32)
-            self.s_sub = np.zeros((G, C, N), np.int32)
-            self.s_think = np.zeros((G, C, N), np.int32)
+            if stack_streams:
+                self.s_write = np.zeros((G, C, N), bool)
+                self.s_bank = np.zeros((G, C, N), np.int32)
+                self.s_row = np.zeros((G, C, N), np.int32)
+                self.s_sub = np.zeros((G, C, N), np.int32)
+                self.s_think = np.zeros((G, C, N), np.int32)
+            else:
+                NS = len(self.demands)
+                self.scn_write = np.zeros((NS, C, N), bool)
+                self.scn_bank = np.zeros((NS, C, N), np.int32)
+                self.scn_row = np.zeros((NS, C, N), np.int32)
+                self.scn_sub = np.zeros((NS, C, N), np.int32)
+                self.scn_think = np.zeros((NS, C, N), np.int32)
+                self.scn_nreq = np.zeros((NS, C), np.int32)
+                for i, dem in enumerate(self.demands.values()):
+                    c, n = dem.is_write.shape
+                    self.scn_write[i, :c, :n] = dem.is_write
+                    self.scn_bank[i, :c, :n] = dem.bank
+                    self.scn_row[i, :c, :n] = dem.row
+                    self.scn_sub[i, :c, :n] = dem.sub
+                    self.scn_think[i, :c, :n] = dem.think
+                    self.scn_nreq[i, :c] = n
             self.n_req_c = np.zeros((G, C), np.int32)
             self.mlp_g = np.zeros(G, np.int32)
+        # scenario index of every cell (megakernel tiles gather their
+        # scenario's stream plane through this; cheap in both layouts)
+        scn_names = list(self.demands) if self.closed else list(traces)
+        scn_index = {n: i for i, n in enumerate(scn_names)}
+        self.scn_of_cell = np.array(
+            [scn_index[_scenario_name(s)] for _, s, _ in self.cells],
+            dtype=np.int32)
 
         for g, (p, s, d) in enumerate(self.cells):
             tk = self.timing[d]
@@ -490,14 +538,15 @@ class _Grid:
             if self.closed:
                 dem = self.demands[_scenario_name(s)]
                 c, n = dem.is_write.shape
-                self.s_write[g, :c, :n] = dem.is_write
-                self.s_bank[g, :c, :n] = dem.bank
-                self.s_row[g, :c, :n] = dem.row
-                self.s_sub[g, :c, :n] = dem.sub
-                self.s_think[g, :c, :n] = dem.think
+                if stack_streams:
+                    self.s_write[g, :c, :n] = dem.is_write
+                    self.s_bank[g, :c, :n] = dem.bank
+                    self.s_row[g, :c, :n] = dem.row
+                    self.s_sub[g, :c, :n] = dem.sub
+                    self.s_think[g, :c, :n] = dem.think
                 self.n_req_c[g, :c] = n
                 self.mlp_g[g] = dem.mlp
-            else:
+            elif stack_streams:
                 for b, (arr, row, sub, isw) in enumerate(
                         split[_scenario_name(s)]):
                     n = len(arr)
@@ -506,6 +555,8 @@ class _Grid:
                     self.q_row[g, b, :n] = row
                     self.q_sub[g, b, :n] = sub
                     self.q_write[g, b, :n] = isw
+            else:
+                self.n_per_bank[g] = self.scn_npb[self.scn_of_cell[g]]
 
         self.has_stag = bool((self.kind == KIND_STAG).any())
         self.has_hra = bool(self.hra.any())
@@ -517,7 +568,8 @@ class _Grid:
             # (C * mlp) + buffered writes (wbuf_cap)
             need = self.C * int(self.K) + spec.wbuf_cap + 1
             self.LQ = 1 << max(1, (need - 1).bit_length())
-            think_span = int(self.s_think.sum(axis=2).max())
+            s_think = self.s_think if stack_streams else self.scn_think
+            think_span = int(s_think.sum(axis=2).max())
             auto = (think_span + 4 * int(self.n_tot.max()) * svc
                     + 8 * int(self.RFC_AB.max()) + 64)
         else:
@@ -556,12 +608,15 @@ def _p99_ticks(hist_row: np.ndarray, n_reads: int) -> int:
 
 def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
               refab, lat_sum, hist, maxlag, last_done, finished,
-              core_finish=None) -> CellResult:
+              core_finish=None, p99=None) -> CellResult:
     """Integer machine stats -> CellResult. Shared by every backend (and
     mirrored by `DramSim.run_ticks`) so the derived floats are
     bit-identical whenever the integers are. `core_finish` (per-core
     finish ticks) switches the cell to closed-loop accounting: makespan
-    becomes the last core's finish instead of the last data burst."""
+    becomes the last core's finish instead of the last data burst.
+    `p99` (the p99 tick index, already reduced from the histogram — the
+    megakernel computes it in-kernel and never ships the [4096] rows
+    home) skips `_p99_ticks`; `hist` may be None then."""
     from repro.core.refresh.sim import energy_proxy
     p, s, d = grid.cells[g]
     spec = grid.spec
@@ -583,7 +638,8 @@ def _finalize(grid: _Grid, g: int, *, reads, writes, hits, misses, refpb,
         policy=p, scenario=_scenario_name(s), density_gb=d,
         makespan=makespan, reads_done=int(reads), writes_done=int(writes),
         avg_read_latency=(dt * int(lat_sum) / int(reads)) if reads else 0.0,
-        p99_read_latency=dt * _p99_ticks(hist, int(reads)),
+        p99_read_latency=dt * (_p99_ticks(hist, int(reads))
+                               if p99 is None else int(p99)),
         refreshes_pb=int(refpb), refreshes_ab=int(refab),
         row_hits=int(hits), row_misses=int(misses),
         energy=energy_proxy(T, makespan, int(reads), int(writes),
@@ -1854,28 +1910,28 @@ def _run_scalar_cell_closed(grid: _Grid, g: int) -> CellResult:
 
 
 # --------------------------------------------------------- jax fast path
-def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
-    """The whole tick loop as one jitted `lax.while_loop`: state lives in
-    jnp int32 arrays, policies run through the same xp-generic
-    `select_batch`, and the arbitration step optionally routes through the
-    Pallas kernel. Integer arithmetic keeps this bit-identical to the
-    numpy backend and the scalar oracle; custom (non-vectorizable) policy
-    registrations are not traceable and must use `backend="batched"`."""
+def _check_jax_guards(grid: _Grid, backend: str = "jax") -> None:
+    """Shared preconditions of the traced backends (jax and mega)."""
     if grid.customs:
         raise ValueError(
-            "backend='jax' supports only the built-in policy classes; "
-            f"custom policies {[p.name for _, p in grid.customs]!r} need "
+            f"backend={backend!r} supports only the built-in policy "
+            "classes; custom policies "
+            f"{[p.name for _, p in grid.customs]!r} need "
             "backend='batched'")
     # jnp runs x32: the clipped-latency sum fits int32 only while
     # reads_per_cell * MAX_LAT_TICKS < 2**31
     if int(grid.n_tot.max()) * MAX_LAT_TICKS >= 2 ** 31:
         raise ValueError(
-            f"backend='jax' accumulates latency sums in int32; "
+            f"backend={backend!r} accumulates latency sums in int32; "
             f"{int(grid.n_tot.max())} requests per cell could overflow — "
             "use backend='batched'")
+
+
+def _jax_arbiter(arbiter: str):
+    """The arbitration callable for the traced tick body: the jnp scoring
+    definitions, or the Pallas arbiter kernel (interpret mode off-TPU)."""
     import jax
     import jax.numpy as jnp
-    from jax import lax
 
     if arbiter == "pallas":
         from repro.kernels.sweep_arbiter import _arbiter_call
@@ -1888,277 +1944,35 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             return arbiter_scores(jnp, t, **kw)
     else:
         raise ValueError(f"unknown jax arbiter {arbiter!r}")
+    return scores
 
-    spec = grid.spec
-    G, B, L, S = grid.G, grid.B, grid.L, grid.S
-    NB, R, NC = grid.NB, grid.R, grid.NC
-    RBC = grid.NR * NB               # banks per channel
-    HI, LO = spec.wbuf_hi, spec.wbuf_lo
-    j32 = lambda x: jnp.asarray(x, jnp.int32)
-    qa = j32(grid.q_arrive.reshape(G * B, L))
-    qr = j32(grid.q_row.reshape(G * B, L))
-    qs = j32(grid.q_sub.reshape(G * B, L))
-    qw = jnp.asarray(grid.q_write.reshape(G * B, L))
-    n_pb = j32(grid.n_per_bank)
-    n_tot = j32(grid.n_tot)
-    total_all = int(grid.n_tot.sum())
-    phase = j32(grid.phase)
-    rank_phase = j32(grid.rank_phase)
-    kind = j32(grid.kind)
-    level_ab = jnp.asarray(grid.level_ab)
-    sarp = jnp.asarray(grid.sarp)
-    hra = jnp.asarray(grid.hra)
-    wrp = jnp.asarray(grid.wrp)
-    urgent_at = j32(grid.urgent_at)
-    budget = j32(grid.budget)
-    REFI, RFC_PB, RFC_AB = j32(grid.REFI), j32(grid.RFC_PB), j32(grid.RFC_AB)
-    HIT, MISS, WR = j32(grid.HIT), j32(grid.MISS), j32(grid.WR)
-    TURN, RTR, SARP_PEN = j32(grid.TURN), j32(grid.RTR), j32(grid.SARP_PEN)
-    arG = jnp.arange(G)
-    flat_gb = (arG[:, None] * B + jnp.arange(B)[None, :])
-    sub_of_col = j32(np.tile(np.arange(S, dtype=np.int32), B))[None, :]
 
-    st = dict(
-        t=jnp.int32(0),
-        bank_free=jnp.zeros((G, B), jnp.int32),
-        ref_until_s=jnp.zeros((G, B * S), jnp.int32),
-        open_row_s=jnp.full((G, B * S), -1, jnp.int32),
-        open_sub=jnp.full((G, B), -1, jnp.int32),
-        ctr=jnp.zeros((G, B), jnp.int32),
-        issued=jnp.zeros((G, B), jnp.int32),
-        n_arrived=jnp.zeros((G, B), jnp.int32),
-        n_served=jnp.zeros((G, B), jnp.int32),
-        rr=jnp.zeros(G, jnp.int32),
-        ab_rr=jnp.zeros(G, jnp.int32),
-        wpend=jnp.zeros(G, jnp.int32),
-        drain=jnp.zeros(G, bool),
-        last_op=jnp.zeros((G, NC), bool),
-        last_rank=jnp.full((G, NC), -1, jnp.int32),
-        ab_pending=jnp.zeros((G, R), jnp.int32),
-        rank_drain=jnp.zeros((G, R), bool),
-        next_arrive=j32(grid.q_arrive[:, :, 0]),
-        next_w=jnp.asarray(grid.q_write[:, :, 0]),
-        h_arr=j32(grid.q_arrive[:, :, 0]),
-        h_row=j32(grid.q_row[:, :, 0]),
-        h_sub=j32(grid.q_sub[:, :, 0]),
-        h_w=jnp.asarray(grid.q_write[:, :, 0]),
-        reads=jnp.zeros(G, jnp.int32),
-        writes=jnp.zeros(G, jnp.int32),
-        hits=jnp.zeros(G, jnp.int32),
-        misses=jnp.zeros(G, jnp.int32),
-        refpb=jnp.zeros(G, jnp.int32),
-        refab=jnp.zeros(G, jnp.int32),
-        lat_sum=jnp.zeros(G, jnp.int32),     # exact: clipped lats, guarded
-        hist=jnp.zeros((G, MAX_LAT_TICKS + 1), jnp.int32),
-        maxlag=jnp.zeros(G, jnp.int32),
-        last_done=jnp.zeros(G, jnp.int32),
-    )
+def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
+    """The whole tick loop as one jitted `lax.while_loop`: state lives in
+    jnp int32 arrays, policies run through the same xp-generic
+    `select_batch`, and the arbitration step optionally routes through the
+    Pallas kernel. The traced tick body itself lives in `sweep.jaxbody`
+    and is shared verbatim with the fused Pallas megakernel. Integer
+    arithmetic keeps this bit-identical to the numpy backend and the
+    scalar oracle; custom (non-vectorizable) policy registrations are not
+    traceable and must use `backend="batched"`."""
+    _check_jax_guards(grid)
+    import jax
+    from jax import lax
 
-    def cond(s):
-        return ((s["t"] < grid.horizon)
-                & (s["n_served"].sum() < total_all))
+    from repro.core.sweep import jaxbody
 
-    def body(s):
-        t = s["t"]
+    scores = _jax_arbiter(arbiter)
+    cfg = jaxbody.open_cfg(grid)
+    cst = jaxbody.open_consts(grid)
+    st = jaxbody.open_state0(cfg, cst)
 
-        # ---- A: arrivals
-        def acond(a):
-            return (a["next_arrive"] <= t).any()
+    def run(c, s0):
+        return lax.while_loop(
+            lambda s: jaxbody.open_cond(c, s),
+            lambda s: jaxbody.open_body(cfg, c, scores, s), s0)
 
-        def abody(a):
-            can = a["next_arrive"] <= t
-            n_arrived = a["n_arrived"] + can
-            sl = jnp.minimum(n_arrived, L - 1)
-            na = qa[flat_gb, sl]
-            exhausted = n_arrived >= n_pb
-            return dict(
-                n_arrived=n_arrived,
-                wpend=a["wpend"] + (can & a["next_w"]).sum(axis=1),
-                next_arrive=jnp.where(
-                    can, jnp.where(exhausted, _PAD_ARRIVE, na),
-                    a["next_arrive"]),
-                next_w=jnp.where(can, qw[flat_gb, sl], a["next_w"]))
-
-        sub = lax.while_loop(acond, abody, dict(
-            n_arrived=s["n_arrived"], wpend=s["wpend"],
-            next_arrive=s["next_arrive"], next_w=s["next_w"]))
-        n_arrived, wpend = sub["n_arrived"], sub["wpend"]
-        drain = s["drain"] | (wpend >= HI)
-        n_served = s["n_served"]
-        active = n_served.sum(axis=1) < n_tot
-
-        # ---- B: per-rank refresh debt (staggered tREFI/R apart)
-        acc = ((active & level_ab)[:, None] & (t > rank_phase)
-               & ((t - rank_phase) % REFI[:, None] == 0))
-        ab_pending = s["ab_pending"] + acc
-        rank_drain = s["rank_drain"] | acc
-
-        # ---- C: decisions
-        due = jnp.where(t >= phase, (t - phase) // REFI[:, None] + 1, 0)
-        issued = s["issued"]
-        lag = due - issued
-        bank_free, ref_until_s = s["bank_free"], s["ref_until_s"]
-        ready = (ref_until_s.reshape(G, B, S) <= t).all(axis=2)
-        idle = bank_free <= t
-        demand = n_arrived - n_served
-        picks, rr = select_batch(
-            jnp, kind=jnp.where(active, kind, KIND_IDEAL), lag=lag,
-            ready=ready, idle=idle, demand=demand, write_window=drain,
-            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"],
-            nb=NB)
-
-        quiet_r = (idle.reshape(G, R, NB).all(axis=2)
-                   & ready.reshape(G, R, NB).all(axis=2))
-        start_ab_r = ((active & (kind == KIND_AB))[:, None]
-                      & (ab_pending > 0) & quiet_r)
-        # staggered_ab: strict rank round-robin, channel-overlap-free
-        # (grid.has_stag is static at trace time — grids without the
-        # policy keep this block out of the jitted graph entirely)
-        if grid.has_stag:
-            idx = s["ab_rr"] % R
-            chan_ready = ready.reshape(G, NC, RBC).all(axis=2)
-            st_elig = (active & (kind == KIND_STAG)
-                       & (ab_pending[arG, idx] > 0) & quiet_r[arG, idx]
-                       & chan_ready[arG, idx // grid.NR])
-            start_ab_r = start_ab_r.at[arG, idx].set(
-                start_ab_r[arG, idx] | st_elig)
-            ab_rr = s["ab_rr"] + st_elig
-        else:
-            ab_rr = s["ab_rr"]
-        ctr = s["ctr"]
-        open_row_s, open_sub = s["open_row_s"], s["open_sub"]
-        sarp_c = sarp[:, None]
-
-        # SARP marks (and closes) only the target subarray ctr % S; a
-        # non-SARP refresh occupies every subarray of the bank
-        m = jnp.repeat(start_ab_r, NB, axis=1)
-        new_sub = ctr % S
-        mark = (jnp.repeat(m, S, axis=1)
-                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
-                            == sub_of_col, True))
-        ref_until_s = jnp.where(mark, (t + RFC_AB)[:, None], ref_until_s)
-        open_row_s = jnp.where(mark, -1, open_row_s)
-        ctr = ctr + (m & sarp_c)
-        ab_pending = ab_pending - start_ab_r
-        rank_drain = jnp.where(start_ab_r, ab_pending > 0, rank_drain)
-        refab = s["refab"] + start_ab_r.sum(axis=1)
-
-        new_sub = ctr % S
-        start = jnp.maximum(t, bank_free)
-        if grid.has_hra:
-            # HiRA hidden row activation: refresh a subarray the in-flight
-            # access is NOT using starting at t (static at trace time —
-            # grids without the trait keep this out of the jitted graph)
-            start = jnp.where(hra[:, None] & (new_sub != open_sub), t,
-                              start)
-        mark = (jnp.repeat(picks, S, axis=1)
-                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
-                            == sub_of_col, True))
-        ref_until_s = jnp.where(
-            mark, jnp.repeat(start + RFC_PB[:, None], S, axis=1),
-            ref_until_s)
-        open_row_s = jnp.where(mark, -1, open_row_s)
-        ctr = ctr + picks
-        issued = issued + picks
-        refpb = s["refpb"] + picks.sum(axis=1)
-        maxlag = jnp.maximum(
-            s["maxlag"],
-            jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
-
-        # ---- D: arbitration + serve, one start per channel (scores —
-        # incl. the drain flag — snapshotted before any serve; the head
-        # request's own subarray's state is gathered from [G, B*S] planes)
-        ru3 = ref_until_s.reshape(G, B, S)
-        head_ru = jnp.take_along_axis(
-            ru3, s["h_sub"][:, :, None], axis=2)[:, :, 0]
-        head_or = jnp.take_along_axis(
-            open_row_s.reshape(G, B, S), s["h_sub"][:, :, None],
-            axis=2)[:, :, 0]
-        bank_mid = (ru3 > t).any(axis=2)
-        score = scores(t, has_req=demand > 0, head_row=s["h_row"],
-                       head_arrive=s["h_arr"], head_is_write=s["h_w"],
-                       bank_free=bank_free, head_ref_until=head_ru,
-                       bank_mid_ref=bank_mid, open_row=head_or,
-                       drain=drain,
-                       rank_drain=jnp.repeat(rank_drain, NB, axis=1))
-        h_arr_s, h_row_s = s["h_arr"], s["h_row"]
-        h_sub_s, h_w_s = s["h_sub"], s["h_w"]
-        last_op, last_rank = s["last_op"], s["last_rank"]
-        reads, writes = s["reads"], s["writes"]
-        hits_s, misses_s = s["hits"], s["misses"]
-        lat_sum, hist = s["lat_sum"], s["hist"]
-        last_done = s["last_done"]
-        for ch in range(NC):
-            sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
-            bs = jnp.argmax(sc_ch, axis=1) + ch * RBC
-            ok = score[arG, bs] >= 0
-            row, sub_ = h_row_s[arG, bs], h_sub_s[arG, bs]
-            arr, isw = h_arr_s[arG, bs], h_w_s[arG, bs]
-            hit = row == head_or[arG, bs]
-            gr_b = bs // NB
-            lr = last_rank[:, ch]
-            lat = (jnp.where(hit, HIT, MISS)
-                   + jnp.where(sarp & bank_mid[arG, bs],
-                               SARP_PEN, 0)
-                   + jnp.where(isw != last_op[:, ch], TURN, 0)
-                   + jnp.where((lr >= 0) & (lr != gr_b), RTR, 0))
-            done = t + lat
-            bank_free = bank_free.at[arG, bs].set(
-                jnp.where(ok, done + jnp.where(isw, WR, 0),
-                          bank_free[arG, bs]))
-            last_op = last_op.at[:, ch].set(
-                jnp.where(ok, isw, last_op[:, ch]))
-            last_rank = last_rank.at[:, ch].set(
-                jnp.where(ok, gr_b, last_rank[:, ch]))
-            gsub = bs * S + sub_
-            open_row_s = open_row_s.at[arG, gsub].set(
-                jnp.where(ok, row, open_row_s[arG, gsub]))
-            open_sub = open_sub.at[arG, bs].set(
-                jnp.where(ok, sub_, open_sub[arG, bs]))
-            n_served = n_served.at[arG, bs].add(ok)
-            served_w = ok & isw
-            wpend = wpend - served_w
-            drain = drain & ~(served_w & (wpend <= LO))
-            rmask = ok & ~isw
-            lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
-            hist = hist.at[arG, lrec].add(rmask)
-            lat_sum = lat_sum + jnp.where(rmask, lrec, 0)
-            reads = reads + rmask
-            writes = writes + served_w
-            hits_s = hits_s + (ok & hit)
-            misses_s = misses_s + (ok & ~hit)
-            last_done = jnp.where(ok, jnp.maximum(last_done, done),
-                                  last_done)
-            flat = arG * B + bs
-            sl = jnp.minimum(n_served[arG, bs], L - 1)
-            h_arr_s = h_arr_s.at[arG, bs].set(
-                jnp.where(ok, qa[flat, sl], h_arr_s[arG, bs]))
-            h_row_s = h_row_s.at[arG, bs].set(
-                jnp.where(ok, qr[flat, sl], h_row_s[arG, bs]))
-            h_sub_s = h_sub_s.at[arG, bs].set(
-                jnp.where(ok, qs[flat, sl], h_sub_s[arG, bs]))
-            h_w_s = h_w_s.at[arG, bs].set(
-                jnp.where(ok, qw[flat, sl], h_w_s[arG, bs]))
-
-        return dict(
-            t=t + 1, bank_free=bank_free, ref_until_s=ref_until_s,
-            open_row_s=open_row_s, open_sub=open_sub,
-            ctr=ctr, issued=issued, n_arrived=n_arrived,
-            n_served=n_served, rr=rr, ab_rr=ab_rr, wpend=wpend,
-            drain=drain, last_op=last_op, last_rank=last_rank,
-            ab_pending=ab_pending, rank_drain=rank_drain,
-            next_arrive=sub["next_arrive"], next_w=sub["next_w"],
-            h_arr=h_arr_s, h_row=h_row_s, h_sub=h_sub_s, h_w=h_w_s,
-            reads=reads, writes=writes,
-            hits=hits_s, misses=misses_s,
-            refpb=refpb, refab=refab,
-            lat_sum=lat_sum,
-            hist=hist, maxlag=maxlag,
-            last_done=last_done,
-        )
-
-    run = jax.jit(lambda s0: lax.while_loop(cond, body, s0))
-    out = jax.device_get(run(st))
+    out = jax.device_get(jax.jit(run)(cst, st))
     finished = out["n_served"].sum(axis=1) >= grid.n_tot
     return [_finalize(grid, g, reads=out["reads"][g],
                       writes=out["writes"][g], hits=out["hits"][g],
@@ -2172,341 +1986,27 @@ def _run_jax(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
 # ------------------------------------------------- jax fast path (closed)
 def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
     """Closed-loop mode as one jitted `lax.while_loop`: the open-loop jax
-    backend plus per-core MLP-window state and core-fed ring bank queues.
-    Same all-integer contract, bit-identical to numpy and the scalar
-    closed oracle."""
-    if grid.customs:
-        raise ValueError(
-            "backend='jax' supports only the built-in policy classes; "
-            f"custom policies {[p.name for _, p in grid.customs]!r} need "
-            "backend='batched'")
-    if int(grid.n_tot.max()) * MAX_LAT_TICKS >= 2 ** 31:
-        raise ValueError(
-            f"backend='jax' accumulates latency sums in int32; "
-            f"{int(grid.n_tot.max())} requests per cell could overflow — "
-            "use backend='batched'")
+    backend plus per-core MLP-window state and core-fed ring bank queues
+    (the traced body in `sweep.jaxbody`, shared verbatim with the fused
+    Pallas megakernel). Same all-integer contract, bit-identical to numpy
+    and the scalar closed oracle."""
+    _check_jax_guards(grid)
     import jax
-    import jax.numpy as jnp
     from jax import lax
 
-    if arbiter == "pallas":
-        from repro.kernels.sweep_arbiter import _arbiter_call
-        interp = jax.default_backend() != "tpu"
+    from repro.core.sweep import jaxbody
 
-        def scores(t, **kw):
-            return _arbiter_call(t, **kw, interpret=interp)
-    elif arbiter == "jnp":
-        def scores(t, **kw):
-            return arbiter_scores(jnp, t, **kw)
-    else:
-        raise ValueError(f"unknown jax arbiter {arbiter!r}")
+    scores = _jax_arbiter(arbiter)
+    cfg = jaxbody.closed_cfg(grid)
+    cst = jaxbody.closed_consts(grid)
+    st = jaxbody.closed_state0(cfg, cst)
 
-    spec = grid.spec
-    G, B, S = grid.G, grid.B, grid.S
-    NB, R, NC = grid.NB, grid.R, grid.NC
-    RBC = grid.NR * NB               # banks per channel
-    C, N, K = grid.C, grid.N, grid.K
-    LQ = grid.LQ
-    QM = LQ - 1
-    HI, LO, CAP = spec.wbuf_hi, spec.wbuf_lo, spec.wbuf_cap
-    j32 = lambda x: jnp.asarray(x, jnp.int32)
-    sw = jnp.asarray(grid.s_write.reshape(G * C, N))
-    sb = j32(grid.s_bank.reshape(G * C, N))
-    sr = j32(grid.s_row.reshape(G * C, N))
-    ssub = j32(grid.s_sub.reshape(G * C, N))
-    sth = j32(grid.s_think.reshape(G * C, N))
-    n_req = j32(grid.n_req_c)
-    mlp_col = j32(grid.mlp_g)[:, None]
-    phase = j32(grid.phase)
-    rank_phase = j32(grid.rank_phase)
-    kind = j32(grid.kind)
-    level_ab = jnp.asarray(grid.level_ab)
-    sarp = jnp.asarray(grid.sarp)
-    hra = jnp.asarray(grid.hra)
-    wrp = jnp.asarray(grid.wrp)
-    urgent_at = j32(grid.urgent_at)
-    budget = j32(grid.budget)
-    REFI, RFC_PB, RFC_AB = j32(grid.REFI), j32(grid.RFC_PB), j32(grid.RFC_AB)
-    HIT, MISS, WR = j32(grid.HIT), j32(grid.MISS), j32(grid.WR)
-    TURN, RTR, SARP_PEN = j32(grid.TURN), j32(grid.RTR), j32(grid.SARP_PEN)
-    arG = jnp.arange(G)
-    arB = jnp.arange(B)
-    arC = jnp.arange(C)
-    flat_gc = arG[:, None] * C + arC[None, :]
-    flat_gb = arG[:, None] * B + arB[None, :]
-    sub_of_col = j32(np.tile(np.arange(S, dtype=np.int32), B))[None, :]
-    OOB = G * B * LQ                       # scatter target for non-issues
+    def run(c, s0):
+        return lax.while_loop(
+            lambda s: jaxbody.closed_cond(c, s),
+            lambda s: jaxbody.closed_body(cfg, c, scores, s), s0)
 
-    remaining0 = grid.n_req_c.astype(np.int32)
-    st = dict(
-        t=jnp.int32(0),
-        # ring bank queues (flat [G*B*LQ] so appends are one scatter)
-        qa=jnp.zeros(G * B * LQ, jnp.int32),
-        qr=jnp.zeros(G * B * LQ, jnp.int32),
-        qs=jnp.zeros(G * B * LQ, jnp.int32),
-        qw=jnp.zeros(G * B * LQ, bool),
-        qc=jnp.zeros(G * B * LQ, jnp.int32),
-        q_head=jnp.zeros((G, B), jnp.int32),
-        q_tail=jnp.zeros((G, B), jnp.int32),
-        # core state
-        next_idx=jnp.zeros((G, C), jnp.int32),
-        next_issue=jnp.zeros((G, C), jnp.int32),
-        out_reads=jnp.zeros((G, C), jnp.int32),
-        remaining=j32(remaining0),
-        finish=j32(np.where(remaining0 == 0, 0, -1)),
-        comp_t=jnp.full((G, C, K), _PAD_ARRIVE, jnp.int32),
-        # machine state
-        bank_free=jnp.zeros((G, B), jnp.int32),
-        ref_until_s=jnp.zeros((G, B * S), jnp.int32),
-        open_row_s=jnp.full((G, B * S), -1, jnp.int32),
-        open_sub=jnp.full((G, B), -1, jnp.int32),
-        ctr=jnp.zeros((G, B), jnp.int32),
-        issued=jnp.zeros((G, B), jnp.int32),
-        rr=jnp.zeros(G, jnp.int32),
-        ab_rr=jnp.zeros(G, jnp.int32),
-        wpend=jnp.zeros(G, jnp.int32),
-        drain=jnp.zeros(G, bool),
-        last_op=jnp.zeros((G, NC), bool),
-        last_rank=jnp.full((G, NC), -1, jnp.int32),
-        ab_pending=jnp.zeros((G, R), jnp.int32),
-        rank_drain=jnp.zeros((G, R), bool),
-        # stats
-        reads=jnp.zeros(G, jnp.int32),
-        writes=jnp.zeros(G, jnp.int32),
-        hits=jnp.zeros(G, jnp.int32),
-        misses=jnp.zeros(G, jnp.int32),
-        refpb=jnp.zeros(G, jnp.int32),
-        refab=jnp.zeros(G, jnp.int32),
-        lat_sum=jnp.zeros(G, jnp.int32),
-        hist=jnp.zeros((G, MAX_LAT_TICKS + 1), jnp.int32),
-        maxlag=jnp.zeros(G, jnp.int32),
-        last_done=jnp.zeros(G, jnp.int32),
-    )
-
-    def cond(s):
-        return (s["t"] < grid.horizon) & (s["remaining"].sum() > 0)
-
-    def body(s):
-        t = s["t"]
-
-        # ---- 0: outstanding-read completions
-        exp = s["comp_t"] <= t
-        n_exp = exp.sum(axis=2).astype(jnp.int32)
-        out_reads = s["out_reads"] - n_exp
-        remaining = s["remaining"] - n_exp
-        comp_t = jnp.where(exp, _PAD_ARRIVE, s["comp_t"])
-
-        # ---- 1: core issue (at most one per core per tick, core order)
-        next_idx = s["next_idx"]
-        sl = jnp.minimum(next_idx, N - 1)
-        head_w = sw[flat_gc, sl]
-        can = (next_idx < n_req) & (s["next_issue"] <= t)
-        want_w = can & head_w
-        want_r = can & ~head_w & (out_reads < mlp_col)
-        rank_w = jnp.cumsum(want_w, axis=1) - want_w
-        ok_w = want_w & (rank_w < (CAP - s["wpend"])[:, None])
-        issue = ok_w | want_r
-        hb = sb[flat_gc, sl]
-        oh = issue[:, :, None] & (hb[:, :, None] == arB[None, None, :])
-        pref = jnp.cumsum(oh, axis=1) - oh
-        pos_in = jnp.take_along_axis(pref, hb[:, :, None], axis=2)[:, :, 0]
-        tail_b = jnp.take_along_axis(s["q_tail"], hb, axis=1)
-        slot = (tail_b + pos_in) & QM
-        tgt = jnp.where(issue, (arG[:, None] * B + hb) * LQ + slot, OOB)
-        tgtf = tgt.ravel()
-        qa = s["qa"].at[tgtf].set(jnp.full(G * C, t, jnp.int32),
-                                  mode="drop")
-        qr = s["qr"].at[tgtf].set(sr[flat_gc, sl].ravel(), mode="drop")
-        qs_ = s["qs"].at[tgtf].set(ssub[flat_gc, sl].ravel(), mode="drop")
-        qw = s["qw"].at[tgtf].set(head_w.ravel(), mode="drop")
-        qc = s["qc"].at[tgtf].set(jnp.broadcast_to(
-            arC[None, :], (G, C)).ravel(), mode="drop")
-        q_tail = s["q_tail"] + oh.sum(axis=1)
-        wpend = s["wpend"] + ok_w.sum(axis=1)
-        out_reads = out_reads + want_r
-        remaining = remaining - ok_w          # writes retire at issue
-        next_issue = jnp.where(issue, t + sth[flat_gc, sl],
-                               s["next_issue"])
-        next_idx = next_idx + issue
-        finish = jnp.where((remaining == 0) & (s["finish"] < 0), t,
-                           s["finish"])
-        active = (remaining > 0).any(axis=1)
-
-        # ---- 2: write-drain watermark
-        drain = s["drain"] | (wpend >= HI)
-
-        # ---- 3: per-rank refresh debt (staggered tREFI/R apart)
-        acc = ((active & level_ab)[:, None] & (t > rank_phase)
-               & ((t - rank_phase) % REFI[:, None] == 0))
-        ab_pending = s["ab_pending"] + acc
-        rank_drain = s["rank_drain"] | acc
-
-        # ---- 4: decisions
-        due = jnp.where(t >= phase, (t - phase) // REFI[:, None] + 1, 0)
-        issued = s["issued"]
-        lag = due - issued
-        bank_free, ref_until_s = s["bank_free"], s["ref_until_s"]
-        ready = (ref_until_s.reshape(G, B, S) <= t).all(axis=2)
-        idle = bank_free <= t
-        demand = q_tail - s["q_head"]
-        picks, rr = select_batch(
-            jnp, kind=jnp.where(active, kind, KIND_IDEAL), lag=lag,
-            ready=ready, idle=idle, demand=demand, write_window=drain,
-            budget=budget, wrp=wrp, urgent_at=urgent_at, rr=s["rr"],
-            nb=NB)
-
-        quiet_r = (idle.reshape(G, R, NB).all(axis=2)
-                   & ready.reshape(G, R, NB).all(axis=2))
-        start_ab_r = ((active & (kind == KIND_AB))[:, None]
-                      & (ab_pending > 0) & quiet_r)
-        # staggered_ab: strict rank round-robin, channel-overlap-free
-        # (grid.has_stag is static at trace time — grids without the
-        # policy keep this block out of the jitted graph entirely)
-        if grid.has_stag:
-            idx = s["ab_rr"] % R
-            chan_ready = ready.reshape(G, NC, RBC).all(axis=2)
-            st_elig = (active & (kind == KIND_STAG)
-                       & (ab_pending[arG, idx] > 0) & quiet_r[arG, idx]
-                       & chan_ready[arG, idx // grid.NR])
-            start_ab_r = start_ab_r.at[arG, idx].set(
-                start_ab_r[arG, idx] | st_elig)
-            ab_rr = s["ab_rr"] + st_elig
-        else:
-            ab_rr = s["ab_rr"]
-        ctr = s["ctr"]
-        open_row_s, open_sub = s["open_row_s"], s["open_sub"]
-        sarp_c = sarp[:, None]
-
-        # SARP marks (and closes) only the target subarray ctr % S; a
-        # non-SARP refresh occupies every subarray of the bank
-        m = jnp.repeat(start_ab_r, NB, axis=1)
-        new_sub = ctr % S
-        mark = (jnp.repeat(m, S, axis=1)
-                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
-                            == sub_of_col, True))
-        ref_until_s = jnp.where(mark, (t + RFC_AB)[:, None], ref_until_s)
-        open_row_s = jnp.where(mark, -1, open_row_s)
-        ctr = ctr + (m & sarp_c)
-        ab_pending = ab_pending - start_ab_r
-        rank_drain = jnp.where(start_ab_r, ab_pending > 0, rank_drain)
-        refab = s["refab"] + start_ab_r.sum(axis=1)
-
-        new_sub = ctr % S
-        start = jnp.maximum(t, bank_free)
-        if grid.has_hra:
-            # HiRA hidden row activation: refresh a subarray the in-flight
-            # access is NOT using starting at t (static at trace time —
-            # grids without the trait keep this out of the jitted graph)
-            start = jnp.where(hra[:, None] & (new_sub != open_sub), t,
-                              start)
-        mark = (jnp.repeat(picks, S, axis=1)
-                & jnp.where(sarp_c, jnp.repeat(new_sub, S, axis=1)
-                            == sub_of_col, True))
-        ref_until_s = jnp.where(
-            mark, jnp.repeat(start + RFC_PB[:, None], S, axis=1),
-            ref_until_s)
-        open_row_s = jnp.where(mark, -1, open_row_s)
-        ctr = ctr + picks
-        issued = issued + picks
-        refpb = s["refpb"] + picks.sum(axis=1)
-        maxlag = jnp.maximum(
-            s["maxlag"],
-            jnp.where(picks, jnp.abs(due - issued), 0).max(axis=1))
-
-        # ---- 5: occupancy-aware arbitration + serve, one start per
-        # channel (scores — incl. drain — snapshotted before any serve)
-        hslot = s["q_head"] & QM
-        flat_h = flat_gb * LQ + hslot
-        h_row, h_sub = qr[flat_h], qs_[flat_h]
-        h_arr, h_w = qa[flat_h], qw[flat_h]
-        has_req = (demand > 0) & active[:, None]
-        ru3 = ref_until_s.reshape(G, B, S)
-        head_ru = jnp.take_along_axis(
-            ru3, h_sub[:, :, None], axis=2)[:, :, 0]
-        head_or = jnp.take_along_axis(
-            open_row_s.reshape(G, B, S), h_sub[:, :, None],
-            axis=2)[:, :, 0]
-        bank_mid = (ru3 > t).any(axis=2)
-        score = scores(t, has_req=has_req, head_row=h_row,
-                       head_arrive=h_arr, head_is_write=h_w,
-                       bank_free=bank_free, head_ref_until=head_ru,
-                       bank_mid_ref=bank_mid, open_row=head_or,
-                       drain=drain, occ=demand,
-                       rank_drain=jnp.repeat(rank_drain, NB, axis=1))
-        last_op, last_rank = s["last_op"], s["last_rank"]
-        q_head = s["q_head"]
-        reads, writes = s["reads"], s["writes"]
-        hits_s, misses_s = s["hits"], s["misses"]
-        lat_sum, hist = s["lat_sum"], s["hist"]
-        last_done = s["last_done"]
-        for ch in range(NC):
-            sc_ch = score[:, ch * RBC:(ch + 1) * RBC]
-            bs = jnp.argmax(sc_ch, axis=1) + ch * RBC
-            ok = score[arG, bs] >= 0
-            row, sub_ = h_row[arG, bs], h_sub[arG, bs]
-            arr, isw = h_arr[arG, bs], h_w[arG, bs]
-            core = qc[flat_gb * LQ + hslot][arG, bs]
-            hit = row == head_or[arG, bs]
-            gr_b = bs // NB
-            lr = last_rank[:, ch]
-            lat = (jnp.where(hit, HIT, MISS)
-                   + jnp.where(sarp & bank_mid[arG, bs],
-                               SARP_PEN, 0)
-                   + jnp.where(isw != last_op[:, ch], TURN, 0)
-                   + jnp.where((lr >= 0) & (lr != gr_b), RTR, 0))
-            done = t + lat
-            bank_free = bank_free.at[arG, bs].set(
-                jnp.where(ok, done + jnp.where(isw, WR, 0),
-                          bank_free[arG, bs]))
-            last_op = last_op.at[:, ch].set(
-                jnp.where(ok, isw, last_op[:, ch]))
-            last_rank = last_rank.at[:, ch].set(
-                jnp.where(ok, gr_b, last_rank[:, ch]))
-            gsub = bs * S + sub_
-            open_row_s = open_row_s.at[arG, gsub].set(
-                jnp.where(ok, row, open_row_s[arG, gsub]))
-            open_sub = open_sub.at[arG, bs].set(
-                jnp.where(ok, sub_, open_sub[arG, bs]))
-            q_head = q_head.at[arG, bs].add(ok)
-            served_w = ok & isw
-            wpend = wpend - served_w
-            drain = drain & ~(served_w & (wpend <= LO))
-            rmask = ok & ~isw
-            lrec = jnp.minimum(done - arr, MAX_LAT_TICKS)
-            hist = hist.at[arG, lrec].add(rmask)
-            lat_sum = lat_sum + jnp.where(rmask, lrec, 0)
-            reads = reads + rmask
-            writes = writes + served_w
-            hits_s = hits_s + (ok & hit)
-            misses_s = misses_s + (ok & ~hit)
-            last_done = jnp.where(ok, jnp.maximum(last_done, done),
-                                  last_done)
-            # reads: park the data return in the core's MLP window slot
-            free_k = jnp.argmax(comp_t[arG, core] == _PAD_ARRIVE, axis=1)
-            comp_t = comp_t.at[arG, core, free_k].set(
-                jnp.where(rmask, done, comp_t[arG, core, free_k]))
-
-        return dict(
-            t=t + 1, qa=qa, qr=qr, qs=qs_, qw=qw, qc=qc,
-            q_head=q_head, q_tail=q_tail,
-            next_idx=next_idx, next_issue=next_issue, out_reads=out_reads,
-            remaining=remaining, finish=finish, comp_t=comp_t,
-            bank_free=bank_free, ref_until_s=ref_until_s,
-            open_row_s=open_row_s, open_sub=open_sub, ctr=ctr,
-            issued=issued,
-            rr=rr, ab_rr=ab_rr, wpend=wpend, drain=drain, last_op=last_op,
-            last_rank=last_rank,
-            ab_pending=ab_pending, rank_drain=rank_drain,
-            reads=reads, writes=writes,
-            hits=hits_s, misses=misses_s,
-            refpb=refpb, refab=refab,
-            lat_sum=lat_sum,
-            hist=hist, maxlag=maxlag,
-            last_done=last_done,
-        )
-
-    run = jax.jit(lambda s0: lax.while_loop(cond, body, s0))
-    out = jax.device_get(run(st))
+    out = jax.device_get(jax.jit(run)(cst, st))
     finished = (out["remaining"] <= 0).all(axis=1)
     t_end = int(out["t"])
     fin = np.where(out["finish"] < 0, t_end, out["finish"])
@@ -2520,16 +2020,48 @@ def _run_jax_closed(grid: _Grid, arbiter: str = "jnp") -> list[CellResult]:
             for g in range(grid.G)]
 
 
+# ----------------------------------------------------- megakernel backend
+def _run_mega(grid: _Grid, n_shards: int = 1) -> list[CellResult]:
+    """The fused Pallas tick-loop megakernel
+    (`repro.kernels.sweep_megakernel`): the same traced body as the jax
+    backend (`sweep.jaxbody`), but run to completion *inside* a
+    cell-tiled kernel — per-scenario streams gathered via scalar
+    prefetch, scenario-pure tiles early-exiting independently, stats
+    reduced in-kernel (no [G, 4096] histogram round-trip), and the tile
+    axis optionally sharded across devices (`n_shards`). Bit-identical
+    to every other backend by construction."""
+    _check_jax_guards(grid, backend="mega")
+    from repro.kernels.sweep_megakernel import run_mega
+
+    out = run_mega(grid, n_shards=n_shards)
+    cf = out.get("core_finish")
+    return [_finalize(grid, g, reads=out["reads"][g],
+                      writes=out["writes"][g], hits=out["hits"][g],
+                      misses=out["misses"][g], refpb=out["refpb"][g],
+                      refab=out["refab"][g], lat_sum=out["lat_sum"][g],
+                      hist=None, maxlag=out["maxlag"][g],
+                      last_done=out["last_done"][g],
+                      finished=out["finished"][g], p99=out["p99"][g],
+                      core_finish=None if cf is None else cf[g])
+            for g in range(grid.G)]
+
+
 # ------------------------------------------------------------------ entry
 def sweep(spec: SweepSpec, backend: str = "batched",
           arbiter: Optional[str] = None, *,
-          record_commands: bool = False) -> SweepResult:
+          record_commands: bool = False, n_shards: int = 1) -> SweepResult:
     """Run the whole grid.
 
     backend="batched" : stacked-numpy lock-step (default; supports custom
                         policy registrations via per-cell fallback),
     backend="jax"     : the whole tick loop jitted (`lax.while_loop`),
-                        fastest; built-in policy classes only,
+                        built-in policy classes only,
+    backend="mega"    : the fused Pallas tick-loop megakernel
+                        (`repro.kernels.sweep_megakernel`) — the same
+                        traced body as "jax" run to completion inside a
+                        cell-tiled kernel, fastest; `n_shards` > 1
+                        additionally shards the cell-tile axis across
+                        devices with `shard_map`,
     backend="scalar"  : plain-Python per-cell reference oracle.
 
     `arbiter` selects the availability/arbitration step implementation:
@@ -2540,19 +2072,42 @@ def sweep(spec: SweepSpec, backend: str = "batched",
     cells additionally carry `core_finish`, making
     `CellResult.weighted_speedup_vs` (the paper's metric) available.
 
-    `record_commands=True` (batched backend, closed mode only)
+    `record_commands=True` (batched or mega backend, closed mode only)
     additionally emits a per-cell DFI-style command trace, retrievable
     via `SweepResult.commands_for(policy, scenario, density)` — the same
     `repro.core.commands.CmdTrace` `DramSim.run_ticks` emits, command
-    for command (tick-contract section 7).
+    for command (tick-contract section 7). The megakernel does not emit
+    in-kernel: it reruns the grid on the emitting batched backend and
+    *reconciles* — every CellResult must match bit-for-bit, or the
+    sweep raises.
     """
-    grid = _Grid(spec)
-    closed = grid.closed
-    if record_commands and not (backend == "batched" and closed):
+    closed = spec.mode == "closed"
+    if record_commands and not (backend in ("batched", "mega") and closed):
         raise ValueError(
-            "record_commands=True needs backend='batched' and "
+            "record_commands=True needs backend='batched' or 'mega' and "
             "mode='closed' (the jitted/scalar backends do not emit; use "
             "DramSim.run_ticks(record_commands=True) per cell instead)")
+    if n_shards != 1 and backend != "mega":
+        raise ValueError(
+            f"n_shards is a megakernel knob; backend={backend!r} runs on "
+            "one device (use backend='mega')")
+    if backend == "mega":
+        grid = _Grid(spec, stack_streams=False)
+        cells = _run_mega(grid, n_shards=n_shards)
+        res = SweepResult(spec, cells, backend)
+        if record_commands:
+            ref = sweep(spec, backend="batched", record_commands=True)
+            bad = [i for i, (a, b) in enumerate(zip(cells, ref.cells))
+                   if a != b]
+            if bad:
+                raise RuntimeError(
+                    "megakernel results fail to reconcile with the "
+                    "command-emitting batched backend at cells "
+                    f"{bad[:5]}{'...' if len(bad) > 5 else ''} of "
+                    f"{len(cells)}")
+            res.commands = ref.commands
+        return res
+    grid = _Grid(spec)
     traces = None
     if backend == "batched":
         if closed:

@@ -1,0 +1,18 @@
+"""Bad shared tick-state module: the fused body's return dict drops a
+plane that `closed_state0` initialises (PL505) — the write-buffer
+occupancy would ride through every tick frozen at zero."""
+import jax.numpy as jnp
+
+
+def closed_state0(cfg, cst):
+    z = jnp.zeros((cfg.G,), jnp.int32)
+    return dict(t=z, remaining=cst["n_req"], finish=z - 1, wbuf=z)
+
+
+def closed_body(cfg, cst, s):
+    t = s["t"] + 1
+    remaining = jnp.maximum(s["remaining"] - 1, 0)
+    finish = jnp.where((remaining == 0) & (s["finish"] < 0), t,
+                       s["finish"])
+    # planted PL505: `wbuf` missing — the plane silently freezes
+    return dict(t=t, remaining=remaining, finish=finish)

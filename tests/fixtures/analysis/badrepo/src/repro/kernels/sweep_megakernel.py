@@ -1,0 +1,34 @@
+"""Bad fused sweep pallas kernel: plane-table drift (PL504) — a stats
+column index redefined locally instead of imported from fields, and a
+packed width hardcoded as a literal in an output shape."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sweep.fields import MEGA_NPARAM, MS_WRITES
+
+MS_READS = 0            # planted PL504a: shadows the fields.py column
+TILE = 64
+
+
+def _mega_kernel(params_ref, stats_ref):
+    p = params_ref[...]
+    reads = p.sum(axis=1)
+    stats_ref[...] = jnp.stack(
+        [reads, reads * 0], axis=1).astype(jnp.int32)
+
+
+def run_mega(params, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows = params.shape[0]
+    kern = functools.partial(_mega_kernel)
+    return pl.pallas_call(
+        kern,
+        grid=(pl.cdiv(rows, TILE),),
+        # planted PL504b: stat width spelled as a literal, not MEGA_NSTAT
+        out_shape=jax.ShapeDtypeStruct((rows, 11), jnp.int32),
+        interpret=interpret,
+    )(params)

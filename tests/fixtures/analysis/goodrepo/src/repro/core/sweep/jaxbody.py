@@ -1,0 +1,17 @@
+"""Good shared tick-state module: the fused body returns every plane
+`closed_state0` initialises (PL505) — no state silently freezes."""
+import jax.numpy as jnp
+
+
+def closed_state0(cfg, cst):
+    z = jnp.zeros((cfg.G,), jnp.int32)
+    return dict(t=z, remaining=cst["n_req"], finish=z - 1, wbuf=z)
+
+
+def closed_body(cfg, cst, s):
+    t = s["t"] + 1
+    remaining = jnp.maximum(s["remaining"] - 1, 0)
+    finish = jnp.where((remaining == 0) & (s["finish"] < 0), t,
+                       s["finish"])
+    wbuf = jnp.minimum(s["wbuf"] + 1, cst["cap"])
+    return dict(t=t, remaining=remaining, finish=finish, wbuf=wbuf)

@@ -32,7 +32,7 @@ BADREPO_RULES = {
     "DT201", "DT202", "DT203", "DT204", "DT205",
     "PP301", "PP302", "PP303",
     "RC401", "RC402", "RC403", "RC404", "RC405", "RC406",
-    "PL501", "PL502", "PL503",
+    "PL501", "PL502", "PL503", "PL504", "PL505",
     "CM601", "CM602",
 }
 
@@ -196,6 +196,40 @@ def test_commands_catches_new_code_mnemonic(tmp_path):
 
     root = _mutated_goodrepo(tmp_path, mutate)
     assert rules_of(root, ["commands"]) == {"CM601"}
+
+
+def test_pallas_lint_catches_megakernel_width_mutation(tmp_path):
+    # pinning the packed stat width to MEGA_NSTAT is the whole point of
+    # PL504: hardcoding it back to a literal must fail
+    def mutate(root):
+        f = root / "src/repro/kernels/sweep_megakernel.py"
+        f.write_text(f.read_text().replace("(rows, MEGA_NSTAT)",
+                                           "(rows, 11)"))
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    assert "PL504" in rules_of(root, ["pallas-lint"])
+
+
+def test_pallas_lint_catches_local_plane_table_mutation(tmp_path):
+    # a local MS_* constant shadowing fields.py must also trip PL504
+    def mutate(root):
+        f = root / "src/repro/kernels/sweep_megakernel.py"
+        f.write_text(f.read_text() + "\nMS_LATSUM = 6\n")
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    assert "PL504" in rules_of(root, ["pallas-lint"])
+
+
+def test_pallas_lint_catches_dropped_state_plane(tmp_path):
+    # PL505's reason to exist: dropping a plane from the fused body's
+    # return dict freezes it with no runtime error anywhere
+    def mutate(root):
+        f = root / "src/repro/core/sweep/jaxbody.py"
+        f.write_text(f.read_text().replace(
+            "finish=finish, wbuf=wbuf)", "finish=finish)"))
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    assert "PL505" in rules_of(root, ["pallas-lint"])
 
 
 def test_registry_catches_sarp_policy_skipping_subarray_matrix(tmp_path):

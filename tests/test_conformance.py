@@ -114,6 +114,13 @@ def test_closed_jax_backend_matches_batched(grid_spec, grid_batched):
     _cells_equal(sweep(grid_spec, "jax"), grid_batched, "jax/batched")
 
 
+def test_closed_mega_backend_matches_batched(grid_spec, grid_batched):
+    """The fused Pallas tick-loop megakernel over the full conformance
+    grid (every registered policy x 4 closed scenarios x 3 densities):
+    bit-identical to the batched oracle, cell for cell."""
+    _cells_equal(sweep(grid_spec, "mega"), grid_batched, "mega/batched")
+
+
 def test_closed_pallas_arbiter_matches_batched(grid_spec, grid_batched):
     _cells_equal(sweep(grid_spec, "batched", arbiter="pallas"),
                  grid_batched, "pallas/batched")
@@ -181,6 +188,7 @@ def test_multirank_smoke_two_ranks():
     batched = sweep(spec, "batched")
     _cells_equal(sweep(spec, "scalar"), batched, "scalar/batched R=2")
     _cells_equal(sweep(spec, "jax"), batched, "jax/batched R=2")
+    _cells_equal(sweep(spec, "mega"), batched, "mega/batched R=2")
     _cells_equal(sweep(spec, "batched", arbiter="pallas"), batched,
                  "pallas/batched R=2")
     wl = make_closed_workload("closed_multirank", GRID_REQS, GRID_SEED)

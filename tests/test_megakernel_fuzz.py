@@ -1,0 +1,178 @@
+"""Randomized differential fuzz for the fused tick-loop megakernel.
+
+Property: for ANY point of the sweep space — policy x scenario x density
+x n_ranks x n_channels x n_subarrays x mode x seed — the megakernel
+backend (`backend="mega"`), the batched numpy oracle, and the per-cell
+`DramSim.run_ticks` reference agree **bit-identically**: every
+`CellResult` stat, the paper's `weighted_speedup_vs` metric, and (closed
+mode) the emitted DFI-style command trace, command for command.
+
+Runs under real `hypothesis` when installed and under the deterministic
+`_hypothesis_shim` otherwise (CI has no hypothesis: the shim is the
+normative fuzzer there). The case count scales with the
+``MEGA_FUZZ_CASES`` env var (default 6 per property; the CI megakernel
+job runs 200).
+
+Edge cases caught while bringing the kernel up are pinned as golden
+fixtures under ``tests/fixtures/megakernel/`` and replayed by
+`test_golden_fixture_cases_stay_bit_identical` — add any future shrunk
+counterexample there.
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback; see _hypothesis_shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.refresh import DramSim, make_closed_workload
+from repro.core.refresh.timing import timing_for_density
+from repro.core.sweep import CellResult, SweepSpec, sweep
+
+N_CASES = int(os.environ.get("MEGA_FUZZ_CASES", "6"))
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "megakernel"
+
+POLICIES = ("ref_ab", "ref_pb", "darp", "dsarp", "sarp_pb", "elastic",
+            "hira", "staggered_ab", "rank_aware_darp", "round_robin")
+CLOSED_SCENARIOS = ("closed_mixed", "closed_read_heavy",
+                    "closed_write_heavy", "closed_multirank",
+                    "closed_subarray_storm")
+OPEN_SCENARIOS = ("mixed", "read_heavy", "streaming",
+                  "write_burst_draining", "bank_camping")
+DENSITIES = (8, 16, 32)
+#: (n_ranks, n_channels, n_subarrays) draws, bounded so repeated shapes
+#: hit the jit cache across cases
+HIERARCHIES = ((1, 1, 1), (2, 1, 1), (1, 2, 1), (1, 1, 4), (2, 2, 4))
+
+
+def _cells_equal(a, b, ctx=""):
+    bad = [(x.policy, x.scenario, x.density_gb, f)
+           for x, y in zip(a.cells, b.cells) if x != y
+           for f in CellResult.__dataclass_fields__
+           if getattr(x, f) != getattr(y, f)]
+    assert not bad, f"{ctx} diverged: {bad[:8]}"
+
+
+def _assert_cell_equals_sim(cell, sim):
+    pairs = [(f, getattr(cell, f), getattr(sim, f)) for f in
+             ("makespan", "reads_done", "writes_done", "avg_read_latency",
+              "p99_read_latency", "refreshes_pb", "refreshes_ab",
+              "row_hits", "row_misses", "energy", "max_abs_lag")]
+    pairs.append(("core_finish", list(cell.core_finish),
+                  list(sim.core_finish)))
+    bad = [(n, a, b) for n, a, b in pairs if a != b]
+    assert not bad, (cell.policy, cell.scenario, cell.density_gb, bad)
+
+
+def _check_closed_case(policy, scenario, density, hier, seed, reqs):
+    n_ranks, n_channels, n_subarrays = hier
+    spec = SweepSpec(policies=(policy, "ideal"), scenarios=(scenario,),
+                     densities=(density,), reqs=reqs, seed=seed,
+                     mode="closed", n_ranks=n_ranks,
+                     n_channels=n_channels, n_subarrays=n_subarrays)
+    # record_commands on the mega backend *internally* reconciles every
+    # CellResult against the command-emitting batched run (raises on any
+    # mismatch), then attaches the batched traces
+    mega = sweep(spec, "mega", record_commands=True)
+    batched = sweep(spec, "batched")
+    _cells_equal(mega, batched, f"mega/batched {policy}/{scenario}")
+
+    T = timing_for_density(density, n_ranks=n_ranks,
+                           n_channels=n_channels,
+                           n_subarrays=n_subarrays)
+    wl = make_closed_workload(scenario, reqs, seed)
+    m_ideal = mega.get("ideal", scenario, density)
+    b_ideal = batched.get("ideal", scenario, density)
+    for p in (policy, "ideal"):
+        cell = mega.get(p, scenario, density)
+        assert cell.finished, (p, scenario, density, hier, seed)
+        sim = DramSim(T, wl, p).run_ticks(record_commands=True)
+        _assert_cell_equals_sim(cell, sim)
+        # the paper's metric, derived identically on both backends
+        assert (cell.weighted_speedup_vs(m_ideal)
+                == batched.get(p, scenario, density)
+                .weighted_speedup_vs(b_ideal)), p
+        # emitted command traces: megakernel sweep == per-cell sim
+        tr = mega.commands_for(p, scenario, density)
+        assert tr.cmds == sim.commands.cmds, (
+            p, scenario, density, hier, seed,
+            f"{len(tr.cmds)} vs {len(sim.commands.cmds)} cmds")
+
+
+def _check_open_case(policy, scenario, density, n_ranks, seed, reqs):
+    spec = SweepSpec(policies=(policy, "ideal"), scenarios=(scenario,),
+                     densities=(density,), reqs=reqs, seed=seed,
+                     n_ranks=n_ranks)
+    mega = sweep(spec, "mega")
+    batched = sweep(spec, "batched")
+    _cells_equal(mega, batched, f"mega/batched {policy}/{scenario}")
+    cell = mega.get(policy, scenario, density)
+    ideal = mega.get("ideal", scenario, density)
+    assert cell.latency_speedup_vs(ideal) == (
+        batched.get(policy, scenario, density)
+        .latency_speedup_vs(batched.get("ideal", scenario, density)))
+
+
+# ------------------------------------------------------------ properties
+@settings(max_examples=N_CASES, deadline=None)
+@given(policy=st.sampled_from(POLICIES),
+       scenario=st.sampled_from(CLOSED_SCENARIOS),
+       density=st.sampled_from(DENSITIES),
+       hier=st.sampled_from(HIERARCHIES),
+       seed=st.integers(0, 2 ** 31 - 1),
+       reqs=st.sampled_from((24, 40)))
+def test_fuzz_closed_mega_equals_batched_equals_run_ticks(
+        policy, scenario, density, hier, seed, reqs):
+    """Random closed-loop sweep points: megakernel == batched numpy ==
+    `DramSim.run_ticks`, stats + weighted speedup + command traces."""
+    _check_closed_case(policy, scenario, density, hier, seed, reqs)
+
+
+@settings(max_examples=N_CASES, deadline=None)
+@given(policy=st.sampled_from(POLICIES),
+       scenario=st.sampled_from(OPEN_SCENARIOS),
+       density=st.sampled_from(DENSITIES),
+       n_ranks=st.sampled_from((1, 2)),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_fuzz_open_mega_equals_batched(policy, scenario, density,
+                                       n_ranks, seed):
+    """Random open-loop sweep points: megakernel == batched numpy on
+    every CellResult field and the open-loop latency-speedup metric."""
+    _check_open_case(policy, scenario, density, n_ranks, seed, reqs=40)
+
+
+# -------------------------------------------------------- golden replays
+def _fixture_cases():
+    return sorted(FIXTURES.glob("*.json"))
+
+
+@pytest.mark.parametrize("path", _fixture_cases(),
+                         ids=lambda p: p.stem)
+def test_golden_fixture_cases_stay_bit_identical(path):
+    """Replay the pinned edge cases (development counterexamples and
+    dispatch edges: sharded out-tree shape, pad-only tile tails,
+    single-cell grids, mixed-density scenario tiles)."""
+    case = json.loads(path.read_text())
+    spec = SweepSpec(policies=tuple(case["policies"]),
+                     scenarios=tuple(case["scenarios"]),
+                     densities=tuple(case["densities"]),
+                     reqs=case["reqs"], seed=case["seed"],
+                     mode=case["mode"], n_ranks=case.get("n_ranks", 1),
+                     n_channels=case.get("n_channels", 1),
+                     n_subarrays=case.get("n_subarrays", 1))
+    if case["mode"] == "closed":
+        mega = sweep(spec, "mega", record_commands=True)
+        assert len(mega.commands) == len(mega.cells)
+    else:
+        mega = sweep(spec, "mega")
+    _cells_equal(mega, sweep(spec, "batched"), path.stem)
+
+
+def test_fixture_corpus_is_nonempty():
+    assert len(_fixture_cases()) >= 3, (
+        "the megakernel golden corpus must keep its pinned cases; add "
+        "shrunk counterexamples, never delete them")

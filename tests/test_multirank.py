@@ -53,15 +53,18 @@ def _spec(n_ranks, n_channels=1, policies=POLICIES,
 @pytest.mark.parametrize("n_ranks,n_channels", [(2, 1), (4, 1), (2, 2)])
 def test_multirank_all_backends_bit_identical_to_run_ticks(n_ranks,
                                                            n_channels):
-    """Every backend (batched numpy, jitted jax, pallas-scored batched,
-    scalar oracle) stays bit-identical to `DramSim.run_ticks` at every
-    rank/channel count, for every policy on the multirank axis."""
+    """Every backend (batched numpy, jitted jax, fused Pallas megakernel,
+    pallas-scored batched, scalar oracle) stays bit-identical to
+    `DramSim.run_ticks` at every rank/channel count, for every policy on
+    the multirank axis."""
     spec = _spec(n_ranks, n_channels)
     batched = sweep(spec, "batched")
     _cells_equal(sweep(spec, "scalar"), batched,
                  f"scalar/batched R={n_ranks} C={n_channels}")
     _cells_equal(sweep(spec, "jax"), batched,
                  f"jax/batched R={n_ranks} C={n_channels}")
+    _cells_equal(sweep(spec, "mega"), batched,
+                 f"mega/batched R={n_ranks} C={n_channels}")
     _cells_equal(sweep(spec, "batched", arbiter="pallas"), batched,
                  f"pallas/batched R={n_ranks} C={n_channels}")
     wl = make_closed_workload("closed_multirank", REQS, SEED)
