@@ -10,6 +10,12 @@ bench_serving      : serving policies by registry name (all_bank /
 bench_serving_lifecycle : the EngineCore request-lifecycle bench — a
                      mixed-prompt batch with chunked prefill; publishes
                      TTFT/TPOT percentiles and forward-call counts.
+                     Raises on engine timeout instead of reporting
+                     truncated percentiles.
+bench_serving_cosim : the serving <-> DRAM co-sim sweep — scenario page
+                     traffic replayed through DramSim per refresh
+                     policy; tick-space TTFT/TPOT p99 ordering + the
+                     bit-identical determinism pin.
 bench_sarp_bytes   : derived HBM traffic of fused vs serial paged attention
                      (the TPU-relevant SARP metric) + numerics check.
 bench_kernel_micro : us/call of jitted reference paths on CPU.
@@ -115,10 +121,15 @@ def bench_serving(n_requests: int = 6, max_new: int = 24,
 
 def bench_serving_lifecycle(n_requests: int = 6, max_new: int = 12,
                             policies: tuple = ("darp", "all_bank"),
-                            prefill_chunk: int = 8) -> dict:
+                            prefill_chunk: int = 8,
+                            max_rounds: int = 800) -> dict:
     """EngineCore under a mixed-prompt batch (3..32-token prompts): per-
     policy TTFT/TPOT percentiles, stall/eviction counts, and the
-    prefill/decode forward-call split that chunked prefill buys."""
+    prefill/decode forward-call split that chunked prefill buys.
+
+    Raises RuntimeError if any policy's engine fails to drain within
+    `max_rounds` — a timed-out run has truncated, meaningless
+    percentiles and must never be emitted as a benchmark result."""
     from repro.kvcache import PagedKVConfig
     from repro.models.api import get_model
     from repro.serving import EngineConfig, EngineCore
@@ -144,8 +155,14 @@ def bench_serving_lifecycle(n_requests: int = 6, max_new: int = 12,
         for i, p in enumerate(prompts):
             eng.submit(p, max_new, rid=i)
         t0 = time.perf_counter()
-        eng.run_until_done(max_rounds=800)
+        eng.run_until_done(max_rounds=max_rounds)
         wall = time.perf_counter() - t0
+        if eng.stats["timed_out"]:
+            raise RuntimeError(
+                f"bench_serving_lifecycle: policy {pol!r} did not drain "
+                f"within {max_rounds} rounds ({len(eng.queue)} queued / "
+                f"{len(eng.active)} active left) — refusing to report "
+                "truncated percentiles")
         summ = eng.metrics_summary()
         out[pol] = {
             "wall_s": round(wall, 2),
@@ -156,6 +173,43 @@ def bench_serving_lifecycle(n_requests: int = 6, max_new: int = 12,
             **summ,
         }
     return out
+
+
+def bench_serving_cosim(n_requests: int = 200,
+                        scenario: str = "serving_bursty",
+                        policies: tuple = ("dsarp", "darp", "ref_pb",
+                                           "all_bank"),
+                        seed: int = 0,
+                        check_identical: bool = True) -> dict:
+    """End-to-end serving <-> DRAM co-sim sweep: replay one serving
+    scenario's KV page traffic through `DramSim` under each refresh
+    policy and report tick-space TTFT/TPOT percentiles plus whether the
+    paper's interference ordering (listed best-to-worst in `policies`)
+    holds end to end.
+
+    Fails loudly: `CoSimTimeout` propagates if any engine cannot drain,
+    and the determinism pin is recorded as `bit_identical`."""
+    from repro.serving.cosim import CoSimConfig, bit_identical_replay, \
+        compare_policies
+
+    out = compare_policies(policies, scenario=scenario,
+                           n_requests=n_requests, seed=seed)
+    t99 = [out[p]["ttft_ticks"]["p99"] for p in policies]
+    q99 = [out[p]["tpot_ticks"]["p99"] for p in policies]
+    stall = [out[p]["dram_stall_ticks"] for p in policies]
+    res = {
+        "scenario": scenario, "n_requests": n_requests, "seed": seed,
+        "policies": list(policies),
+        "ttft_p99_ordered": all(a <= b for a, b in zip(t99, t99[1:])),
+        "tpot_p99_ordered": all(a <= b for a, b in zip(q99, q99[1:])),
+        "stall_ordered": all(a <= b for a, b in zip(stall, stall[1:])),
+        **out,
+    }
+    if check_identical:
+        res["bit_identical"] = bit_identical_replay(
+            CoSimConfig(policy=policies[0], scenario=scenario,
+                        n_requests=n_requests, seed=seed))
+    return res
 
 
 def bench_sarp_bytes(seq_len: int = 32768, page: int = 64, hkv: int = 8,

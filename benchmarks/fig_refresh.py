@@ -131,7 +131,7 @@ def fig2() -> dict:
         r = DramSim(T, wl, pol).run_ticks(record_timeline=True)
         ref = r.timeline["refresh"]
         serves = r.timeline["serves"]
-        sibling = sum(1 for (t, b, sub, row, isw, done) in serves
+        sibling = sum(1 for (t, b, sub, row, isw, done, arr) in serves
                       if any(rb == b and rs not in (-1, sub) and s0 <= t < s1
                              for (rb, rs, s0, s1, k) in ref))
         excerpt = None

@@ -30,6 +30,10 @@ dicts go to results/bench/*.json.
   serving        framework DARP: serving maintenance policies (legacy shim)
   serving_lifecycle   EngineCore request lifecycle: TTFT/TPOT percentiles
                  under a mixed-prompt batch with chunked prefill
+  serving_cosim  serving <-> DRAM co-sim: scenario KV page traffic
+                 replayed through DramSim per refresh policy; tick-space
+                 TTFT/TPOT p99 orderings (dsarp<=darp<=ref_pb<=all_bank)
+                 and the bit-identical replay pin
   sarp_bytes     framework SARP: fused vs serial paged-attn HBM traffic
   kernel_micro   CPU reference micro-latencies
 
@@ -155,6 +159,21 @@ def main() -> None:
           f"darp_tpot_p50_ms={sl['darp']['tpot']['p50_ms']};"
           f"prefill_calls={sl['darp']['prefill_calls']};"
           f"decode_calls={sl['darp']['decode_calls']}", sl)
+
+    t0 = time.perf_counter()
+    # fast mode trims the policy sweep, not the request count — the p99
+    # orderings only stabilize at a few hundred requests
+    sc = BF.bench_serving_cosim(
+        n_requests=200, scenario="serving_bursty",
+        policies=(("darp", "all_bank") if fast
+                  else ("dsarp", "darp", "ref_pb", "all_bank")))
+    _emit("serving_cosim", (time.perf_counter() - t0) * 1e6,
+          f"ttft_p99_ordered={sc['ttft_p99_ordered']};"
+          f"tpot_p99_ordered={sc['tpot_p99_ordered']};"
+          f"stall_ordered={sc['stall_ordered']};"
+          f"bit_identical={sc['bit_identical']};"
+          f"darp_ttft_p99={sc['darp']['ttft_ticks']['p99']};"
+          f"allbank_ttft_p99={sc['all_bank']['ttft_ticks']['p99']}", sc)
 
     sb = BF.bench_sarp_bytes()
     _emit("sarp_decode_bytes", 0.0,

@@ -100,11 +100,13 @@ class RepoContext:
     COMMANDS = "src/repro/core/commands/trace.py"
     POLICY_PKG = "src/repro/core/policy"
     KERNELS_DIR = "src/repro/kernels"
+    SCENARIOS = "src/repro/core/refresh/scenarios.py"
     SRC_PKG = "src/repro"
     TEST_CONFORMANCE = "tests/test_conformance.py"
     TEST_MULTIRANK = "tests/test_multirank.py"
     TEST_SWEEP = "tests/test_sweep.py"
     TEST_SUBARRAY = "tests/test_subarray.py"
+    TEST_SERVING_COSIM = "tests/test_serving_cosim.py"
 
     def __init__(self, root: str | Path):
         self.root = Path(root)

@@ -27,6 +27,13 @@ factory passes the trait as a keyword — both spellings exist in the
 built-in catalogue. Such a policy exercises the per-subarray refresh
 path, so skipping `tests/test_subarray.py`'s backend-vs-DramSim matrix
 would leave its defining behavior untested.
+
+RC407 extends the same contract to the *serving* scenario registry:
+every ``register_serving_scenario`` site in the scenario module must
+reach the co-sim conformance matrix (`tests/test_serving_cosim.py`),
+either by string literal or by iterating ``list_serving_scenarios()``.
+A serving arrival trace that never flows through the engine <-> DramSim
+replay is exactly as silent a gap as an untested policy.
 """
 from __future__ import annotations
 
@@ -41,6 +48,7 @@ RULES = (
     ("RC404", "policy class not classifiable by the fast-path table"),
     ("RC405", "fast-path table entry with no registered producer"),
     ("RC406", "SARP-trait policy missing from subarray matrix"),
+    ("RC407", "serving scenario missing from co-sim matrix"),
 )
 
 
@@ -189,17 +197,52 @@ def classify_table(ctx: RepoContext,
     return table, has_trait_branch
 
 
-def _matrix_covers(ctx: RepoContext, rel: str, name: str) -> bool:
+def _matrix_covers(ctx: RepoContext, rel: str, name: str,
+                   list_fn: str = "list_policies") -> bool:
     tree = ctx.tree(rel)
     if tree is None:
         return False
     for node in ast.walk(tree):
         if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
-                and node.func.id == "list_policies"):
+                and node.func.id == list_fn):
             return True
         if (isinstance(node, ast.Constant) and node.value == name):
             return True
     return False
+
+
+def collect_serving_scenarios(ctx: RepoContext) -> dict[str, Registration]:
+    """name -> Registration for every `register_serving_scenario` site in
+    the scenario module (decorator form and direct calls)."""
+    regs: dict[str, Registration] = {}
+
+    def is_reg(call: ast.Call) -> bool:
+        f = call.func
+        n = f.id if isinstance(f, ast.Name) else (
+            f.attr if isinstance(f, ast.Attribute) else None)
+        return n == "register_serving_scenario"
+
+    tree = ctx.tree(ctx.SCENARIOS)
+    if tree is None:
+        return regs
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and is_reg(dec) and dec.args:
+                    a = dec.args[0]
+                    if isinstance(a, ast.Constant) and isinstance(a.value,
+                                                                  str):
+                        regs[a.value] = Registration(
+                            a.value, node.name, ctx.SCENARIOS, dec.lineno)
+        elif (isinstance(node, ast.Call) and is_reg(node)
+              and len(node.args) >= 2):
+            a = node.args[0]
+            if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                fn = node.args[1]
+                cls = fn.id if isinstance(fn, ast.Name) else None
+                regs[a.value] = Registration(a.value, cls, ctx.SCENARIOS,
+                                             node.lineno)
+    return regs
 
 
 @register_pass("registry-coverage", rules=RULES)
@@ -242,6 +285,22 @@ def run(ctx: RepoContext) -> list[Finding]:
                     f"SARP-trait policy '{name}' ({reg.path}:{reg.line}) "
                     "never reaches the subarray matrix — add it or "
                     "iterate list_policies()"))
+
+    # serving scenarios must reach the co-sim matrix: every arrival trace
+    # in the registry gets replayed through the engine <-> DramSim loop
+    serving = collect_serving_scenarios(ctx)
+    if serving and not ctx.exists(ctx.TEST_SERVING_COSIM):
+        out.append(Finding(ctx.TEST_SERVING_COSIM, 0, "RC407",
+                           "serving co-sim test matrix file missing"))
+    elif serving:
+        for name, reg in sorted(serving.items()):
+            if not _matrix_covers(ctx, ctx.TEST_SERVING_COSIM, name,
+                                  list_fn="list_serving_scenarios"):
+                out.append(Finding(
+                    ctx.TEST_SERVING_COSIM, 1, "RC407",
+                    f"serving scenario '{name}' ({reg.path}:{reg.line}) "
+                    "never reaches the co-sim matrix — add it or iterate "
+                    "list_serving_scenarios()"))
 
     table, has_trait_branch = classify_table(ctx)
     trait_classes = collect_trait_classes(ctx, "ideal")

@@ -78,6 +78,14 @@ class MaintenanceView:
     #   pressure (1.0 means the forced red-line is imminent). Policies may
     #   use it to modulate how aggressively they repay lag; engines that
     #   have no buffer analogue leave it 0.
+    slo_pressure: float = 0.0    # SLO deadline pressure in [0, 1]: the
+    #   fraction of live requests whose TTFT/TPOT headroom is exhausted
+    #   (serving EngineCore computes it from EngineConfig's
+    #   ttft_slo_rounds/tpot_slo_rounds). Policies may postpone
+    #   maintenance while it is high and repay in the valleys; engines
+    #   with no request-deadline analogue (the tick simulators, the
+    #   checkpoint scheduler) leave it 0, so consuming it is
+    #   conformance-safe by construction.
 
     # ---- hierarchy (channel, rank, bank) — tick engines only ----------
     # Generic engines (serving, checkpoint) leave the defaults, which

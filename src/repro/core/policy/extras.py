@@ -39,6 +39,14 @@ class ElasticPolicy(PolicyBase):
     The ±budget invariant is kept by the shared forced path (upper edge)
     and the `lag > -budget` pull-in floor (lower edge).
 
+    SLO awareness: when the engine reports `view.slo_pressure` at or
+    above `slo_defer` (a serving engine with many requests out of
+    TTFT/TPOT headroom), the policy drops into the high-pressure
+    postpone regime regardless of raw demand — refreshes are deferred
+    until the deadline wave passes, except for banks riding the budget
+    edge. Engines that leave `slo_pressure` at 0.0 (every tick engine)
+    see bit-identical behavior to the pre-SLO policy.
+
     Not in the source paper — post-paper registry addition, motivated by
     the refresh-access parallelism follow-up (arXiv:1805.01289).
 
@@ -47,11 +55,13 @@ class ElasticPolicy(PolicyBase):
     """
 
     def __init__(self, name: str = "elastic", sarp: bool = False,
-                 urgency: float = 0.75):
+                 urgency: float = 0.75, slo_defer: float = 0.5):
         assert 0.0 < urgency <= 1.0
+        assert 0.0 < slo_defer <= 1.0
         self.name = name
         self.sarp = sarp
         self.urgency = urgency
+        self.slo_defer = slo_defer
 
     def select(self, view: MaintenanceView) -> list[Decision]:
         lag = list(view.lag)
@@ -71,7 +81,16 @@ class ElasticPolicy(PolicyBase):
                 lag[b] -= 1
                 picked.add(b)
 
-        if pressure == 0:
+        if view.slo_pressure >= self.slo_defer:
+            # deadline wave: postpone like the high-pressure regime, but
+            # still ramp into the budget edge so the forced cliff never
+            # lands mid-wave (slo_pressure == 0 never reaches here)
+            cands = sorted((b for b in range(view.n_banks)
+                            if view.ready[b] and b not in picked
+                            and lag[b] >= urgent_at),
+                           key=lambda b: -lag[b])
+            take(cands, "slo-deadline defer")
+        elif pressure == 0:
             # quiet valley: repay owed refreshes and pre-pay future ones
             cands = sorted((b for b in range(view.n_banks)
                             if view.ready[b] and view.idle[b]

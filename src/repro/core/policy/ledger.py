@@ -70,7 +70,8 @@ class MaintenanceLedger:
              write_window: bool = False, max_issues: int = 1,
              ready: Optional[Sequence[bool]] = None,
              idle: Optional[Sequence[bool]] = None,
-             pressure: float = 0.0, rank_due: int = 0,
+             pressure: float = 0.0, slo_pressure: float = 0.0,
+             rank_due: int = 0,
              rank_quiet: bool = True, n_ranks: int = 1,
              n_channels: int = 1, rank_of: Sequence[int] = (),
              channel_of: Sequence[int] = (),
@@ -102,7 +103,8 @@ class MaintenanceLedger:
             ready=list(ready) if ready is not None else [True] * self.n_banks,
             idle=list(idle) if idle is not None else [True] * self.n_banks,
             write_window=write_window, max_issues=max_issues,
-            pressure=float(pressure), rank_due=int(rank_due),
+            pressure=float(pressure), slo_pressure=float(slo_pressure),
+            rank_due=int(rank_due),
             rank_quiet=bool(rank_quiet), n_ranks=int(n_ranks),
             n_channels=int(n_channels), rank_of=tuple(rank_of),
             channel_of=tuple(channel_of), ranks_due=tuple(ranks_due),

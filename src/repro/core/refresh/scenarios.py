@@ -58,6 +58,27 @@ event/tick simulators replay one demand stream:
 arrays with think gaps quantized via `workload.quantize_streams`, and
 keeps the originating `Workload` on the result so conformance tests can
 hand the identical demand to `DramSim`.
+
+Serving scenarios (PR 10) live in a third registry: a `serving_*` entry
+is a *request arrival process* for the continuous-batching serving loop
+(`repro.serving.EngineCore` driven by `repro.serving.cosim`) — per
+request an arrival round, a prompt length, a decode budget, and a
+priority class:
+
+    @register_serving_scenario("serving_bursty")
+    def serving_bursty(n, rs): return ServingArrivals(...)
+
+    arr = make_serving_arrivals("serving_bursty", n_requests=200, seed=0)
+    list_serving_scenarios()
+
+The built-ins span the arrival shapes that matter for refresh-vs-SLO
+scheduling: `serving_diurnal` (slow sinusoidal load swing),
+`serving_bursty` (dense request bursts with quiet valleys — DARP's
+harvesting ground), `serving_heavy_tail` (Pareto-ish prompt mix with
+priority classes). Deterministic per (name, seed) like the other two
+registries; `repro.analysis`'s registry-coverage pass (RC407) fails CI
+when a registered `serving_*` scenario never reaches the co-sim test
+matrix (`tests/test_serving_cosim.py`).
 """
 from __future__ import annotations
 
@@ -498,3 +519,150 @@ def closed_subarray_locality(reqs: int, seed: int) -> Workload:
     return Workload(name="subarray_locality", n_cores=4, mlp=4,
                     think_ns=12.0, row_hit_rate=0.75, write_ratio=0.15,
                     reqs_per_core=max(1, reqs // 4), seed=seed)
+
+
+# ======================================================== serving library
+_SERVING_SCENARIOS: Dict[str, Callable] = {}
+
+
+@dataclass(frozen=True)
+class ServingArrivals:
+    """Request arrival process for the continuous-batching serving loop.
+
+    Parallel arrays, one entry per request, sorted by `arrive_round`
+    (stable, so same-round requests keep generation order — the FIFO
+    tie-break the scheduler property tests replay). Rounds are
+    `EngineCore.step_round` indices, not ticks: the co-sim owns the
+    round -> tick clock.
+    """
+    name: str
+    arrive_round: np.ndarray    # int64, non-decreasing, >= 0
+    prompt_len: np.ndarray      # int64 >= 1 tokens
+    max_new: np.ndarray         # int64 >= 1 decode budget
+    priority: np.ndarray        # int64 >= 0, lower is more urgent
+
+    def __len__(self) -> int:
+        return int(self.arrive_round.shape[0])
+
+    def validate(self) -> "ServingArrivals":
+        n = len(self)
+        assert n > 0
+        for a in (self.prompt_len, self.max_new, self.priority):
+            assert len(a) == n
+        assert (np.diff(self.arrive_round) >= 0).all(), \
+            "arrivals must be sorted by round"
+        assert self.arrive_round[0] >= 0
+        assert (self.prompt_len >= 1).all()
+        assert (self.max_new >= 1).all()
+        assert (self.priority >= 0).all()
+        return self
+
+
+def _assemble_serving(name, arrive, prompt_len, max_new,
+                      priority=None) -> ServingArrivals:
+    arrive = np.asarray(arrive, np.int64)
+    order = np.argsort(arrive, kind="stable")
+    n = len(arrive)
+    if priority is None:
+        priority = np.zeros(n, np.int64)
+    return ServingArrivals(
+        name, arrive[order],
+        np.asarray(prompt_len, np.int64)[order],
+        np.asarray(max_new, np.int64)[order],
+        np.asarray(priority, np.int64)[order])
+
+
+def register_serving_scenario(name: str, fn: Callable = None, *,
+                              override: bool = False):
+    """Register a serving arrival process under `name` (decorator or
+    direct call). The generator is called as `fn(n, rs, **cfg)` and must
+    return a `ServingArrivals`. Names start with ``serving_`` by
+    convention — the registry-coverage pass keys its co-sim matrix rule
+    (RC407) on that prefix."""
+    def deco(obj):
+        if not override and name in _SERVING_SCENARIOS:
+            raise ValueError(
+                f"serving scenario {name!r} is already registered; pass "
+                f"override=True to replace it")
+        _SERVING_SCENARIOS[name] = obj
+        return obj
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def list_serving_scenarios() -> list[str]:
+    return sorted(_SERVING_SCENARIOS)
+
+
+def make_serving_arrivals(name: str, n_requests: int = 200, seed: int = 0,
+                          **cfg) -> ServingArrivals:
+    """Generate the named serving arrival process, deterministic per
+    (name, seed) (KeyError lists known names)."""
+    try:
+        fn = _SERVING_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown serving scenario {name!r}; registered: "
+            f"{', '.join(sorted(_SERVING_SCENARIOS))}") from None
+    h = hashlib.sha256(f"serving:{name}:{seed}".encode()).digest()
+    rs = np.random.RandomState(int.from_bytes(h[:4], "little"))
+    return fn(n_requests, rs, **cfg).validate()
+
+
+def _geometric_prompts(rs, n: int, mean: float, lo: int, hi: int):
+    return np.clip(rs.geometric(1.0 / mean, n), lo, hi).astype(np.int64)
+
+
+@register_serving_scenario("serving_diurnal")
+def serving_diurnal(n, rs, base_gap: float = 2.0, amp: float = 0.8,
+                    cycles: float = 2.0):
+    """Slow sinusoidal load swing (the day/night cycle compressed to one
+    run): inter-arrival gaps stretch and shrink by `amp` around
+    `base_gap` rounds over `cycles` full periods. Peaks back the
+    admission queue up; troughs are the valleys SLO-aware policies repay
+    refresh debt in."""
+    phase = 2.0 * np.pi * cycles * np.arange(n) / max(1, n)
+    mean_gap = base_gap * (1.0 + amp * np.sin(phase))
+    gaps = rs.exponential(np.maximum(mean_gap, 0.05))
+    arrive = np.floor(np.cumsum(gaps)).astype(np.int64)
+    prompt = _geometric_prompts(rs, n, 8.0, 2, 24)
+    max_new = _geometric_prompts(rs, n, 6.0, 2, 12)
+    return _assemble_serving("serving_diurnal", arrive, prompt, max_new)
+
+
+@register_serving_scenario("serving_bursty")
+def serving_bursty(n, rs, burst: int = 12, quiet: int = 24,
+                   burst_span: int = 3):
+    """Dense request bursts separated by quiet valleys: `burst` requests
+    land within `burst_span` rounds, then `quiet` rounds pass with no
+    arrivals. The serving-side analogue of `write_burst_draining` — the
+    quiet valleys are where DARP-style out-of-order refresh harvests
+    idle banks, and the bursts are where all-bank refresh's full-rank
+    stalls land on every request at once."""
+    arrive, left, t = [], n, 0
+    while left > 0:
+        nb = min(burst, left)
+        arrive.extend(t + rs.randint(0, burst_span, nb))
+        left -= nb
+        t += burst_span + quiet
+    arrive = np.asarray(arrive, np.int64)
+    prompt = _geometric_prompts(rs, n, 6.0, 2, 16)
+    max_new = _geometric_prompts(rs, n, 5.0, 2, 10)
+    return _assemble_serving("serving_bursty", arrive, prompt, max_new)
+
+
+@register_serving_scenario("serving_heavy_tail")
+def serving_heavy_tail(n, rs, mean_gap: float = 3.0, tail_alpha: float = 1.3,
+                       n_classes: int = 3):
+    """Poisson arrivals with a Pareto prompt-length mix (most prompts
+    tiny, a heavy tail of long ones that monopolize prefill rounds) and
+    `n_classes` priority classes — the mix that makes priority
+    arbitration and chunked prefill earn their keep."""
+    arrive = np.floor(np.cumsum(rs.exponential(mean_gap, n))).astype(np.int64)
+    tail = np.ceil(rs.pareto(tail_alpha, n) * 4.0).astype(np.int64)
+    prompt = np.clip(2 + tail, 2, 48)
+    max_new = _geometric_prompts(rs, n, 5.0, 2, 12)
+    priority = rs.randint(0, n_classes, n).astype(np.int64)
+    return _assemble_serving("serving_heavy_tail", arrive, prompt,
+                             max_new, priority)

@@ -86,9 +86,12 @@ class SimResult:
     max_abs_lag: int
     #: optional per-command occupancy timeline (`run_ticks(...,
     #: record_timeline=True)` only): {"refresh": [(bank, sub, start, end,
-    #: kind)], "serves": [(t, bank, sub, row, is_write, done)]} in ticks,
-    #: sub == -1 for a whole-bank (non-SARP) refresh occupancy. fig2 and
-    #: the subarray overlap property tests are built on it.
+    #: kind)], "serves": [(t, bank, sub, row, is_write, done, arr)]} in
+    #: ticks, sub == -1 for a whole-bank (non-SARP) refresh occupancy,
+    #: arr == the tick the request entered its bank queue (so t - arr is
+    #: the queueing stall the serving co-sim attributes back to
+    #: requests). fig2 and the subarray overlap property tests are built
+    #: on it.
     timeline: Optional[dict] = None
     #: optional DFI-style command trace (`record_commands=True` only): a
     #: `repro.core.commands.CmdTrace` of every ACT/PRE/PREA/RD/WR/
@@ -804,7 +807,7 @@ class DramSim:
                     open_sub[b] = sub
                     if timeline is not None:
                         timeline["serves"].append(
-                            (t, b, sub, row, isw, done))
+                            (t, b, sub, row, isw, done, arr))
                     if hit:
                         hits += 1
                     else:

@@ -47,6 +47,55 @@ class Workload:
         return streams
 
 
+@dataclass(frozen=True)
+class TraceWorkload(Workload):
+    """Single-core workload replaying an explicit pre-quantized stream.
+
+    The serving co-sim (`repro.serving.cosim`) captures the KV-cache
+    page-group traffic one `EngineCore` run generates and replays it
+    through `DramSim.run_ticks` as the demand stream. The replay must be
+    exact: `generate()` returns the stored stream verbatim, with think
+    gaps stored in *ticks* and scaled back to ns by `dt_ns` so that
+    `quantize_streams` (the shared quantization) reproduces the original
+    tick gaps bit-for-bit (``int(k * dt / dt + 0.5) == k``).
+
+    Single-core by construction (``n_cores == 1``): `run_ticks` serves
+    each bank queue FIFO and a single core issues in stream order, so
+    the k-th access the trace emits on bank b is exactly the k-th serve
+    on bank b — the property the co-sim's per-request stall attribution
+    relies on, even when the write buffer back-pressures the core.
+    """
+    #: dict(is_write [N] bool, bank [N], row [N], subarray [N],
+    #: think_ticks [N] int) — think_ticks[i] is the gap BEFORE request i
+    stream: dict = None
+    dt_ns: float = 6.0
+
+    def generate(self, n_banks: int, n_subarrays: int, n_rows: int = 4096):
+        s = self.stream
+        assert s is not None and self.n_cores == 1
+        bank = np.asarray(s["bank"], np.int64)
+        row = np.asarray(s["row"], np.int64)
+        sub = np.asarray(s["subarray"], np.int64)
+        ticks = np.asarray(s["think_ticks"], np.int64)
+        assert bank.size == 0 or (bank.min() >= 0 and bank.max() < n_banks)
+        assert row.size == 0 or (row.min() >= 0 and row.max() < n_rows)
+        assert sub.size == 0 or (sub.min() >= 0 and sub.max() < n_subarrays)
+        assert ticks.size == 0 or ticks.min() >= 0
+        return [dict(is_write=np.asarray(s["is_write"], bool),
+                     bank=bank, row=row, subarray=sub,
+                     think=ticks.astype(np.float64) * self.dt_ns)]
+
+
+def trace_workload(name: str, stream: dict, *, dt_ns: float = 6.0,
+                   seed: int = 0) -> TraceWorkload:
+    """Wrap a captured request stream as a replayable `TraceWorkload`."""
+    n = len(stream["bank"])
+    return TraceWorkload(name=name, n_cores=1, mlp=1 << 20, think_ns=0.0,
+                         row_hit_rate=0.0, write_ratio=0.0,
+                         reqs_per_core=n, seed=seed, stream=stream,
+                         dt_ns=dt_ns)
+
+
 def quantize_streams(streams, dt_ns: float = 6.0):
     """Quantize `Workload.generate` streams to the sweep engine's integer
     tick quantum: think gaps become ``int(think / dt_ns + 0.5)`` ticks

@@ -84,6 +84,9 @@ class RequestMetrics:
     prefill_chunks: int = 0       # batched prefill rounds this request rode
     stall_rounds: int = 0         # rounds a forced compression stalled it
     maintenance_rounds: int = 0   # rounds scheduled maintenance overlapped it
+    dram_stall_ticks: int = 0     # DRAM queueing ticks the co-sim attributed
+    #   to this request's KV page traffic (serve_start - arrival, summed
+    #   over its accesses; 0 outside a `repro.serving.cosim` run)
 
 
 @dataclass
@@ -99,6 +102,8 @@ class RequestHandle:
     metrics: RequestMetrics = field(default_factory=RequestMetrics)
     on_token: Optional[Callable[["RequestHandle", int], None]] = None
     sid: int = -1
+    priority: int = 0    # admission class, lower admits first ("priority"
+    #                      arbitration only; FIFO ignores it)
     _next: int = -1      # next token to feed the decode step
     _pf_pos: int = 0     # prompt tokens already prefilled
 
@@ -137,6 +142,17 @@ class EngineConfig:
     #   counts as a write-drain window (WRP pull-in); 0.0 = every write
     #   phase, matching the legacy engine
     prefill_chunk: int = 8             # prompt tokens per prefill round
+    arbitration: str = "fifo"          # admission order: "fifo" (submit
+    #   order) | "priority" (lowest RequestHandle.priority first, FIFO
+    #   within a class — a stable scan, so equal priorities never reorder)
+    ttft_slo_rounds: int = 0           # TTFT deadline in engine rounds
+    tpot_slo_rounds: int = 0           # per-token deadline in rounds; with
+    #   either SLO > 0 the maintenance view carries `slo_pressure` = the
+    #   fraction of live requests out of headroom, so registry policies
+    #   can defer refreshes under deadline waves. 0/0 disables (inert).
+    record_traffic: bool = False       # append per-round KV page accesses
+    #   to EngineCore.traffic as (round, rid, page, is_write) — the
+    #   demand stream `repro.serving.cosim` replays through DramSim
 
 
 class EngineCore:
@@ -148,12 +164,21 @@ class EngineCore:
     """
 
     def __init__(self, params, cfg, dims: Dims, kv_cfg: PagedKVConfig,
-                 ecfg: Optional[EngineConfig] = None, **kw):
+                 ecfg: Optional[EngineConfig] = None, *,
+                 prefill_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None, **kw):
         self.params = params
         self.cfg = cfg
         self.dims = dims
         self.cache = PagedKVCache(kv_cfg)
         self.ecfg = ecfg if ecfg is not None else EngineConfig(**kw)
+        # pluggable forwards: the co-sim swaps in cheap deterministic
+        # stubs (same signatures) so the event loop scales to thousands
+        # of requests; params/cfg/dims may then be None
+        self._prefill_fn = (prefill_fn if prefill_fn is not None
+                            else paged_prefill_forward)
+        self._decode_fn = (decode_fn if decode_fn is not None
+                           else paged_decode_forward)
         self.policy: RefreshPolicy = resolve_policy(self.ecfg.policy)
         self.ledger = MaintenanceLedger(
             kv_cfg.n_groups, self.ecfg.refresh_interval,
@@ -164,6 +189,10 @@ class EngineCore:
         self.round = 0
         self._rid = 0
         self._stalled_this_round = False
+        self._inflight_prefill: set = set()   # rids mid-prefill-chunk
+        #: (round, rid, page, is_write) per KV page access, recorded when
+        #: `EngineConfig.record_traffic` — the co-sim's demand stream
+        self.traffic: list = []
         self.stats = {"rounds": 0, "tokens": 0, "stall_rounds": 0,
                       "maintenance_events": [], "prefill_calls": 0,
                       "decode_calls": 0, "evictions": 0, "rejected": 0,
@@ -171,19 +200,22 @@ class EngineCore:
 
     # --------------------------------------------------------------- submit
     def submit(self, prompt, max_new: int = 16, *, rid: Optional[int] = None,
-               on_token: Optional[Callable] = None) -> RequestHandle:
+               on_token: Optional[Callable] = None,
+               priority: int = 0) -> RequestHandle:
         """Enqueue a request; returns its handle immediately.
 
         Raises `QueueFull` when the bounded queue is at capacity — the
         backpressure signal (the rejection is also counted in
         `stats["rejected"]`). Requests with nothing to do (empty prompt or
-        `max_new <= 0`) finish as DONE on the spot.
+        `max_new <= 0`) finish as DONE on the spot. `priority` (lower =
+        more urgent) only matters under `arbitration="priority"`.
         """
         if rid is None:
             rid = self._rid
         self._rid = max(self._rid, rid) + 1
         h = RequestHandle(rid=rid, prompt=list(prompt),
-                          max_new=int(max_new), on_token=on_token)
+                          max_new=int(max_new), on_token=on_token,
+                          priority=int(priority))
         h.metrics.submit_time = time.perf_counter()
         h.metrics.submit_round = self.round
         if not h.prompt or h.max_new <= 0:
@@ -205,11 +237,25 @@ class EngineCore:
         return bool(self.queue or self.active)
 
     # ---------------------------------------------------------------- admit
+    def _next_admit(self) -> RequestHandle:
+        """Pop the next request per the configured arbitration: FIFO pops
+        the queue head; priority scans for the lowest (priority, submit
+        order) pair — a stable min, so FIFO order survives inside each
+        priority class and no class ever starves another *within* the
+        bounded queue (admission pressure is bounded by `max_queue`)."""
+        if self.ecfg.arbitration == "priority":
+            i = min(range(len(self.queue)),
+                    key=lambda j: (self.queue[j].priority, j))
+            h = self.queue[i]
+            del self.queue[i]
+            return h
+        return self.queue.popleft()
+
     def _admit(self) -> None:
         free_slots = int(self.cache.cfg.max_seqs - self.cache.active.sum())
         while (self.queue and free_slots > 0
                and len(self.active) < self.ecfg.max_batch):
-            h = self.queue.popleft()
+            h = self._next_admit()
             h.sid = self.cache.new_seq()
             free_slots -= 1
             h.metrics.admit_time = time.perf_counter()
@@ -235,24 +281,42 @@ class EngineCore:
         chunks = [h.prompt[h._pf_pos:
                            min(h._pf_pos + chunk, len(h.prompt) - 1)]
                   for h in pf]
-        k_new, v_new = paged_prefill_forward(
+        if self.ecfg.record_traffic:
+            # chunked prefill re-gathers the WHOLE past context each
+            # chunk: every existing page is read before the new K/V lands
+            for h in pf:
+                for p in self.cache.pages_of(h.sid):
+                    self.traffic.append((self.round, h.rid, p, False))
+        k_new, v_new = self._prefill_fn(
             self.params, self.cfg, self.dims, self.cache,
             [h.sid for h in pf], chunks)
         self.stats["prefill_calls"] += 1
-        for bi, h in enumerate(pf):
-            for t in range(len(chunks[bi])):
+        # while this batch's appends run, none of its members may be
+        # picked as an eviction victim: a victim mid-chunk would leave
+        # the k_new/v_new slices half-applied (the scheduler property
+        # "eviction never selects an in-flight prefill chunk")
+        self._inflight_prefill = {h.rid for h in pf}
+        try:
+            for bi, h in enumerate(pf):
+                for t in range(len(chunks[bi])):
+                    if h.state is not RequestState.PREFILL:
+                        break           # evicted mid-append (as a victim)
+                    if not self._append_or_evict(h, k_new[:, bi, t],
+                                                 v_new[:, bi, t]):
+                        break
+                    if self.ecfg.record_traffic:
+                        self.traffic.append(
+                            (self.round, h.rid,
+                             self.cache.pages_of(h.sid)[-1], True))
                 if h.state is not RequestState.PREFILL:
-                    break               # evicted mid-append (as a victim)
-                if not self._append_or_evict(h, k_new[:, bi, t],
-                                             v_new[:, bi, t]):
-                    break
-            if h.state is not RequestState.PREFILL:
-                continue
-            h._pf_pos += len(chunks[bi])
-            h.metrics.prefill_chunks += 1
-            if h._pf_pos >= len(h.prompt) - 1:
-                h.state = RequestState.DECODE
-                h._next = h.prompt[-1]
+                    continue
+                h._pf_pos += len(chunks[bi])
+                h.metrics.prefill_chunks += 1
+                if h._pf_pos >= len(h.prompt) - 1:
+                    h.state = RequestState.DECODE
+                    h._next = h.prompt[-1]
+        finally:
+            self._inflight_prefill = set()
 
     # --------------------------------------------------------------- decode
     def _decode_round(self) -> int:
@@ -261,7 +325,12 @@ class EngineCore:
             return 0
         sids = [h.sid for h in dec]
         toks = jnp.asarray([h._next for h in dec], jnp.int32)
-        logits, k_new, v_new = paged_decode_forward(
+        if self.ecfg.record_traffic:
+            # paged attention gathers every page of the sequence per step
+            for h in dec:
+                for p in self.cache.pages_of(h.sid):
+                    self.traffic.append((self.round, h.rid, p, False))
+        logits, k_new, v_new = self._decode_fn(
             self.params, self.cfg, self.dims, self.cache, sids, toks)
         self.stats["decode_calls"] += 1
         nxt = np.asarray(jnp.argmax(logits, -1))
@@ -271,6 +340,10 @@ class EngineCore:
                 continue                # evicted mid-round (as a victim)
             if not self._append_or_evict(h, k_new[:, bi], v_new[:, bi]):
                 continue
+            if self.ecfg.record_traffic:
+                self.traffic.append(
+                    (self.round, h.rid,
+                     self.cache.pages_of(h.sid)[-1], True))
             tok = int(nxt[bi])
             h.tokens.append(tok)
             h._next = tok
@@ -303,10 +376,14 @@ class EngineCore:
 
     def _pick_victim(self, exclude: RequestHandle) -> Optional[RequestHandle]:
         """Newest admitted request (least progress lost) other than
-        `exclude`."""
+        `exclude`. Members of the prefill batch currently applying a
+        chunk are never selected — their K/V slices are mid-flight and
+        evicting one would leave the chunk half-applied."""
         for h in reversed(self.active):
-            if h is not exclude and h.state in (RequestState.PREFILL,
-                                                RequestState.DECODE):
+            if (h is not exclude
+                    and h.rid not in self._inflight_prefill
+                    and h.state in (RequestState.PREFILL,
+                                    RequestState.DECODE)):
                 return h
         return None
 
@@ -329,6 +406,31 @@ class EngineCore:
                     h.metrics.stall_rounds += 1
 
     # ---------------------------------------------------------- maintenance
+    def _slo_pressure(self) -> float:
+        """Fraction of live requests whose SLO headroom is exhausted:
+        PREFILL/QUEUED-age past `ttft_slo_rounds` without a first token,
+        or a decode running slower than `tpot_slo_rounds` rounds/token.
+        0.0 whenever the SLO knobs are unset (legacy engines)."""
+        ttft = self.ecfg.ttft_slo_rounds
+        tpot = self.ecfg.tpot_slo_rounds
+        if ttft <= 0 and tpot <= 0:
+            return 0.0
+        live = [h for h in self.active if not h.done]
+        if not live:
+            return 0.0
+        late = 0
+        for h in live:
+            waited = self.round - h.metrics.submit_round
+            if h.metrics.first_token_round < 0:
+                if ttft > 0 and waited >= ttft:
+                    late += 1
+            elif tpot > 0 and h.tokens:
+                per_tok = (self.round - h.metrics.first_token_round) \
+                    / max(1, len(h.tokens))
+                if per_tok >= tpot:
+                    late += 1
+        return late / len(live)
+
     def _maintenance(self) -> None:
         """The serving-side maintenance window: map engine state onto a
         `MaintenanceView` (demand = attended page-groups, pressure =
@@ -357,7 +459,8 @@ class EngineCore:
             idle=[d == 0 for d in demand],
             write_window=pressure >= self.ecfg.drain_threshold,
             max_issues=self.ecfg.max_compress_per_round,
-            pressure=pressure)
+            pressure=pressure,
+            slo_pressure=self._slo_pressure())
         decisions = self.policy.select(view)
         groups = self.ledger.apply(decisions, float(self.round))
         if not groups:
@@ -442,6 +545,8 @@ class EngineCore:
             "ttft": pct(ttfts),
             "tpot": pct(tpots),
             "stall_rounds": self.stats["stall_rounds"],
+            "dram_stall_ticks": sum(h.metrics.dram_stall_ticks
+                                    for h in self.finished),
             "prefill_calls": self.stats["prefill_calls"],
             "decode_calls": self.stats["decode_calls"],
             "maintenance_events": len(self.stats["maintenance_events"]),

@@ -1,0 +1,32 @@
+"""Scenario registries (fixture corpus) — planted RC407 violation.
+
+Two serving scenarios are registered but the co-sim matrix only names
+``serving_fixture``; ``serving_uncovered`` never reaches the engine <->
+DramSim replay, which the registry-coverage pass must flag.
+"""
+
+_SERVING_SCENARIOS = {}
+
+
+def register_serving_scenario(name, fn=None):
+    def deco(f):
+        _SERVING_SCENARIOS[name] = f
+        return f
+    if fn is not None:
+        _SERVING_SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def list_serving_scenarios():
+    return sorted(_SERVING_SCENARIOS)
+
+
+@register_serving_scenario("serving_fixture")
+def serving_fixture(n_requests, rs):
+    return [0] * n_requests
+
+
+@register_serving_scenario("serving_uncovered")
+def serving_uncovered(n_requests, rs):
+    return [1] * n_requests

@@ -1,0 +1,12 @@
+"""Serving co-sim matrix (fixture corpus) — static and incomplete.
+
+Names ``serving_fixture`` as a literal but never iterates the registry,
+so the planted ``serving_uncovered`` registration is invisible here —
+the RC407 gap.
+"""
+
+COSIM_MATRIX = ("serving_fixture",)
+
+
+def test_static_matrix():
+    assert "serving_fixture" in COSIM_MATRIX

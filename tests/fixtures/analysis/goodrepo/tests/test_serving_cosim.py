@@ -1,0 +1,11 @@
+"""Serving co-sim conformance matrix (fixture corpus).
+
+Iterating ``list_serving_scenarios()`` is the full-dynamic-coverage
+spelling the registry-coverage pass accepts for RC407.
+"""
+from repro.core.refresh.scenarios import list_serving_scenarios
+
+
+def test_every_serving_scenario_replays():
+    for name in list_serving_scenarios():
+        assert name.startswith("serving_")

@@ -31,7 +31,7 @@ BADREPO_RULES = {
     "BF105", "BF106",
     "DT201", "DT202", "DT203", "DT204", "DT205",
     "PP301", "PP302", "PP303",
-    "RC401", "RC402", "RC403", "RC404", "RC405", "RC406",
+    "RC401", "RC402", "RC403", "RC404", "RC405", "RC406", "RC407",
     "PL501", "PL502", "PL503", "PL504", "PL505",
     "CM601", "CM602",
 }
@@ -247,6 +247,30 @@ def test_registry_catches_sarp_policy_skipping_subarray_matrix(tmp_path):
     root = _mutated_goodrepo(tmp_path, mutate)
     fired = rules_of(root, ["registry-coverage"])
     assert "RC406" in fired
+
+
+def test_registry_catches_serving_scenario_skipping_cosim_matrix(tmp_path):
+    # RC407's reason to exist: a new register_serving_scenario that the
+    # co-sim matrix never replays (the matrix iterates
+    # list_serving_scenarios(), so the mutation also pins it to a static
+    # tuple that misses the newcomer)
+    def mutate(root):
+        f = root / "src/repro/core/refresh/scenarios.py"
+        f.write_text(f.read_text() + (
+            "\n\n@register_serving_scenario(\"serving_stealth\")\n"
+            "def serving_stealth(n_requests, rs):\n"
+            "    return [2] * n_requests\n"))
+        t = root / "tests/test_serving_cosim.py"
+        t.write_text('"""Static matrix without the newcomer."""\n'
+                     'COSIM_MATRIX = ("serving_fixture",)\n')
+
+    root = _mutated_goodrepo(tmp_path, mutate)
+    fired = rules_of(root, ["registry-coverage"])
+    assert "RC407" in fired
+    # the un-mutated corpus stays clean — the dynamic-iteration spelling
+    # covers any registered name
+    assert "RC407" not in rules_of(FIXTURES / "goodrepo",
+                                   ["registry-coverage"])
 
 
 def test_registry_catches_new_unregistered_policy(tmp_path):

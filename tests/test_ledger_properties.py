@@ -256,7 +256,7 @@ def test_refresh_never_overlaps_activation_in_same_subarray(policy,
     wl = make_closed_workload("closed_subarray_storm", 64, seed)
     sim = DramSim(T, wl, policy).run_ticks(record_timeline=True)
     ref = sim.timeline["refresh"]
-    for (t, b, sub, row, isw, done) in sim.timeline["serves"]:
+    for (t, b, sub, row, isw, done, arr) in sim.timeline["serves"]:
         hits = [(rb, rs, s0, s1) for (rb, rs, s0, s1, kind) in ref
                 if rb == b and (rs == sub or rs == -1) and s0 <= t < s1]
         assert not hits, (policy, n_subarrays, t, b, sub, hits[:3])

@@ -95,6 +95,25 @@ def test_timed_out_recorded_not_masked(model):
     assert not eng.stats["timed_out"] and h.state is RequestState.DONE
 
 
+def test_bench_serving_lifecycle_raises_on_timeout():
+    # regression: the lifecycle bench used to record timed_out=True in
+    # its payload and keep going, publishing truncated percentiles as if
+    # they were real results
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    try:
+        import bench_framework as BF
+    finally:
+        sys.path.pop(0)
+    with pytest.raises(RuntimeError, match="did not drain"), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        BF.bench_serving_lifecycle(n_requests=4, max_new=8,
+                                   policies=("darp",), max_rounds=1)
+
+
 # ------------------------------------------- chunked-prefill equivalence
 
 def _legacy_greedy(model, kv_cfg, prompts, max_new):

@@ -1,0 +1,188 @@
+"""Property tier for the continuous-batching scheduler (`EngineCore`).
+
+Pins the four scheduler invariants the co-sim stack leans on:
+
+  1. no request starves — every submitted request reaches DONE/EVICTED
+     within a bounded number of rounds, under both arbitration modes;
+  2. the admission queue bound is conserved — `len(queue)` never exceeds
+     `max_queue`, overflow raises `QueueFull` and is counted, and
+     priority arbitration admits strictly by (priority, submit order);
+  3. eviction never selects a member of the in-flight prefill batch
+     (its K/V chunk slices would be left half-applied);
+  4. the engine is a pure function of (scenario, seed) — replaying the
+     same arrival trace yields identical traffic, tokens, and stats.
+
+Runs entirely on the deterministic stub forwards from
+`repro.serving.cosim`, so no model weights (or accelerator) is needed.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback; see _hypothesis_shim
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.refresh import list_serving_scenarios
+from repro.kvcache.paged import PagedKVConfig
+from repro.serving.cosim import CoSimConfig, _drive_engine, \
+    make_stub_forwards
+from repro.serving.engine import EngineConfig, EngineCore, QueueFull, \
+    RequestState
+
+VOCAB = 64
+
+
+def _kv(**over):
+    base = dict(n_layers=1, n_kv_heads=1, head_dim=4, page_size=4,
+                n_pages=64, n_staging=16, n_groups=8, max_seqs=16,
+                max_pages_per_seq=8)
+    base.update(over)
+    return PagedKVConfig(**base)
+
+
+def _engine(kv_over=None, **ecfg_over):
+    pf, df = make_stub_forwards(1, 1, 4, vocab=VOCAB)
+    ecfg = EngineConfig(**{"max_batch": 4, "max_queue": 32,
+                           "policy": "darp", "prefill_chunk": 4,
+                           **ecfg_over})
+    return EngineCore(None, None, None, _kv(**(kv_over or {})), ecfg,
+                      prefill_fn=pf, decode_fn=df)
+
+
+def _submit_mix(eng, rs, n):
+    out = []
+    for i in range(n):
+        out.append(eng.submit(
+            [int(t) for t in rs.randint(0, VOCAB, rs.randint(1, 13))],
+            max_new=int(rs.randint(1, 7)),
+            priority=int(rs.randint(0, 3))))
+    return out
+
+
+# ------------------------------------------------------- 1. no starvation
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(1, 12),
+       arb=st.sampled_from(["fifo", "priority"]))
+def test_no_request_starves(seed, n, arb):
+    rs = np.random.RandomState(seed)
+    eng = _engine(arbitration=arb)
+    handles = _submit_mix(eng, rs, n)
+    stats = eng.run_until_done(max_rounds=500)
+    assert not stats["timed_out"]
+    assert all(h.done for h in handles)
+    for h in handles:
+        if h.state is RequestState.DONE and h.prompt:
+            assert len(h.tokens) == h.max_new
+            assert h.metrics.first_token_round >= h.metrics.admit_round >= 0
+
+
+# ------------------------------------------------------- 2. queue bound
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       cap=st.integers(1, 6),
+       extra=st.integers(1, 5))
+def test_queue_bound_conserved(seed, cap, extra):
+    rs = np.random.RandomState(seed)
+    eng = _engine(max_queue=cap)
+    ok = _submit_mix(eng, rs, cap)
+    assert len(eng.queue) == cap
+    for _ in range(extra):
+        with pytest.raises(QueueFull):
+            eng.submit([1, 2, 3], max_new=2)
+        assert len(eng.queue) == cap
+    assert eng.stats["rejected"] == extra
+    stats = eng.run_until_done(max_rounds=500)
+    assert not stats["timed_out"] and not eng.queue
+    assert all(h.done for h in ok)
+
+
+def test_priority_arbitration_admits_lowest_class_first():
+    eng = _engine(arbitration="priority", max_batch=3)
+    hs = [eng.submit([1, 2, 3, 4], max_new=2, priority=p)
+          for p in (2, 0, 1, 0, 2)]
+    eng.step_round()
+    # the three batch slots go to priorities (0, 0, 1), admitted in that
+    # order (eng.active preserves admission order); FIFO breaks the tie
+    # between the two zeros in submit order
+    admitted = list(eng.active)
+    assert [h.priority for h in admitted] == [0, 0, 1]
+    assert admitted[0] is hs[1] and admitted[1] is hs[3]
+    assert hs[0].state is RequestState.QUEUED
+    assert hs[4].state is RequestState.QUEUED
+    eng.run_until_done(max_rounds=500)
+
+
+# --------------------------------------- 3. in-flight prefill is immune
+
+class _AuditedEngine(EngineCore):
+    """Asserts the victim contract on every eviction decision."""
+
+    def _pick_victim(self, exclude):
+        v = super()._pick_victim(exclude)
+        assert v is None or v.rid not in self._inflight_prefill, \
+            "eviction selected a request mid-prefill-chunk"
+        return v
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_eviction_never_selects_inflight_prefill(seed):
+    rs = np.random.RandomState(seed)
+    pf, df = make_stub_forwards(1, 1, 4, vocab=VOCAB)
+    # a starved cache (8 pages / 4 staging slots) + long prompts makes
+    # eviction fire during prefill appends on most examples
+    eng = _AuditedEngine(
+        None, None, None,
+        _kv(n_pages=8, n_staging=4, max_pages_per_seq=8),
+        EngineConfig(max_batch=4, max_queue=32, policy="darp",
+                     prefill_chunk=6),
+        prefill_fn=pf, decode_fn=df)
+    for i in range(6):
+        eng.submit([int(t) for t in rs.randint(0, VOCAB,
+                                               rs.randint(6, 14))],
+                   max_new=int(rs.randint(1, 4)))
+    stats = eng.run_until_done(max_rounds=500)
+    assert not stats["timed_out"]
+
+
+def test_eviction_pressure_actually_fires_in_the_audit_setup():
+    # the property above is vacuous unless the starved setup really
+    # evicts — pin that it does (deterministic seed)
+    rs = np.random.RandomState(7)
+    pf, df = make_stub_forwards(1, 1, 4, vocab=VOCAB)
+    eng = _AuditedEngine(
+        None, None, None,
+        _kv(n_pages=8, n_staging=4, max_pages_per_seq=8),
+        EngineConfig(max_batch=4, max_queue=32, policy="darp",
+                     prefill_chunk=6),
+        prefill_fn=pf, decode_fn=df)
+    for i in range(6):
+        eng.submit([int(t) for t in rs.randint(0, VOCAB, 12)],
+                   max_new=2)
+    eng.run_until_done(max_rounds=500)
+    assert eng.stats["evictions"] > 0
+
+
+# ------------------------------------------- 4. deterministic replay
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 50),
+       scenario=st.sampled_from(sorted(list_serving_scenarios())))
+def test_deterministic_replay_per_scenario_seed(seed, scenario):
+    cfg = CoSimConfig(scenario=scenario, n_requests=10, seed=seed,
+                      max_rounds=2_000)
+    eng_a, hs_a = _drive_engine(cfg)
+    eng_b, hs_b = _drive_engine(cfg)
+    assert eng_a.traffic == eng_b.traffic
+    assert eng_a.round == eng_b.round
+    assert [h.tokens for h in hs_a] == [h.tokens for h in hs_b]
+    assert [h.state for h in hs_a] == [h.state for h in hs_b]
+    sa = {k: v for k, v in eng_a.stats.items()
+          if k != "maintenance_events"}
+    sb = {k: v for k, v in eng_b.stats.items()
+          if k != "maintenance_events"}
+    assert sa == sb

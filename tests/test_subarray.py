@@ -85,7 +85,7 @@ def _overlapped_serves(sim):
     """Serves that landed while ANOTHER subarray of the same bank was
     mid-refresh, and serves inside their OWN subarray's refresh window."""
     sibling = own = 0
-    for (t, b, sub, row, isw, done) in sim.timeline["serves"]:
+    for (t, b, sub, row, isw, done, arr) in sim.timeline["serves"]:
         for (rb, rs, s0, s1, kind) in sim.timeline["refresh"]:
             if rb != b or not (s0 <= t < s1):
                 continue
@@ -128,7 +128,7 @@ def test_hira_hidden_refresh_starts_under_inflight_access():
     bank-busy window, which plain sarp_pb (no hra) never produces."""
     def hidden_starts(sim):
         busy = {}                 # bank -> list of (start, bank_free_end)
-        for (t, b, sub, row, isw, done) in sim.timeline["serves"]:
+        for (t, b, sub, row, isw, done, arr) in sim.timeline["serves"]:
             busy.setdefault(b, []).append((t, done))
         return sum(1 for (b, rs, s0, s1, kind) in sim.timeline["refresh"]
                    if kind == "pb"
